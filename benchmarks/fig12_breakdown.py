@@ -1,0 +1,73 @@
+"""Fig. 5 + Fig. 12: per-stage latency breakdown for
+no-cache / static(2%,10%) / straw-man / ScratchPipe across localities.
+
+Real cache simulations -> byte counters -> calibrated bandwidth model
+(constants in benchmarks/common.py). Reported both at container scale and
+scaled to the paper's batch-2048 config.
+"""
+from __future__ import annotations
+
+from benchmarks.common import LOCALITIES, run_design
+
+
+def run(steps: int = 25) -> list:
+    rows = []
+    for loc in LOCALITIES:
+        for design, frac in (
+            ("nocache", 0.0),
+            ("static", 0.02),
+            ("static", 0.10),
+            ("strawman", 0.10),
+            ("scratchpipe", 0.10),
+        ):
+            r = run_design(design, loc, frac, steps=steps)
+            rows.append(
+                {
+                    "bench": "fig12_breakdown",
+                    "design": design,
+                    "locality": loc,
+                    "cache_frac": frac,
+                    "hit_rate": round(r.hit_rate, 4),
+                    "host_ms": round(r.stage_ms["host"], 3) if not r.error else "",
+                    "pcie_ms": round(r.stage_ms["pcie"], 3) if not r.error else "",
+                    "dev_ms": round(
+                        r.stage_ms["dev_embed"] + r.stage_ms["mlp"], 3
+                    )
+                    if not r.error
+                    else "",
+                    "iter_ms_paper": round(r.iter_ms_paper, 2) if not r.error else "",
+                    "error": r.error or "",
+                }
+            )
+    return rows
+
+
+def validate(rows) -> list:
+    ok = [r for r in rows if not r["error"]]
+    by = {(r["design"], r["locality"], r["cache_frac"]): r for r in ok}
+
+    def frac_host(design, loc, f):
+        r = by[(design, loc, f)]
+        tot = r["host_ms"] + r["pcie_ms"] + r["dev_ms"]
+        return r["host_ms"] / tot
+
+    checks = [
+        (
+            "no-cache dominated by host embedding work (Fig 5)",
+            all(frac_host("nocache", l, 0.0) > 0.7 for l in LOCALITIES),
+        ),
+        (
+            "static cache shrinks host time with locality (Fig 12a)",
+            by[("static", "high", 0.10)]["host_ms"]
+            < by[("static", "low", 0.10)]["host_ms"],
+        ),
+        (
+            "ScratchPipe iteration well below static (Fig 12b)",
+            all(
+                by[("scratchpipe", l, 0.10)]["iter_ms_paper"]
+                < by[("static", l, 0.10)]["iter_ms_paper"]
+                for l in LOCALITIES
+            ),
+        ),
+    ]
+    return checks

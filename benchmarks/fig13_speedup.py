@@ -1,0 +1,57 @@
+"""Fig. 13: end-to-end speedup of ScratchPipe, normalized to the static-cache
+baseline (paper: avg 2.8x / max 4.2x vs static; 5.1x / 6.6x avg/max vs
+no-cache; straw-man in between; speedup shrinks as locality grows)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import LOCALITIES, run_design
+
+
+def run(steps: int = 25) -> list:
+    rows = []
+    for loc in LOCALITIES:
+        base = run_design("nocache", loc, 0.0, steps=steps)
+        static = run_design("static", loc, 0.10, steps=steps)
+        straw = run_design("strawman", loc, 0.10, steps=steps)
+        pipe = run_design("scratchpipe", loc, 0.10, steps=steps)
+        rows.append(
+            {
+                "bench": "fig13_speedup",
+                "locality": loc,
+                "nocache_ms": round(base.iter_ms_paper, 2),
+                "static_ms": round(static.iter_ms_paper, 2),
+                "strawman_ms": round(straw.iter_ms_paper, 2),
+                "scratchpipe_ms": round(pipe.iter_ms_paper, 2),
+                "speedup_vs_static": round(
+                    static.iter_ms_paper / pipe.iter_ms_paper, 2
+                ),
+                "speedup_vs_nocache": round(
+                    base.iter_ms_paper / pipe.iter_ms_paper, 2
+                ),
+                "strawman_vs_static": round(
+                    static.iter_ms_paper / straw.iter_ms_paper, 2
+                ),
+            }
+        )
+    return rows
+
+
+def validate(rows) -> list:
+    sp_static = [r["speedup_vs_static"] for r in rows]
+    sp_nocache = [r["speedup_vs_nocache"] for r in rows]
+    by_loc = {r["locality"]: r for r in rows}
+    checks = [
+        ("avg speedup vs static in paper band 1.6-4.2x",
+         1.3 < float(np.mean(sp_static)) < 5.0),
+        ("max speedup vs static <= ~4.2x ballpark", max(sp_static) < 6.5),
+        ("avg speedup vs no-cache ~5x band", 2.5 < float(np.mean(sp_nocache)) < 8.0),
+        ("speedup decreases with locality (Fig 13)",
+         by_loc["random"]["speedup_vs_static"]
+         >= by_loc["high"]["speedup_vs_static"] - 0.05),
+        ("high-locality speedup still >=1.3x (paper: 1.6-1.9x)",
+         by_loc["high"]["speedup_vs_static"] > 1.2),
+        ("straw-man also beats static (paper §VI-B)",
+         all(r["strawman_vs_static"] > 0.95 for r in rows)),
+    ]
+    return checks

@@ -1,0 +1,45 @@
+"""Fig. 15: sensitivity of ScratchPipe's speedup to (a) embedding dim
+{64,128,256} and (b) lookups per table {1,20,50}. Paper: larger dims and
+more lookups -> bigger wins (avg 3.7x at 50 lookups); robust at lookups=1."""
+from __future__ import annotations
+
+from benchmarks.common import run_design
+
+
+def run(steps: int = 20) -> list:
+    rows = []
+    for dim in (64, 128, 256):
+        st = run_design("static", "medium", 0.10, steps=steps, embed_dim=dim)
+        sp = run_design("scratchpipe", "medium", 0.10, steps=steps, embed_dim=dim)
+        rows.append(
+            {
+                "bench": "fig15a_dim",
+                "embed_dim": dim,
+                "static_ms": round(st.iter_ms_paper, 2),
+                "scratchpipe_ms": round(sp.iter_ms_paper, 2),
+                "speedup": round(st.iter_ms_paper / sp.iter_ms_paper, 2),
+            }
+        )
+    for lk in (1, 20, 50):
+        st = run_design("static", "medium", 0.10, steps=steps, lookups=lk)
+        sp = run_design("scratchpipe", "medium", 0.10, steps=steps, lookups=lk)
+        rows.append(
+            {
+                "bench": "fig15b_lookups",
+                "lookups": lk,
+                "static_ms": round(st.iter_ms_paper, 2),
+                "scratchpipe_ms": round(sp.iter_ms_paper, 2),
+                "speedup": round(st.iter_ms_paper / sp.iter_ms_paper, 2),
+            }
+        )
+    return rows
+
+
+def validate(rows) -> list:
+    dims = {r["embed_dim"]: r["speedup"] for r in rows if r["bench"] == "fig15a_dim"}
+    lks = {r["lookups"]: r["speedup"] for r in rows if r["bench"] == "fig15b_lookups"}
+    return [
+        ("speedup grows with embedding dim (Fig 15a)", dims[256] >= dims[64] - 0.05),
+        ("speedup grows with lookups (Fig 15b)", lks[50] >= lks[1]),
+        ("still >=1x at lookups=1 (robustness)", lks[1] > 0.9),
+    ]

@@ -1,0 +1,84 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from the result JSONs
+(so the document is regenerable: ``python -m benchmarks.report``)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+HERE = os.path.dirname(__file__)
+
+
+def load(sub):
+    out = []
+    for f in sorted(glob.glob(os.path.join(HERE, "results", sub, "*.json"))):
+        out.append(json.load(open(f)))
+    return out
+
+
+def dryrun_table() -> str:
+    rows = load("dryrun")
+    lines = [
+        "| arch | shape | mesh | status | peak GB/dev | FLOPs/dev (loop bodies once) | collective ops | coll bytes/dev |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r.get("ok"):
+            m = r.get("memory", {})
+            c = r["collectives"]["total"]
+            kinds = {
+                k: v["count"]
+                for k, v in r["collectives"].items()
+                if k != "total" and v["count"]
+            }
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok "
+                f"({r['compile_s']}s) | {m.get('peak_memory_in_bytes', 0) / 1e9:.2f} "
+                f"| {r['cost'].get('flops', 0):.3e} | {kinds} | {c['bytes_in']:.3e} |"
+            )
+        else:
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | FAILED: "
+                f"{r.get('error', '')[:60]} | | | | |"
+            )
+    return "\n".join(lines)
+
+
+def skip_table() -> str:
+    import sys
+
+    sys.path.insert(0, os.path.join(HERE, "..", "src"))
+    from repro.configs import dryrun_cells
+
+    lines = ["| arch | shape | skip reason |", "|---|---|---|"]
+    for c in dryrun_cells():
+        if c["skip"]:
+            lines.append(f"| {c['arch']} | {c['shape']} | {c['skip']} |")
+    return "\n".join(lines)
+
+
+def roofline_table(tag: str = "") -> str:
+    rows = [r for r in load("roofline") if r.get("ok")]
+    if tag:
+        rows = [r for r in rows if r.get("tag") == tag]
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant | MODEL/HLO flops | roofline frac | what moves the dominant term |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | {r['dominant']} | "
+            f"{r['useful_flops_ratio']:.3f} | {r['roofline_fraction']:.4f} | "
+            f"{r['advice']} |"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print("## Dry-run\n")
+    print(dryrun_table())
+    print("\n### Skipped cells\n")
+    print(skip_table())
+    print("\n## Roofline\n")
+    print(roofline_table())

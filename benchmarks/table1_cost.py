@@ -1,0 +1,55 @@
+"""Table I: training cost — single-GPU ScratchPipe (p3.2xlarge) vs 8-GPU
+model-parallel GPU-only (p3.16xlarge), 1M iterations.
+
+The 8-GPU system is modeled as: embedding fwd+bwd at 8x aggregate HBM speed
+(tables partitioned table-wise) + DP MLPs + a fixed all-to-all/sync overhead
+per iteration (paper's measured 16-19 ms iterations imply sync-dominated
+small-batch scaling; we use 14 ms, the mean residual of Table I's
+random/low/medium/high rows)."""
+from __future__ import annotations
+
+from benchmarks.common import DEV_BW, LOCALITIES, dlrm_mlp_flops, MLP_FLOPS_RATE, PAPER_BATCH, bench_cfg, run_design
+
+PRICE_SCRATCHPIPE = 3.06  # $/hr p3.2xlarge
+PRICE_8GPU = 24.48  # $/hr p3.16xlarge
+SYNC_MS_8GPU = 14.0
+
+
+def run(steps: int = 25) -> list:
+    rows = []
+    cfg = bench_cfg()
+    for loc in LOCALITIES:
+        sp = run_design("scratchpipe", loc, 0.10, steps=steps)
+        # GPU-only: all embedding traffic at aggregate HBM bw of 8 GPUs
+        scale = PAPER_BATCH / cfg.batch_size
+        emb_ms = (sp.dev_bytes + sp.host_bytes + 0.0) * scale / (8 * DEV_BW) * 1e3
+        mlp_ms = dlrm_mlp_flops(cfg) * scale / (8 * MLP_FLOPS_RATE) * 1e3
+        gpu8_ms = emb_ms + mlp_ms + SYNC_MS_8GPU
+        sp_ms = sp.iter_ms_paper
+        cost_sp = sp_ms / 1e3 / 3600 * 1e6 * PRICE_SCRATCHPIPE
+        cost_8 = gpu8_ms / 1e3 / 3600 * 1e6 * PRICE_8GPU
+        rows.append(
+            {
+                "bench": "table1_cost",
+                "locality": loc,
+                "scratchpipe_iter_ms": round(sp_ms, 2),
+                "gpu8_iter_ms": round(gpu8_ms, 2),
+                "scratchpipe_cost_1M_usd": round(cost_sp, 2),
+                "gpu8_cost_1M_usd": round(cost_8, 2),
+                "cost_saving": round(cost_8 / cost_sp, 2),
+            }
+        )
+    return rows
+
+
+def validate(rows) -> list:
+    savings = [r["cost_saving"] for r in rows]
+    by_loc = {r["locality"]: r for r in rows}
+    return [
+        ("cost saving in paper band (avg 4.0x, max 5.7x)",
+         2.0 < sum(savings) / len(savings) < 7.0),
+        ("more savings at higher locality (Table I)",
+         by_loc["high"]["cost_saving"] >= by_loc["random"]["cost_saving"] - 0.2),
+        ("8-GPU iteration in paper's 16-19ms band +-50%",
+         all(8 < r["gpu8_iter_ms"] < 30 for r in rows)),
+    ]

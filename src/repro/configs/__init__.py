@@ -1,0 +1,76 @@
+"""Architecture registry: ``--arch <id>`` resolves here.
+
+All 10 assigned architectures + the paper's own DLRM model.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.configs.base import (  # noqa: F401 (re-export)
+    ALL_SHAPES,
+    ArchEntry,
+    DLRMConfig,
+    ModelConfig,
+    SHAPES_BY_NAME,
+    ShapeSpec,
+)
+
+_ARCH_MODULES = {
+    "hubert-xlarge": "hubert_xlarge",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "chatglm3-6b": "chatglm3_6b",
+    "qwen2-72b": "qwen2_72b",
+    "mistral-large-123b": "mistral_large_123b",
+    "qwen2.5-32b": "qwen2_5_32b",
+    "phi-3-vision-4.2b": "phi_3_vision_4_2b",
+    "mamba2-2.7b": "mamba2_2_7b",
+    "zamba2-1.2b": "zamba2_1_2b",
+    "dlrm-scratchpipe": "dlrm_scratchpipe",
+}
+
+ASSIGNED_ARCHS: List[str] = [k for k in _ARCH_MODULES if k != "dlrm-scratchpipe"]
+
+
+def get_entry(arch: str) -> ArchEntry:
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_ARCH_MODULES)}")
+    import importlib
+
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[arch]}")
+    return mod.ENTRY
+
+
+def get_config(arch: str):
+    return get_entry(arch).config
+
+
+def get_smoke_config(arch: str):
+    return get_entry(arch).smoke
+
+
+def list_archs() -> List[str]:
+    return list(_ARCH_MODULES)
+
+
+def dryrun_cells(include_dlrm: bool = False) -> List[dict]:
+    """Every (arch x shape) cell, with skip annotations. 40 LM cells total."""
+    cells = []
+    archs = list(_ARCH_MODULES) if include_dlrm else ASSIGNED_ARCHS
+    for arch in archs:
+        entry = get_entry(arch)
+        if arch == "dlrm-scratchpipe":
+            for s in entry.shapes:
+                cells.append({"arch": arch, "shape": s.name, "skip": None})
+            continue
+        for s in ALL_SHAPES:
+            reason = entry.skip_reason(s.name)
+            runnable = any(sh.name == s.name for sh in entry.shapes)
+            cells.append(
+                {
+                    "arch": arch,
+                    "shape": s.name,
+                    "skip": reason if not runnable else None,
+                }
+            )
+    return cells

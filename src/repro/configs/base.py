@@ -1,0 +1,259 @@
+"""Config system: dataclasses + shape specs for every assigned architecture.
+
+Configs are pure data (no jax imports) so they can be constructed anywhere,
+including before jax device initialization in ``launch/dryrun.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Shape specs (assigned input-shape set for LM-family archs)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    """One (seq_len, global_batch) cell of the dry-run grid."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+TRAIN_4K = ShapeSpec("train_4k", 4096, 256, "train")
+PREFILL_32K = ShapeSpec("prefill_32k", 32768, 32, "prefill")
+DECODE_32K = ShapeSpec("decode_32k", 32768, 128, "decode")
+LONG_500K = ShapeSpec("long_500k", 524288, 1, "decode")
+
+ALL_SHAPES: Tuple[ShapeSpec, ...] = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+SHAPES_BY_NAME = {s.name: s for s in ALL_SHAPES}
+
+
+# ---------------------------------------------------------------------------
+# LM-family model config
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | encoder | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // num_heads
+
+    # attention details
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    rope_fraction: float = 1.0  # chatglm applies rotary to half the dims
+    sliding_window: Optional[int] = None  # SWA (mixtral)
+    causal: bool = True  # False for encoder-only
+
+    # MoE
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    moe_d_ff: int = 0  # expert hidden dim (defaults to d_ff)
+
+    # SSM (mamba2 / SSD)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_headdim: int = 64
+    ssm_ngroups: int = 1
+    ssm_conv: int = 4
+    ssm_chunk: int = 256
+    # Store the SSD intra-chunk tensors (decay, scores) in bf16 (accumulation
+    # stays fp32 via preferred_element_type). §Perf optimization, off by
+    # default for exact paper-family numerics.
+    ssd_bf16: bool = False
+
+    # hybrid (zamba2-style): groups of mamba layers + shared attention block
+    hybrid_groups: int = 0
+    hybrid_layers_per_group: int = 0
+    hybrid_tail_layers: int = 0
+
+    # modality frontend stub: None | "frames" (audio) | "patches" (vision)
+    frontend: Optional[str] = None
+    frontend_positions: int = 256  # image patches prepended (vlm)
+
+    # numerics / execution
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    remat: bool = True
+    scan_layers: bool = True
+    # Fully unroll every lax.scan (layers, KV blocks, SSD chunks, loss
+    # chunks). Used by the roofline cost calibration: XLA's cost_analysis
+    # counts while-loop bodies once, so per-step FLOPs/bytes are measured on
+    # small unrolled variants and extrapolated (see benchmarks/roofline.py).
+    unroll_scans: bool = False
+    use_pallas: bool = False  # Pallas kernels (TPU); False = pure-JAX path
+
+    # distribution
+    zero1: bool = True  # shard optimizer state over the data axis
+    fsdp: bool = False  # also shard layer weights over the data axes
+    # (required >~30B params on 16GB/chip v5e: TP-only leaves 4-15GB of
+    # parameters per device; FSDP all-gathers one layer at a time instead)
+    hierarchical_grad_sync: bool = True  # reduce-scatter in pod, psum across
+
+    # ScratchPipe integration for the LM token-embedding table
+    scratchpipe_embedding: bool = False  # technique applies to this arch
+    # Execute with the input embedding offloaded to the ScratchPipe runtime:
+    # the train step consumes pre-gathered rows (inputs_embeds) and returns
+    # their gradient; the (vocab, d_model) table leaves the device graph.
+    embed_offload: bool = False
+    # Megatron-style sequence parallelism: residual stream sharded over
+    # ("model", sequence) between blocks; XLA converts the TP all-reduces
+    # into reduce-scatter + all-gather and norms run S-sharded.
+    seq_parallel: bool = False
+
+    # attention kv-seq block for chunked (flash-style) attention
+    attn_block_kv: int = 1024
+    # sequence chunk for the vocab-parallel cross-entropy
+    xent_chunk: int = 512
+    # fuse the SwiGLU gate/up projections into one stacked (2, D, F) weight:
+    # the layer input is read once instead of twice (dense family only)
+    fuse_gate_up: bool = False
+    # MoE expert capacity factor (tokens padded/dropped beyond it)
+    moe_capacity_factor: float = 1.25
+
+    def __post_init__(self):
+        if self.head_dim == 0 and self.num_heads:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        if self.num_experts and not self.moe_d_ff:
+            object.__setattr__(self, "moe_d_ff", self.d_ff)
+
+    # ---- derived sizes -----------------------------------------------------
+    @property
+    def d_inner(self) -> int:  # mamba2 inner width
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_nheads(self) -> int:
+        return self.d_inner // self.ssm_headdim if self.ssm_headdim else 0
+
+    def param_count(self) -> int:
+        """Approximate parameter count N (used for MODEL_FLOPS = 6*N*D)."""
+        D, V, L = self.d_model, self.vocab_size, self.num_layers
+        emb = V * D * (1 if self.tie_embeddings else 2)
+        if self.family == "ssm":
+            # mamba2 block: in_proj (D -> 2*d_inner + 2*ngroups*dstate + nheads),
+            # out_proj d_inner -> D, conv, norm, dt/A params
+            din = self.d_inner
+            zxbcdt = 2 * din + 2 * self.ssm_ngroups * self.ssm_state + self.ssm_nheads
+            per = D * zxbcdt + din * D + (din + 2 * self.ssm_ngroups * self.ssm_state) * self.ssm_conv + 2 * self.ssm_nheads + din
+            return emb + L * per
+        hd = self.head_dim
+        attn = D * (self.num_heads * hd) * 2 + D * (self.num_kv_heads * hd) * 2
+        if self.family == "moe":
+            mlp = self.num_experts * 3 * D * self.moe_d_ff + D * self.num_experts
+        else:
+            mlp = 3 * D * self.d_ff
+        per = attn + mlp + 2 * D
+        if self.family == "hybrid":
+            # mamba layers + shared attention block counted once
+            din = self.d_inner
+            zxbcdt = 2 * din + 2 * self.ssm_ngroups * self.ssm_state + self.ssm_nheads
+            mamba_per = D * zxbcdt + din * D + (din + 2 * self.ssm_ngroups * self.ssm_state) * self.ssm_conv + 2 * self.ssm_nheads + din
+            return emb + L * mamba_per + attn + 3 * D * self.d_ff
+        return emb + L * per
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only top-k experts count)."""
+        if self.family != "moe":
+            return self.param_count()
+        D, L = self.d_model, self.num_layers
+        hd = self.head_dim
+        attn = D * (self.num_heads * hd) * 2 + D * (self.num_kv_heads * hd) * 2
+        mlp = self.num_experts_per_tok * 3 * D * self.moe_d_ff + D * self.num_experts
+        emb = self.vocab_size * D * (1 if self.tie_embeddings else 2)
+        return emb + L * (attn + mlp + 2 * D)
+
+
+# ---------------------------------------------------------------------------
+# DLRM (the paper's own model, §V)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    name: str = "dlrm-scratchpipe"
+    family: str = "dlrm"
+    num_tables: int = 8
+    rows_per_table: int = 10_000_000
+    embed_dim: int = 128
+    lookups_per_table: int = 20  # pooling factor (paper default 20)
+    num_dense_features: int = 13
+    bottom_mlp: Tuple[int, ...] = (512, 256, 128)
+    top_mlp: Tuple[int, ...] = (1024, 1024, 512, 256, 1)
+    batch_size: int = 2048
+    interaction: str = "dot"  # dot-product feature interaction (DLRM)
+    param_dtype: str = "float32"  # paper uses fp32 (4-byte rows, §VI-D)
+    # ScratchPipe runtime knobs
+    cache_fraction: float = 0.05  # scratchpad size as fraction of table rows
+    past_window: int = 3
+    future_window: int = 2
+    use_pallas: bool = False
+
+    @property
+    def table_bytes(self) -> int:
+        return self.num_tables * self.rows_per_table * self.embed_dim * 4
+
+    def param_count(self) -> int:
+        emb = self.num_tables * self.rows_per_table * self.embed_dim
+        dims_b = (self.num_dense_features,) + self.bottom_mlp
+        bot = sum(a * b + b for a, b in zip(dims_b[:-1], dims_b[1:]))
+        n_int = self.num_tables + 1
+        inter_dim = n_int * (n_int - 1) // 2 + self.embed_dim
+        dims_t = (inter_dim,) + self.top_mlp
+        top = sum(a * b + b for a, b in zip(dims_t[:-1], dims_t[1:]))
+        return emb + bot + top
+
+
+# ---------------------------------------------------------------------------
+# Arch entry: config + applicable shapes (with skip reasons)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchEntry:
+    config: object  # ModelConfig | DLRMConfig
+    smoke: object
+    shapes: Tuple[ShapeSpec, ...]
+    skips: Tuple[Tuple[str, str], ...] = ()  # (shape_name, reason)
+
+    def skip_reason(self, shape_name: str) -> Optional[str]:
+        for name, reason in self.skips:
+            if name == shape_name:
+                return reason
+        return None
+
+
+def lm_shape_plan(
+    *, encoder_only: bool = False, subquadratic: bool = False
+) -> Tuple[Tuple[ShapeSpec, ...], Tuple[Tuple[str, str], ...]]:
+    """Standard shape set + documented skips for an LM-family arch."""
+    shapes = [TRAIN_4K, PREFILL_32K]
+    skips = []
+    if encoder_only:
+        skips.append(("decode_32k", "encoder-only arch has no decode step"))
+        skips.append(("long_500k", "encoder-only arch has no decode step"))
+    else:
+        shapes.append(DECODE_32K)
+        if subquadratic:
+            shapes.append(LONG_500K)
+        else:
+            skips.append(
+                (
+                    "long_500k",
+                    "pure full-attention arch; 500k ctx needs sub-quadratic attention",
+                )
+            )
+    return tuple(shapes), tuple(skips)

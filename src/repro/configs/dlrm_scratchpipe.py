@@ -1,0 +1,34 @@
+"""dlrm-scratchpipe: the paper's own RecSys model (§V methodology).
+
+8 embedding tables x 10M rows x 128-dim fp32 (= 40 GB model), 20 gathers per
+table, batch 2048, DLRM bottom/top MLPs (MLPerf DLRM), dot-product feature
+interaction. This is the arch where ScratchPipe is exercised end-to-end.
+"""
+from repro.configs.base import ArchEntry, DLRMConfig, ShapeSpec
+
+# DLRM cells use the paper's batch; "seq_len" is reused as lookups/table.
+DLRM_TRAIN = ShapeSpec("dlrm_train", 20, 2048, "train")
+
+
+def config() -> DLRMConfig:
+    return DLRMConfig()
+
+
+def smoke_config() -> DLRMConfig:
+    return DLRMConfig(
+        name="dlrm-smoke",
+        num_tables=4,
+        rows_per_table=512,
+        embed_dim=16,
+        lookups_per_table=4,
+        num_dense_features=13,
+        bottom_mlp=(32, 16),
+        top_mlp=(32, 16, 1),
+        batch_size=32,
+        cache_fraction=0.125,
+    )
+
+
+ENTRY = ArchEntry(
+    config=config(), smoke=smoke_config(), shapes=(DLRM_TRAIN,), skips=()
+)

@@ -1,0 +1,9 @@
+# The paper's primary contribution: ScratchPipe — a look-forward, always-hit
+# embedding cache runtime (Plan/Collect/Exchange/Insert/Train pipeline).
+from repro.core.host_table import HostEmbeddingTable, HostTraffic  # noqa: F401
+from repro.core.pipeline import ScratchPipe, StepStats  # noqa: F401
+from repro.core.plan import Planner, PlanResult  # noqa: F401
+from repro.core.static_cache import (  # noqa: F401
+    NoCacheBaseline,
+    StaticCacheBaseline,
+)

@@ -1,0 +1,83 @@
+"""ScratchPipe applied to an LM's input token-embedding table.
+
+The training corpus records every future token id (exactly the paper's
+precondition), so the same look-forward cache keeps the LM's token-embedding
+working set in device HBM while the full (vocab, d_model) table lives in
+host memory. Only the *input* table offloads — the output head participates
+in a dense matmul every step and stays on-device (see DESIGN.md
+§Arch-applicability).
+
+[Train] stage: gather the unique cached rows touched by this batch, run the
+LM fwd/bwd with rows as a differentiable activation, SGD-update the rows in
+the scratchpad and the dense params with the configured optimizer.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import api
+from repro.parallel.sharding import mesh_axes
+
+
+class CachedEmbeddingLM:
+    """Builds the ScratchPipe [Train] fn for an LM arch.
+
+    ``params`` hold everything EXCEPT the input embedding (which is the
+    host table + scratchpad). Batches must carry ``token_slots`` — the
+    [Plan]-translated scratchpad slots of ``tokens`` — plus ``labels``.
+    """
+
+    def __init__(self, cfg, mesh, key, lr: float = 1e-2, emb_lr: float = 1e-2):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.lr = lr
+        self.emb_lr = emb_lr
+        ax = mesh_axes(mesh) if mesh is not None else None
+        rc, vp = api.runtime_config(cfg, ax)
+        assert not rc.tie_embeddings, "cached-embedding LM needs an untied head"
+        self.rc = rc
+        full = api.family_module(rc).init_params(rc, key, vp)
+        full.pop("embed")
+        self.params = full
+        self._step = jax.jit(self._train_step, donate_argnums=(0, 1))
+
+    def _train_step(self, storage, params, uniq_slots, inv, batch):
+        rows0 = jnp.take(storage, uniq_slots, axis=0)
+        B, S = batch["labels"].shape
+        D = self.rc.d_model
+
+        def loss_fn(params_, rows):
+            x = jnp.take(rows, inv, axis=0).reshape(B, S, D)
+            b2 = {
+                "inputs_embeds": x,
+                "labels": batch["labels"],
+            }
+            mod = api.family_module(self.rc)
+            return mod.loss_fn(params_, self.rc, b2, self.mesh)
+
+        loss, (g_params, g_rows) = jax.value_and_grad(loss_fn, argnums=(0, 1))(
+            params, rows0
+        )
+        params = jax.tree.map(
+            lambda p, g: p - self.lr * g.astype(p.dtype), params, g_params
+        )
+        storage = storage.at[uniq_slots].add(
+            (-self.emb_lr * g_rows).astype(storage.dtype)
+        )
+        return storage, params, loss
+
+    def train_fn(self, storage, slots, batch) -> Tuple[jax.Array, Dict[str, Any]]:
+        slots_np = np.asarray(slots)
+        uniq, inv = np.unique(slots_np.ravel(), return_inverse=True)
+        storage, self.params, loss = self._step(
+            storage,
+            self.params,
+            jnp.asarray(uniq),
+            jnp.asarray(inv),
+            batch,
+        )
+        return storage, {"loss": loss}

@@ -1,0 +1,59 @@
+"""DLRM [Train] stage: the jitted fwd+bwd+update computation shared by
+ScratchPipe AND both baselines (identical math; only row placement differs).
+
+The embedding rows enter as the ``storage`` operand (scratchpad / transient
+gathered region / full table) addressed by [Plan]-translated slots; the
+gradient duplication -> coalescing -> scatter-update runs on whatever memory
+holds ``storage``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import scratchpad as sp
+from repro.models import dlrm
+
+
+@functools.partial(
+    jax.jit, donate_argnums=(0,), static_argnames=("use_pallas", "lr")
+)
+def dlrm_train_step(storage, mlps, slots, dense, label, lr, use_pallas=False):
+    """Module-level jit so the compilation is shared across every trainer
+    instance with the same shapes (benchmarks re-instantiate trainers a lot)."""
+
+    def loss_fn(mlps_, bags):
+        logit = dlrm.forward_from_bags(mlps_, dense, bags)
+        return dlrm.bce_loss(logit, label)
+
+    bags = sp.gather_reduce(storage, slots, use_pallas=use_pallas)
+    loss, (g_mlps, g_bags) = jax.value_and_grad(loss_fn, argnums=(0, 1))(mlps, bags)
+    mlps = jax.tree.map(lambda p, g: p - lr * g, mlps, g_mlps)
+    storage = sp.coalesce_apply(storage, slots, g_bags, lr, use_pallas=use_pallas)
+    return storage, mlps, loss
+
+
+class DLRMTrainer:
+    """Holds the dense (MLP) parameters; exposes train_fn(storage, slots,
+    batch) for the cache runtimes."""
+
+    def __init__(self, cfg, key, lr: float = 0.05, use_pallas: bool = False):
+        self.cfg = cfg
+        self.lr = lr
+        self.use_pallas = use_pallas
+        self.mlps = dlrm.init_mlps(cfg, key)
+
+    def train_fn(self, storage, slots, batch) -> Tuple[jax.Array, Dict[str, Any]]:
+        storage, self.mlps, loss = dlrm_train_step(
+            storage,
+            self.mlps,
+            slots,
+            batch["dense"],
+            batch["label"],
+            lr=self.lr,
+            use_pallas=self.use_pallas,
+        )
+        return storage, {"loss": loss}

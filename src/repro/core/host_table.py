@@ -1,0 +1,81 @@
+"""Capacity-tier ("CPU DRAM") embedding table.
+
+The paper keeps the full embedding tables in slow/large CPU memory; gathers
+and scatters against it are the bottleneck ScratchPipe removes from the
+critical path. Byte counters feed the calibrated bandwidth model used by the
+paper-figure benchmarks (this container cannot measure a real two-tier
+memory hierarchy).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class HostTraffic:
+    """Byte counters for one memory tier / link."""
+
+    read: int = 0
+    written: int = 0
+
+    def reset(self):
+        self.read = 0
+        self.written = 0
+
+    @property
+    def total(self) -> int:
+        return self.read + self.written
+
+
+class HostEmbeddingTable:
+    """rows x dim fp32 table resident in host memory (numpy).
+
+    For multi-table models (DLRM) the tables are flattened into one global
+    row space (global_id = table * rows_per_table + id) — this matches the
+    paper's per-table cache managers (ranges never interleave) while keeping
+    one vectorized controller.
+    """
+
+    def __init__(
+        self, rows: int, dim: int, *, seed: int = 0, dtype=np.float32, data=None
+    ):
+        if data is not None:
+            assert data.shape == (rows, dim)
+            self.data = data
+        else:
+            rng = np.random.default_rng(seed)
+            scale = 1.0 / np.sqrt(dim)
+            self.data = (rng.standard_normal((rows, dim)) * scale).astype(dtype)
+        self.traffic = HostTraffic()
+
+    @property
+    def rows(self) -> int:
+        return self.data.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.data.shape[1]
+
+    @property
+    def row_bytes(self) -> int:
+        return self.data.shape[1] * self.data.dtype.itemsize
+
+    def gather(self, ids: np.ndarray) -> np.ndarray:
+        """[Collect]: read missed rows from the capacity tier."""
+        self.traffic.read += ids.size * self.row_bytes
+        return self.data[ids]
+
+    def scatter(self, ids: np.ndarray, values: np.ndarray) -> None:
+        """[Insert]: write evicted (dirty, trained) rows back."""
+        self.traffic.written += ids.size * self.row_bytes
+        self.data[ids] = values
+
+    def scatter_add_grad(self, ids: np.ndarray, grads: np.ndarray, lr: float):
+        """Baseline path (no-cache / static-cache miss): the memory-bound
+        gradient duplication + coalescing + scatter executed on the host
+        tier. read-modify-write = 2x row traffic."""
+        self.traffic.read += ids.size * self.row_bytes
+        self.traffic.written += ids.size * self.row_bytes
+        np.subtract.at(self.data, ids, lr * grads)

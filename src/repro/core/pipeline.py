@@ -1,0 +1,267 @@
+"""ScratchPipe: the pipelined always-hit embedding cache runtime (paper §IV).
+
+Six-stage pipeline over mini-batches, one training iteration completing per
+pipeline cycle at steady state:
+
+    [Plan] -> [Collect] -> [Exchange] -> [Insert] -> [Train(fwd+bwd+update)]
+
+Stage execution inside a cycle is deliberately ordered ADVERSARIALLY w.r.t.
+the paper's RAW hazards — [Collect] of the newest in-flight batch runs
+*before* [Insert]/[Train] of older batches — so any hold-window bug surfaces
+as stale data instead of being masked by sequential execution. With the
+paper's window (3 past + current + 2 future) execution is equivalent to
+sequential training (tested bit-tight in tests/test_scratchpipe_properties).
+
+``train_fn(storage, slots, batch) -> (storage, aux)`` is the [Train] stage —
+any jitted computation that gathers from the scratchpad with ``slots`` and
+updates those rows in place (DLRM step, LM embedding step, ...).
+
+The runtime also keeps per-tier byte counters ([Collect]/[Insert] host bytes,
+[Exchange] PCIe bytes, [Train] HBM bytes) — these feed the calibrated
+bandwidth model reproducing the paper's latency figures.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any, Callable, Deque, Iterator, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import scratchpad as sp
+from repro.core.host_table import HostEmbeddingTable, HostTraffic
+from repro.core.plan import Planner, PlanResult
+
+
+@dataclasses.dataclass
+class StepStats:
+    step: int
+    n_lookups: int
+    n_unique: int
+    n_hits: int
+    n_miss: int
+    n_evict: int
+    aux: Any = None
+
+    @property
+    def hit_rate(self) -> float:
+        return self.n_hits / max(self.n_unique, 1)
+
+
+@dataclasses.dataclass
+class _InFlight:
+    ids: np.ndarray
+    batch: Any
+    plan: Optional[PlanResult] = None
+    host_rows: Optional[np.ndarray] = None  # [Collect] host->staging
+    evicted_dev: Optional[jax.Array] = None  # [Collect] device victim read
+    fetched_dev: Optional[jax.Array] = None  # [Exchange] h2d
+    evicted_host: Optional[np.ndarray] = None  # [Exchange] d2h
+    stage: int = 0  # stages completed: 1=planned .. 4=inserted
+
+
+class ScratchPipe:
+    def __init__(
+        self,
+        host_table: HostEmbeddingTable,
+        num_slots: int,
+        train_fn: Callable[[jax.Array, jax.Array, Any], Tuple[jax.Array, Any]],
+        *,
+        past_window: int = 3,
+        future_window: int = 2,
+        policy: str = "lru",
+        pipelined: bool = True,
+        storage_dtype=None,
+    ):
+        self.host = host_table
+        self.train_fn = train_fn
+        self.pipelined = pipelined
+        if not pipelined:  # straw-man (§IV-B): depth-1, no hazards possible
+            past_window, future_window = 0, 0
+        self.planner = Planner(
+            host_table.rows,
+            num_slots,
+            past_window=past_window,
+            future_window=future_window,
+            policy=policy,
+        )
+        import jax.numpy as jnp
+
+        dt = storage_dtype or jnp.dtype(host_table.data.dtype.name)
+        self.storage = sp.make_storage(num_slots, host_table.dim, dt)
+        self.pcie = HostTraffic()  # read = d2h, written = h2d
+        self.hbm = HostTraffic()  # device-side traffic ([Train] + fills)
+        self._window: Deque[_InFlight] = collections.deque()
+        self._stats: List[StepStats] = []
+        self.future_window = future_window
+
+    # ------------------------------------------------------------------ #
+    # stages
+    # ------------------------------------------------------------------ #
+    def _stage_plan(self, entry: _InFlight, lookahead: List[np.ndarray]):
+        entry.plan = self.planner.plan(entry.ids, lookahead)
+
+    def _stage_collect(self, entry: _InFlight):
+        p = entry.plan
+        entry.host_rows = self.host.gather(p.miss_ids)  # host-tier read
+        entry.evicted_dev = sp.read(self.storage, p.evict_slots)  # HBM read
+        self.hbm.read += p.evict_slots.size * self.host.row_bytes
+
+    def _stage_exchange(self, entry: _InFlight):
+        p = entry.plan
+        entry.fetched_dev = jax.device_put(entry.host_rows)  # h2d
+        entry.evicted_host = np.asarray(entry.evicted_dev)  # d2h
+        self.pcie.written += p.miss_ids.size * self.host.row_bytes
+        self.pcie.read += p.evict_slots.size * self.host.row_bytes
+
+    def _stage_insert(self, entry: _InFlight):
+        p = entry.plan
+        if p.evict_ids.size:
+            self.host.scatter(p.evict_ids, entry.evicted_host)  # host write
+        if p.fill_slots.size:
+            self.storage = sp.fill(
+                self.storage, jax.device_put(p.fill_slots), entry.fetched_dev
+            )
+            self.hbm.written += p.fill_slots.size * self.host.row_bytes
+
+    def _stage_train(self, entry: _InFlight) -> StepStats:
+        p = entry.plan
+        self.storage, aux = self.train_fn(
+            self.storage, jax.device_put(p.slots), entry.batch
+        )
+        # [Train] HBM traffic: gather reads + coalesced scatter read-mod-write
+        self.hbm.read += p.slots.size * self.host.row_bytes
+        self.hbm.read += p.n_unique * self.host.row_bytes
+        self.hbm.written += p.n_unique * self.host.row_bytes
+        st = StepStats(
+            step=p.step,
+            n_lookups=int(p.slots.size),
+            n_unique=p.n_unique,
+            n_hits=p.n_hits,
+            n_miss=int(p.miss_ids.size),
+            n_evict=int(p.evict_slots.size),
+            aux=aux,
+        )
+        self._stats.append(st)
+        return st
+
+    # ------------------------------------------------------------------ #
+    # pipeline driver
+    # ------------------------------------------------------------------ #
+    def run(
+        self, stream: Iterator[Tuple[np.ndarray, Any]], lookahead_fn=None
+    ) -> List[StepStats]:
+        """stream yields (sparse_ids, batch_payload). ``lookahead_fn(k)``
+        returns the ids of the next k mini-batches WITHOUT consuming them
+        (see repro.data.lookahead). Returns per-step stats (train order)."""
+        if not self.pipelined:
+            return self._run_sequential(stream, lookahead_fn)
+        out: List[StepStats] = []
+        stream = iter(stream)
+        exhausted = False
+        while True:
+            if not exhausted:
+                try:
+                    ids, batch = next(stream)
+                    entry = _InFlight(np.asarray(ids), batch)
+                    la = lookahead_fn(self.future_window) if lookahead_fn else []
+                    self._stage_plan(entry, la)
+                    entry.stage = 1
+                    self._window.append(entry)
+                except StopIteration:
+                    exhausted = True
+            self._advance_cycle(out)
+            if exhausted and not self._window:
+                break
+        return out
+
+    def _advance_cycle(self, out: List[StepStats]):
+        """One pipeline cycle: every in-flight entry advances exactly one
+        stage (entries entered on different cycles, so their stage indices
+        are all distinct). Execution order inside the cycle is the
+        hazard-adversarial one — the newest batch's [Collect] reads host and
+        scratchpad state BEFORE the older batches' [Insert] write-back and
+        [Train] update run. A missing hold-window rule therefore produces
+        stale reads (caught by the property tests) instead of being hidden
+        by sequential execution."""
+        by_stage = {e.stage: e for e in self._window}
+        if 1 in by_stage:
+            self._stage_collect(by_stage[1])
+        if 2 in by_stage:
+            self._stage_exchange(by_stage[2])
+        if 3 in by_stage:
+            self._stage_insert(by_stage[3])
+        if 4 in by_stage:
+            entry = by_stage[4]
+            out.append(self._stage_train(entry))
+            self._window.remove(entry)
+        for s in (1, 2, 3):
+            if s in by_stage:
+                by_stage[s].stage = s + 1
+
+    # -- incremental driving (lockstep multi-shard execution, §VI-G) ------- #
+    def run_one_cycle(self, ids, batch, lookahead_fn=None) -> Optional[StepStats]:
+        """Plan one new mini-batch and advance the pipeline one cycle."""
+        entry = _InFlight(np.asarray(ids), batch)
+        la = lookahead_fn(self.future_window) if lookahead_fn else []
+        self._stage_plan(entry, la)
+        entry.stage = 1
+        self._window.append(entry)
+        out: List[StepStats] = []
+        self._advance_cycle(out)
+        return out[0] if out else None
+
+    def drain_one_cycle(self) -> Optional[StepStats]:
+        """Advance one cycle without a new batch (pipeline drain)."""
+        out: List[StepStats] = []
+        self._advance_cycle(out)
+        return out[0] if out else None
+
+    def _run_sequential(self, stream, lookahead_fn) -> List[StepStats]:
+        """Straw-man (§IV-B): dynamic cache, no pipelining — every batch runs
+        Plan/Collect/Exchange/Insert/Train back-to-back."""
+        out = []
+        for ids, batch in stream:
+            entry = _InFlight(np.asarray(ids), batch)
+            self._stage_plan(entry, [])
+            self._stage_collect(entry)
+            self._stage_exchange(entry)
+            self._stage_insert(entry)
+            entry._inserted = True
+            out.append(self._stage_train(entry))
+        return out
+
+    # ------------------------------------------------------------------ #
+    def flush_to_host(self):
+        """Write every cached (dirty) row back to the host table."""
+        live = np.flatnonzero(self.planner.slot_to_id >= 0)
+        if live.size:
+            ids = self.planner.slot_to_id[live]
+            vals = np.asarray(sp.read(self.storage, live))
+            self.host.scatter(ids, vals)
+
+    # -- checkpoint/restart (paper-system fault tolerance) ----------------- #
+    def state_arrays(self) -> dict:
+        """Host-side snapshot at a pipeline-drain boundary (no in-flight
+        batches): planner state + scratchpad contents + host table. Together
+        with the deterministic look-ahead stream position this resumes with
+        an IDENTICAL schedule (tests/test_perf_flags_and_ft.py)."""
+        assert not self._window, "checkpoint only at drain boundaries"
+        out = {"host_table": self.host.data, "storage": np.asarray(self.storage)}
+        for k, v in self.planner.state_dict().items():
+            out[f"planner_{k}"] = v
+        return out
+
+    def load_state_arrays(self, arrays: dict) -> None:
+        assert not self._window
+        self.host.data = np.asarray(arrays["host_table"])
+        self.storage = jax.device_put(np.asarray(arrays["storage"]))
+        self.planner.load_state_dict(
+            {k[len("planner_"):]: v for k, v in arrays.items()
+             if k.startswith("planner_")}
+        )
+
+    @property
+    def stats(self) -> List[StepStats]:
+        return self._stats

@@ -1,0 +1,182 @@
+"""[Plan] stage: HitMap + hold masks + victim selection (paper §IV-C/D).
+
+Vectorized (numpy) implementation of Algorithm 1, adapted per DESIGN.md:
+instead of iterating sparse IDs one-by-one, hits/misses are resolved with a
+batched lookup and victims are allocated with a single masked argpartition.
+
+Data structures (names follow the paper):
+  * HitMap     — key->slot store. Implemented as a direct-mapped int32 array
+                 over the global row space (the fastest software realization
+                 of the paper's (key, value) store).
+  * Hold mask  — per-slot W-bit shift register (W = past + 1 cycles). A bit
+                 is set when a mini-batch touching the slot passes [Plan];
+                 it shifts right every cycle, so the slot stays unevictable
+                 exactly while that mini-batch is in flight (RAW-2/3).
+  * Future holds — recomputed every cycle from the next ``future`` look-ahead
+                 mini-batches' HitMap hits (RAW-4). Their misses occupy no
+                 slot yet, so they cannot be victims by construction.
+
+The HitMap is updated at [Plan] time — deliberately *ahead* of the Storage
+array (paper Fig. 11): it always reflects the cache state as of the oldest
+in-flight batch's [Train] completing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class PlanResult:
+    """Everything later stages need for one mini-batch."""
+
+    step: int
+    slots: np.ndarray  # slot for every input id (dense, same shape as ids)
+    miss_ids: np.ndarray  # unique row ids to [Collect] from the host table
+    fill_slots: np.ndarray  # Storage slots the missed rows go to ([Insert])
+    evict_slots: np.ndarray  # slots read out as victims ([Collect], device)
+    evict_ids: np.ndarray  # row ids written back to host ([Insert])
+    n_unique: int = 0
+    n_hits: int = 0
+
+
+class Planner:
+    def __init__(
+        self,
+        num_rows: int,
+        num_slots: int,
+        *,
+        past_window: int = 3,
+        future_window: int = 2,
+        policy: str = "lru",
+        seed: int = 0,
+    ):
+        if policy not in ("lru", "random", "lfu"):
+            raise ValueError(f"unknown replacement policy {policy!r}")
+        self.num_rows = int(num_rows)
+        self.num_slots = int(num_slots)
+        self.past_window = int(past_window)
+        self.future_window = int(future_window)
+        self.policy = policy
+        self._rng = np.random.default_rng(seed)
+
+        self.hitmap = np.full(self.num_rows, -1, dtype=np.int64)  # id -> slot
+        self.slot_to_id = np.full(self.num_slots, -1, dtype=np.int64)
+        self.hold = np.zeros(self.num_slots, dtype=np.uint32)  # shift register
+        self.last_use = np.zeros(self.num_slots, dtype=np.int64)  # lru
+        self.use_count = np.zeros(self.num_slots, dtype=np.int64)  # lfu
+        self._free_ptr = 0  # slots never allocated yet
+        self._cycle = 0
+        # W-bit window: past mini-batches + the current one
+        self._hold_bit = np.uint32(1 << self.past_window)
+
+    # -- stats ---------------------------------------------------------------
+    @property
+    def occupancy(self) -> int:
+        return int(np.sum(self.slot_to_id >= 0))
+
+    # -- checkpointing (host state; resumes must see identical schedules) ----
+    def state_dict(self) -> dict:
+        return {
+            "hitmap": self.hitmap,
+            "slot_to_id": self.slot_to_id,
+            "hold": self.hold,
+            "last_use": self.last_use,
+            "use_count": self.use_count,
+            "scalars": np.array([self._free_ptr, self._cycle], np.int64),
+        }
+
+    def load_state_dict(self, st: dict) -> None:
+        self.hitmap = np.asarray(st["hitmap"], np.int64)
+        self.slot_to_id = np.asarray(st["slot_to_id"], np.int64)
+        self.hold = np.asarray(st["hold"], np.uint32)
+        self.last_use = np.asarray(st["last_use"], np.int64)
+        self.use_count = np.asarray(st["use_count"], np.int64)
+        self._free_ptr, self._cycle = (int(x) for x in st["scalars"])
+
+    def plan(
+        self, ids: np.ndarray, future_batches: Optional[List[np.ndarray]] = None
+    ) -> PlanResult:
+        """Run [Plan] for one mini-batch. ``ids``: any-shape int array of row
+        ids. ``future_batches``: look-ahead ids of the next `future_window`
+        mini-batches (RAW-4 exclusion)."""
+        self._cycle += 1
+        flat = np.asarray(ids, dtype=np.int64).ravel()
+        uniq = np.unique(flat)
+
+        # Step B (Algorithm 1): advance the hold shift register by one cycle.
+        self.hold >>= 1
+
+        # Future-window holds, recomputed fresh every cycle.
+        future_held = np.zeros(self.num_slots, dtype=bool)
+        if self.future_window and future_batches:
+            for fb in future_batches[: self.future_window]:
+                fslots = self.hitmap[np.unique(np.asarray(fb, np.int64).ravel())]
+                fslots = fslots[fslots >= 0]
+                future_held[fslots] = True
+
+        # Step C: batched hit/miss resolution.
+        slots_u = self.hitmap[uniq]
+        hit_mask = slots_u >= 0
+        hit_slots = slots_u[hit_mask]
+        self.hold[hit_slots] |= self._hold_bit
+        self.last_use[hit_slots] = self._cycle
+        self.use_count[hit_slots] += 1
+
+        miss_ids = uniq[~hit_mask]
+        n_miss = miss_ids.size
+
+        # Allocation: fresh slots first, then victims with hold==0.
+        n_fresh = min(n_miss, self.num_slots - self._free_ptr)
+        fresh = np.arange(self._free_ptr, self._free_ptr + n_fresh, dtype=np.int64)
+        self._free_ptr += n_fresh
+        n_evict = n_miss - n_fresh
+        if n_evict > 0:
+            eligible = (self.hold == 0) & ~future_held & (self.slot_to_id >= 0)
+            cand = np.flatnonzero(eligible)
+            if cand.size < n_evict:
+                raise RuntimeError(
+                    f"scratchpad too small: need {n_evict} victims, "
+                    f"only {cand.size} evictable (slots={self.num_slots}, "
+                    f"window={self.past_window}+1+{self.future_window}); "
+                    "size the Storage array for the worst-case window "
+                    "working set (paper §VI-D)."
+                )
+            if self.policy == "lru":
+                # stable sort: ties broken by slot index (matches plan_jax)
+                order = np.argsort(self.last_use[cand], kind="stable")[:n_evict]
+            elif self.policy == "lfu":
+                order = np.argsort(self.use_count[cand], kind="stable")[:n_evict]
+            else:  # random
+                order = self._rng.choice(cand.size, size=n_evict, replace=False)
+            victims = cand[order]
+        else:
+            victims = np.empty(0, dtype=np.int64)
+
+        evict_ids = self.slot_to_id[victims]
+        fill_slots = np.concatenate([fresh, victims]) if n_miss else fresh
+
+        # HitMap updated at [Plan] time (ahead of Storage — paper Fig. 11).
+        if evict_ids.size:
+            self.hitmap[evict_ids] = -1
+        if n_miss:
+            self.hitmap[miss_ids] = fill_slots
+            self.slot_to_id[fill_slots] = miss_ids
+            self.hold[fill_slots] |= self._hold_bit
+            self.last_use[fill_slots] = self._cycle
+            self.use_count[fill_slots] = 1
+
+        # Dense per-input slot mapping (what [Train] gathers with).
+        slots = self.hitmap[flat].reshape(np.asarray(ids).shape)
+        return PlanResult(
+            step=self._cycle,
+            slots=slots,
+            miss_ids=miss_ids,
+            fill_slots=fill_slots,
+            evict_slots=victims,
+            evict_ids=evict_ids,
+            n_unique=int(uniq.size),
+            n_hits=int(hit_mask.sum()),
+        )

@@ -1,0 +1,166 @@
+"""Device-side (pure-jnp) [Plan] controller.
+
+Functionally identical to repro.core.plan.Planner (the vectorized host/numpy
+controller) but expressed as a jittable state transition, so the Plan stage
+itself can run on-accelerator — useful when the host is the bottleneck (very
+large mini-batches) or for TPU-side pipelining of the controller.
+
+State is a pytree of arrays; `plan_step` is O(n_ids log n_ids + slots).
+Victim selection uses a single argsort priority instead of the host
+argpartition: eligible slots sorted by last_use (LRU), ineligible pushed to
++inf. Equivalence with the host planner is asserted in
+tests/test_plan_jax.py for random traces.
+
+Restriction vs the host planner: ``ids`` must be padded to a fixed per-batch
+shape (jit static shapes); -1 entries are ignored. Victim counts are data-
+dependent, so misses are allocated up to ``max_miss = ids.size`` slots per
+step with unused allocations rolled back — the standard fixed-shape trick.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class PlanState(NamedTuple):
+    hitmap: jax.Array  # (rows,) int32 id -> slot | -1
+    slot_to_id: jax.Array  # (slots,) int32
+    hold: jax.Array  # (slots,) uint32 shift register
+    last_use: jax.Array  # (slots,) int32
+    free_ptr: jax.Array  # () int32
+    cycle: jax.Array  # () int32
+
+
+def init_state(num_rows: int, num_slots: int) -> PlanState:
+    return PlanState(
+        hitmap=jnp.full((num_rows,), -1, jnp.int32),
+        slot_to_id=jnp.full((num_slots,), -1, jnp.int32),
+        hold=jnp.zeros((num_slots,), jnp.uint32),
+        last_use=jnp.zeros((num_slots,), jnp.int32),
+        free_ptr=jnp.zeros((), jnp.int32),
+        cycle=jnp.zeros((), jnp.int32),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("past_window",))
+def plan_step(
+    state: PlanState,
+    ids: jax.Array,  # (n,) int32, -1 padded
+    future_ids: jax.Array,  # (m,) int32, -1 padded (look-ahead window union)
+    *,
+    past_window: int = 3,
+) -> Tuple[PlanState, dict]:
+    """One [Plan] cycle. Returns (new_state, outputs) with fixed-shape
+    outputs: slots (n,), fill_slots (n,), miss_ids (n,), evict_ids (n,)
+    (-1 padded; fill/evict entries beyond the miss count are -1)."""
+    n = ids.shape[0]
+    slots_cap = state.slot_to_id.shape[0]
+    cycle = state.cycle + 1
+    hold = state.hold >> 1
+    hold_bit = jnp.uint32(1 << past_window)
+
+    valid = ids >= 0
+    safe_ids = jnp.where(valid, ids, 0)
+
+    # dedupe within the mini-batch: first occurrence wins
+    sorted_ids = jnp.sort(jnp.where(valid, ids, jnp.iinfo(jnp.int32).max))
+    is_first = jnp.concatenate(
+        [jnp.ones((1,), bool), sorted_ids[1:] != sorted_ids[:-1]]
+    ) & (sorted_ids != jnp.iinfo(jnp.int32).max)
+    uniq = jnp.where(is_first, sorted_ids, -1)  # (n,) unique ids, -1 padded
+    uniq_valid = uniq >= 0
+    uniq_safe = jnp.where(uniq_valid, uniq, 0)
+
+    # hit/miss. Padded/inactive scatter entries use index -1 + mode="drop"
+    # (writing placeholder values to index 0 would race with real writes).
+    cur_slots = jnp.where(uniq_valid, state.hitmap[uniq_safe], -1)
+    hit = cur_slots >= 0
+    # NOTE: negative scatter indices WRAP in jax; out-of-bounds POSITIVE
+    # sentinels (slots_cap / num_rows) are what mode="drop" discards.
+    hit_mask = (
+        jnp.zeros_like(hold, bool)
+        .at[jnp.where(hit, cur_slots, slots_cap)]
+        .set(True, mode="drop")
+    )
+    hold = jnp.where(hit_mask, hold | hold_bit, hold)
+    last_use = jnp.where(hit_mask, cycle, state.last_use)
+
+    miss = uniq_valid & ~hit  # (n,)
+    miss_rank = jnp.cumsum(miss.astype(jnp.int32)) - 1  # rank among misses
+    n_miss = jnp.sum(miss.astype(jnp.int32))
+
+    # future-window holds (recomputed fresh, as in the host planner)
+    f_valid = future_ids >= 0
+    f_slots = jnp.where(f_valid, state.hitmap[jnp.where(f_valid, future_ids, 0)], -1)
+    future_held = (
+        jnp.zeros((slots_cap,), bool)
+        .at[jnp.where(f_slots >= 0, f_slots, slots_cap)]
+        .set(True, mode="drop")
+    )
+
+    # allocation: fresh slots first, then LRU victims among eligible
+    n_fresh_avail = slots_cap - state.free_ptr
+    n_fresh = jnp.minimum(n_miss, n_fresh_avail)
+    occupied = state.slot_to_id >= 0
+    eligible = (hold == 0) & ~future_held & occupied
+    # LRU priority: eligible sorted by last_use; ineligible at +inf
+    prio = jnp.where(eligible, last_use, jnp.iinfo(jnp.int32).max)
+    victim_order = jnp.argsort(prio)  # (slots,)
+    n_evict = n_miss - n_fresh
+    n_eligible = jnp.sum(eligible.astype(jnp.int32))
+    ok = n_evict <= n_eligible  # enough victims? (host planner raises)
+
+    # per-miss slot: fresh if rank < n_fresh else victim[rank - n_fresh]
+    fresh_slot = state.free_ptr + miss_rank
+    evict_rank = jnp.clip(miss_rank - n_fresh, 0, slots_cap - 1)
+    victim_slot = victim_order[evict_rank]
+    fill_slot = jnp.where(miss_rank < n_fresh, fresh_slot, victim_slot)
+    fill_slot = jnp.where(miss, fill_slot, -1)
+
+    # evicted ids (only for victim allocations)
+    is_victim = miss & (miss_rank >= n_fresh)
+    evict_slot_safe = jnp.where(is_victim, fill_slot, 0)
+    evict_ids = jnp.where(is_victim, state.slot_to_id[evict_slot_safe], -1)
+
+    # state updates (drop-mode scatters; evict-clear before miss-insert so a
+    # row evicted and re-inserted in the same cycle keeps the new slot)
+    num_rows = state.hitmap.shape[0]
+    hitmap = state.hitmap.at[
+        jnp.where(evict_ids >= 0, evict_ids, num_rows)
+    ].set(-1, mode="drop")
+    hitmap = hitmap.at[jnp.where(miss, uniq_safe, num_rows)].set(
+        fill_slot, mode="drop"
+    )
+    slot_to_id = state.slot_to_id.at[
+        jnp.where(miss, fill_slot, slots_cap)
+    ].set(uniq, mode="drop")
+    fill_mask = (
+        jnp.zeros((slots_cap,), bool)
+        .at[jnp.where(miss, fill_slot, slots_cap)]
+        .set(True, mode="drop")
+    )
+    hold = jnp.where(fill_mask, hold | hold_bit, hold)
+    last_use = jnp.where(fill_mask, cycle, last_use)
+
+    out_slots = jnp.where(valid, hitmap[safe_ids], -1)
+    new_state = PlanState(
+        hitmap=hitmap,
+        slot_to_id=slot_to_id,
+        hold=hold,
+        last_use=last_use,
+        free_ptr=state.free_ptr + n_fresh,
+        cycle=cycle,
+    )
+    outputs = {
+        "slots": out_slots,
+        "miss_ids": jnp.where(miss, uniq, -1),
+        "fill_slots": fill_slot,
+        "evict_ids": evict_ids,
+        "n_hits": jnp.sum(hit.astype(jnp.int32)),
+        "n_unique": jnp.sum(uniq_valid.astype(jnp.int32)),
+        "ok": ok,
+    }
+    return new_state, outputs

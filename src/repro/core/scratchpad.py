@@ -1,0 +1,69 @@
+"""GPU/HBM scratchpad Storage array + the device-side embedding primitives.
+
+Storage is a functional jnp array (slots, dim); fills/updates donate the
+buffer so XLA updates in place. The gather+reduce and the gradient
+duplication/coalescing/scatter-update primitives — the paper's two
+memory-bound hot spots — dispatch to the Pallas TPU kernels when
+``use_pallas`` (see repro/kernels), otherwise to the pure-jnp reference path
+(identical math; used on CPU and in the dry-run).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@functools.partial(jax.jit, donate_argnums=0)
+def fill(storage: jax.Array, slots: jax.Array, rows: jax.Array) -> jax.Array:
+    """[Insert]: write fetched rows into their allocated slots."""
+    return storage.at[slots].set(rows.astype(storage.dtype))
+
+
+@jax.jit
+def read(storage: jax.Array, slots: jax.Array) -> jax.Array:
+    """[Collect]: read victim rows for write-back."""
+    return jnp.take(storage, slots, axis=0)
+
+
+def gather_reduce(storage: jax.Array, slot_ids: jax.Array, *, use_pallas=False):
+    """Embedding-bag forward: (B, T, L) slots -> (B, T, D) summed bags."""
+    if use_pallas:
+        from repro.kernels import ops
+
+        return ops.gather_reduce(storage, slot_ids)
+    emb = jnp.take(storage, slot_ids, axis=0)  # (B, T, L, D)
+    return jnp.sum(emb, axis=2)
+
+
+def coalesce_apply(
+    storage: jax.Array,
+    slot_ids: jax.Array,
+    bag_grads: jax.Array,
+    lr: float,
+    *,
+    use_pallas=False,
+) -> jax.Array:
+    """Backward: duplicate bag grads to each looked-up row, coalesce
+    duplicates (scatter-add), apply SGD. slot_ids (B,T,L), bag_grads (B,T,D)."""
+    if use_pallas:
+        from repro.kernels import ops
+
+        return ops.coalesce_apply(storage, slot_ids, bag_grads, lr)
+    B, T, L = slot_ids.shape
+    D = bag_grads.shape[-1]
+    dup = jnp.broadcast_to(bag_grads[:, :, None, :], (B, T, L, D))
+    flat_slots = slot_ids.reshape(-1)
+    flat_grads = dup.reshape(-1, D).astype(storage.dtype)
+    return storage.at[flat_slots].add(-lr * flat_grads)
+
+
+def make_storage(num_slots: int, dim: int, dtype=jnp.float32) -> jax.Array:
+    return jnp.zeros((num_slots, dim), dtype)
+
+
+def storage_bytes(storage: jax.Array) -> int:
+    return storage.size * storage.dtype.itemsize

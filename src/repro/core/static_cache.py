@@ -1,0 +1,146 @@
+"""Baseline embedding-cache designs the paper compares against (§III/VI):
+
+* ``NoCacheBaseline``     — hybrid CPU-GPU without caching [Tensor Casting
+  baseline, Fig. 4(a)]: every gather and every gradient scatter hits the
+  slow host tier.
+* ``StaticCacheBaseline`` — Yin et al. [12], Fig. 4(b): the top-N
+  most-frequently-accessed rows are pinned in device memory for the whole
+  training run (no eviction). Hits train on-device; misses gather from and
+  scatter-update to the host tier (the memory-bound bwd path on the slow
+  memory — the cost ScratchPipe eliminates).
+
+Both run the SAME jitted [Train] computation as ScratchPipe so end-to-end
+training math is identical; only row placement differs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Iterator, List, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import scratchpad as sp
+from repro.core.host_table import HostEmbeddingTable, HostTraffic
+from repro.core.pipeline import StepStats
+
+
+class NoCacheBaseline:
+    """All embedding work on the host tier; device only does the MLPs.
+
+    train_fn(storage, slots, batch) is reused by presenting the *gathered
+    batch rows themselves* as a dense mini-storage (slot i = i-th lookup),
+    so compute is identical; the updated rows are scattered back to host.
+    """
+
+    def __init__(self, host_table: HostEmbeddingTable, train_fn):
+        self.host = host_table
+        self.train_fn = train_fn
+        self.pcie = HostTraffic()
+        self._stats: List[StepStats] = []
+
+    def run(self, stream, lookahead_fn=None) -> List[StepStats]:
+        out = []
+        for step, (ids, batch) in enumerate(stream, 1):
+            ids = np.asarray(ids)
+            flat = ids.ravel()
+            uniq, inv = np.unique(flat, return_inverse=True)
+            rows = self.host.gather(uniq)  # host gather (memory-bound)
+            storage = jax.device_put(rows)
+            self.pcie.written += rows.nbytes
+            slots = inv.reshape(ids.shape)
+            storage, aux = self.train_fn(storage, jax.device_put(slots), batch)
+            new_rows = np.asarray(storage)
+            self.pcie.read += new_rows.nbytes
+            # host-side scatter of trained rows (gradient path on slow tier)
+            self.host.scatter(uniq, new_rows)
+            st = StepStats(
+                step=step,
+                n_lookups=int(flat.size),
+                n_unique=int(uniq.size),
+                n_hits=0,
+                n_miss=int(uniq.size),
+                n_evict=0,
+                aux=aux,
+            )
+            self._stats.append(st)
+            out.append(st)
+        return out
+
+    @property
+    def stats(self):
+        return self._stats
+
+
+class StaticCacheBaseline:
+    """Yin et al. static top-N cache. ``hot_ids`` are pinned on-device."""
+
+    def __init__(
+        self,
+        host_table: HostEmbeddingTable,
+        hot_ids: np.ndarray,
+        train_fn,
+    ):
+        self.host = host_table
+        self.train_fn = train_fn
+        self.pcie = HostTraffic()
+        self.hot_ids = np.asarray(np.sort(hot_ids), dtype=np.int64)
+        self.id_to_slot = np.full(host_table.rows, -1, dtype=np.int64)
+        self.id_to_slot[self.hot_ids] = np.arange(self.hot_ids.size)
+        self.storage = jax.device_put(host_table.gather(self.hot_ids))
+        host_table.traffic.reset()  # preload is not steady-state traffic
+        self._stats: List[StepStats] = []
+
+    def run(self, stream, lookahead_fn=None) -> List[StepStats]:
+        out = []
+        for step, (ids, batch) in enumerate(stream, 1):
+            ids = np.asarray(ids)
+            flat = ids.ravel()
+            uniq = np.unique(flat)
+            slots_u = self.id_to_slot[uniq]
+            miss_ids = uniq[slots_u < 0]
+            n_hit_lookups = int(np.sum(self.id_to_slot[flat] >= 0))
+
+            # Misses: gather from host, append to a transient device region
+            # behind the pinned area (fresh every step — no insertion).
+            miss_rows = self.host.gather(miss_ids)
+            self.pcie.written += miss_rows.nbytes
+            ext = jax.device_put(
+                np.concatenate([np.asarray(self.storage), miss_rows], axis=0)
+                if miss_ids.size
+                else np.asarray(self.storage)
+            )
+            tmp_map = self.id_to_slot.copy()
+            tmp_map[miss_ids] = self.hot_ids.size + np.arange(miss_ids.size)
+            slots = tmp_map[flat].reshape(ids.shape)
+
+            ext, aux = self.train_fn(ext, jax.device_put(slots), batch)
+            ext_np = np.asarray(ext)
+            # hit rows stay on device; missed rows' trained values scatter
+            # back to the host tier (the slow bwd path, Fig. 4(b) right).
+            self.storage = jax.device_put(ext_np[: self.hot_ids.size])
+            if miss_ids.size:
+                upd = ext_np[self.hot_ids.size :]
+                self.pcie.read += upd.nbytes
+                self.host.scatter(miss_ids, upd)
+
+            st = StepStats(
+                step=step,
+                n_lookups=int(flat.size),
+                n_unique=int(uniq.size),
+                n_hits=int(uniq.size - miss_ids.size),
+                n_miss=int(miss_ids.size),
+                n_evict=0,
+                aux=aux,
+            )
+            st.hit_lookups = n_hit_lookups  # lookup-level hit count
+            self._stats.append(st)
+            out.append(st)
+        return out
+
+    def flush_to_host(self):
+        self.host.scatter(self.hot_ids, np.asarray(self.storage))
+
+    @property
+    def stats(self):
+        return self._stats

@@ -1,0 +1,59 @@
+"""Look-ahead dataset stream: the mechanism that lets ScratchPipe see the
+"future" (paper §IV-A — the training dataset records upcoming sparse ids).
+
+Wraps any (ids, batch) iterator with a peek buffer, completely transparent
+to the consumer (the paper's "transparent to the ML framework" property).
+Also checkpointable: ``state_dict`` records the stream position so training
+restarts resume with an identical pipeline schedule.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Any, Callable, Iterator, List, Optional, Tuple
+
+import numpy as np
+
+
+class LookaheadStream:
+    def __init__(self, it: Iterator[Tuple[np.ndarray, Any]]):
+        self._it = iter(it)
+        self._buf: collections.deque = collections.deque()
+        self._consumed = 0
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        if self._buf:
+            item = self._buf.popleft()
+        else:
+            item = next(self._it)
+        self._consumed += 1
+        return item
+
+    def peek_ids(self, k: int) -> List[np.ndarray]:
+        """ids of the next k batches WITHOUT consuming them."""
+        while len(self._buf) < k:
+            try:
+                self._buf.append(next(self._it))
+            except StopIteration:
+                break
+        return [self._buf[i][0] for i in range(min(k, len(self._buf)))]
+
+    @property
+    def consumed(self) -> int:
+        return self._consumed
+
+    def state_dict(self) -> dict:
+        return {"consumed": self._consumed}
+
+
+def make_stream(factory: Callable[[], Iterator], skip: int = 0) -> LookaheadStream:
+    """Rebuild a stream from its factory, skipping ``skip`` consumed batches
+    (elastic/restart path — deterministic generators replay identically)."""
+    it = factory()
+    for _ in range(skip):
+        next(it)
+    s = LookaheadStream(it)
+    s._consumed = skip
+    return s

@@ -1,0 +1,136 @@
+"""Pallas TPU kernel: causal/sliding-window flash attention with GQA.
+
+Classic online-softmax blocking re-tiled for TPU: (block_q x head_dim) query
+tiles stay resident in VMEM; the innermost grid dim walks KV blocks
+sequentially (TPU grids execute in order) carrying running max / denominator
+/ accumulator in VMEM scratch. Fully-masked KV blocks (beyond the causal
+frontier or outside the sliding window) are skipped with pl.when.
+
+grid = (B, H, Sq // block_q, Skv // block_kv)
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _make_kernel(scale, block_q, block_kv, n_kv, causal, window):
+    def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr):
+        iq = pl.program_id(2)
+        jkv = pl.program_id(3)
+
+        @pl.when(jkv == 0)
+        def _init():
+            m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+            l_scr[...] = jnp.zeros_like(l_scr)
+            acc_scr[...] = jnp.zeros_like(acc_scr)
+
+        q_lo = iq * block_q
+        kv_lo = jkv * block_kv
+        # block-level reachability (skip fully masked blocks)
+        needed = True
+        if causal:
+            needed = kv_lo <= q_lo + block_q - 1
+        if window is not None:
+            needed = jnp.logical_and(
+                needed, (q_lo - (kv_lo + block_kv - 1)) < window
+            )
+
+        @pl.when(needed)
+        def _body():
+            q = q_ref[0, 0].astype(jnp.float32)  # (bq, hd)
+            k = k_ref[0, 0].astype(jnp.float32)  # (bkv, hd)
+            v = v_ref[0, 0].astype(jnp.float32)
+            s = jax.lax.dot_general(
+                q, k, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            ) * scale  # (bq, bkv)
+            q_pos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 0)
+            kv_pos = kv_lo + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_kv), 1
+            )
+            valid = jnp.ones((block_q, block_kv), bool)
+            if causal:
+                valid &= kv_pos <= q_pos
+            if window is not None:
+                valid &= q_pos - kv_pos < window
+            s = jnp.where(valid, s, NEG_INF)
+            m_prev = m_scr[...]
+            m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+            p = jnp.exp(s - m_new) * valid.astype(jnp.float32)
+            alpha = jnp.exp(m_prev - m_new)
+            l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+            acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(
+                p.astype(v.dtype), v, preferred_element_type=jnp.float32
+            )
+            m_scr[...] = m_new
+
+        @pl.when(jkv == n_kv - 1)
+        def _finish():
+            denom = jnp.maximum(l_scr[...], 1e-30)
+            o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+    return _kernel
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_kv", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window=None,
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """q (B, Sq, H, hd); k/v (B, Skv, K, hd) with H % K == 0 -> (B, Sq, H, hd).
+
+    Sq must divide by block_q and Skv by block_kv (ops.py pads)."""
+    B, Sq, H, hd = q.shape
+    Skv, K = k.shape[1], k.shape[2]
+    G = H // K
+    scale = 1.0 / math.sqrt(hd)
+    block_q = min(block_q, Sq)
+    block_kv = min(block_kv, Skv)
+    assert Sq % block_q == 0 and Skv % block_kv == 0
+    nq, n_kv = Sq // block_q, Skv // block_kv
+
+    # (B, H, S, hd) layout so the head dim is a pure grid dim
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+
+    out = pl.pallas_call(
+        _make_kernel(scale, block_q, block_kv, n_kv, causal, window),
+        grid=(B, H, nq, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec(
+                (1, 1, block_kv, hd), lambda b, h, i, j: (b, h * K // H, j, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, block_kv, hd), lambda b, h, i, j: (b, h * K // H, j, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,62 @@
+"""Pallas TPU kernel: fused embedding gather + bag reduction (the paper's
+memory-bound forward primitive, §II-B).
+
+Design (TPU adaptation of the CUDA gather): the lookup ids are scalar-
+prefetched into SMEM and drive the *index map* of the storage BlockSpec, so
+each grid step DMAs exactly one (1, d_tile) embedding-row tile HBM->VMEM and
+accumulates it into the output bag tile resident in VMEM. The d_tile axis is
+the innermost lane dim (128-aligned); bags revisit their output block across
+the L lookup steps, so the accumulator never leaves VMEM.
+
+grid = (n_bags, L, D // d_tile)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_D_TILE = 128
+
+
+def _kernel(ids_ref, storage_ref, out_ref):
+    l = pl.program_id(1)
+
+    @pl.when(l == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += storage_ref[...].astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("d_tile", "interpret"))
+def gather_reduce(
+    storage: jax.Array,
+    slot_ids: jax.Array,
+    *,
+    d_tile: int = DEFAULT_D_TILE,
+    interpret: bool = False,
+) -> jax.Array:
+    """storage (N, D); slot_ids (nb, L) int32 -> (nb, D) fp32 bags."""
+    nb, L = slot_ids.shape
+    N, D = storage.shape
+    d_tile = min(d_tile, D)
+    assert D % d_tile == 0, (D, d_tile)
+    flat_ids = slot_ids.reshape(-1).astype(jnp.int32)
+    out = pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(nb, L, D // d_tile),
+            in_specs=[
+                pl.BlockSpec((1, d_tile), lambda b, l, d, ids: (ids[b * L + l], d)),
+            ],
+            out_specs=pl.BlockSpec((1, d_tile), lambda b, l, d, ids: (b, d)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((nb, D), jnp.float32),
+        interpret=interpret,
+    )(flat_ids, storage)
+    return out

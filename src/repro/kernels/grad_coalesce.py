@@ -1,0 +1,71 @@
+"""Pallas TPU kernel: gradient duplication + coalescing + scatter SGD update
+(the paper's memory-bound backward primitive, §II-B Fig. 2(b)).
+
+The storage buffer is input/output-aliased; the scalar-prefetched slot ids
+drive the OUTPUT BlockSpec index map, so each grid step brings the target
+embedding row tile into VMEM, accumulates ``-lr * bag_grad`` into it and
+lets Pallas write it back on block change. Duplicate rows within/across bags
+coalesce correctly because the TPU grid executes sequentially — later visits
+of the same row re-read the updated tile (read-modify-write), which is
+exactly the coalescing semantics of Fig. 2(b) without a separate sort pass.
+
+grid = (n_bags, L, D // d_tile)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_D_TILE = 128
+
+
+def _make_kernel(lr: float):
+    def _kernel(ids_ref, grad_ref, st_in_ref, st_out_ref):
+        # The output aliases the storage input, and the sequential TPU grid
+        # re-fetches the output block on revisit, so accumulating through the
+        # OUTPUT ref makes duplicate rows coalesce correctly (read-mod-write).
+        del st_in_ref
+        st_out_ref[...] += (-lr * grad_ref[...]).astype(st_out_ref.dtype)
+
+    return _kernel
+
+
+@functools.partial(jax.jit, static_argnames=("lr", "d_tile", "interpret"))
+def coalesce_apply(
+    storage: jax.Array,
+    slot_ids: jax.Array,
+    bag_grads: jax.Array,
+    lr: float,
+    *,
+    d_tile: int = DEFAULT_D_TILE,
+    interpret: bool = False,
+) -> jax.Array:
+    """storage (N, D); slot_ids (nb, L) int32; bag_grads (nb, D)."""
+    nb, L = slot_ids.shape
+    N, D = storage.shape
+    d_tile = min(d_tile, D)
+    assert D % d_tile == 0, (D, d_tile)
+    flat_ids = slot_ids.reshape(-1).astype(jnp.int32)
+    return pl.pallas_call(
+        _make_kernel(lr),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(nb, L, D // d_tile),
+            in_specs=[
+                pl.BlockSpec((1, d_tile), lambda b, l, d, ids: (b, d)),  # grads
+                pl.BlockSpec(
+                    (1, d_tile), lambda b, l, d, ids: (ids[b * L + l], d)
+                ),  # storage (aliased with the output)
+            ],
+            out_specs=pl.BlockSpec(
+                (1, d_tile), lambda b, l, d, ids: (ids[b * L + l], d)
+            ),
+        ),
+        out_shape=jax.ShapeDtypeStruct((N, D), storage.dtype),
+        input_output_aliases={2: 0},  # storage (ids=0, grads=1) -> output 0
+        interpret=interpret,
+    )(flat_ids, bag_grads, storage)

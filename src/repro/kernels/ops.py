@@ -1,0 +1,111 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (CPU validation per the brief); on a
+real TPU backend the kernels compile natively. Wrappers handle padding /
+flattening so callers use natural shapes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import gather_reduce as _gr
+from repro.kernels import grad_coalesce as _gc
+from repro.kernels import ref as _ref
+from repro.kernels import ssd_chunk as _ssd
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def gather_reduce(storage, slot_ids, *, interpret=None):
+    """storage (N, D); slot_ids (..., L) -> (..., D) summed bags."""
+    interpret = _interpret_default() if interpret is None else interpret
+    lead = slot_ids.shape[:-1]
+    L = slot_ids.shape[-1]
+    flat = slot_ids.reshape(-1, L)
+    out = _gr.gather_reduce(storage, flat, interpret=interpret)
+    return out.reshape(*lead, storage.shape[1]).astype(storage.dtype)
+
+
+def coalesce_apply(storage, slot_ids, bag_grads, lr, *, interpret=None):
+    """storage (N, D); slot_ids (..., L); bag_grads (..., D)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    L = slot_ids.shape[-1]
+    D = bag_grads.shape[-1]
+    return _gc.coalesce_apply(
+        storage,
+        slot_ids.reshape(-1, L),
+        bag_grads.reshape(-1, D).astype(jnp.float32),
+        float(lr),
+        interpret=interpret,
+    )
+
+
+def ssd_chunk_scan(x, dt, A, Bm, Cm, *, chunk=256, interpret=None):
+    """Fused Mamba2/SSD chunk scan (see kernels/ssd_chunk.py). Pads S up to a
+    chunk multiple. Returns (y (B,S,nh,hd), h_final (B,nh,hd,ds))."""
+    interpret = _interpret_default() if interpret is None else interpret
+    S = x.shape[1]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        import jax.numpy as jnp  # noqa: PLC0415
+
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    y, h = _ssd.ssd_chunk_scan(x, dt, A, Bm, Cm, chunk=Q, interpret=interpret)
+    return y[:, :S], h
+
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7)
+)
+def flash_attention(
+    q, k, v, causal=True, window=None, block_q=128, block_kv=128, interpret=None
+):
+    interpret = _interpret_default() if interpret is None else interpret
+    Sq, Skv = q.shape[1], k.shape[1]
+    pq = (-Sq) % min(block_q, max(Sq, 1))
+    pkv = (-Skv) % min(block_kv, max(Skv, 1))
+    if pq or pkv:
+        qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+        kp = jnp.pad(k, ((0, 0), (0, pkv), (0, 0), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, pkv), (0, 0), (0, 0)))
+    else:
+        qp, kp, vp = q, k, v
+    out = _fa.flash_attention(
+        qp, kp, vp, causal=causal, window=window,
+        block_q=min(block_q, qp.shape[1]), block_kv=min(block_kv, kp.shape[1]),
+        interpret=interpret,
+    )
+    return out[:, :Sq]
+
+
+def _fa_fwd(q, k, v, causal, window, block_q, block_kv, interpret):
+    out = flash_attention(q, k, v, causal, window, block_q, block_kv, interpret)
+    return out, (q, k, v)
+
+
+def _fa_bwd(causal, window, block_q, block_kv, interpret, res, g):
+    # Backward via the jnp reference (recompute) — the fwd kernel is the
+    # TPU-optimized piece; bwd runs the XLA path.
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: _ref.flash_attention_ref(
+            q_, k_, v_, causal=causal, window=window
+        ),
+        q,
+        k,
+        v,
+    )
+    return vjp(g)
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)

@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references the
+per-kernel shape/dtype sweep tests assert against)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def gather_reduce_ref(storage: jax.Array, slot_ids: jax.Array) -> jax.Array:
+    """storage (N, D); slot_ids (..., L) -> (..., D) summed bags."""
+    emb = jnp.take(storage, slot_ids, axis=0)
+    return jnp.sum(emb, axis=-2)
+
+
+def coalesce_apply_ref(
+    storage: jax.Array, slot_ids: jax.Array, bag_grads: jax.Array, lr: float
+) -> jax.Array:
+    """storage (N, D); slot_ids (nb, L); bag_grads (nb, D).
+    Gradient duplication (bag -> each looked-up row), coalescing of duplicate
+    rows (scatter-add) and SGD update."""
+    nb, L = slot_ids.shape
+    D = bag_grads.shape[-1]
+    dup = jnp.broadcast_to(bag_grads[:, None, :], (nb, L, D))
+    return storage.at[slot_ids.reshape(-1)].add(
+        (-lr * dup.reshape(-1, D)).astype(storage.dtype)
+    )
+
+
+def flash_attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window=None,
+) -> jax.Array:
+    """q (B, Sq, H, hd); k/v (B, Skv, K, hd). Direct softmax attention."""
+    B, Sq, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    Skv = k.shape[1]
+    s = jnp.einsum(
+        "bqhd,bjhd->bhqj", q, k, preferred_element_type=jnp.float32
+    ) / math.sqrt(hd)
+    q_pos = jnp.arange(Sq)[:, None]
+    kv_pos = jnp.arange(Skv)[None, :]
+    valid = jnp.ones((Sq, Skv), bool)
+    if causal:
+        valid &= kv_pos <= q_pos
+    if window is not None:
+        valid &= q_pos - kv_pos < window
+    s = jnp.where(valid[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum(
+        "bhqj,bjhd->bqhd", p.astype(v.dtype), v, preferred_element_type=jnp.float32
+    )
+    return out.astype(q.dtype)

@@ -1,0 +1,131 @@
+"""Pallas TPU kernel: fused Mamba2/SSD chunked scan.
+
+The §Perf analysis (EXPERIMENTS.md Cell 3) shows the SSD layer is
+byte-bound: the pure-JAX path materializes the (Q, Q) decay/score tensors
+and the inter-chunk state in HBM every chunk. This kernel keeps the whole
+chunk pipeline — intra-chunk quadratic form, inter-chunk state contribution
+and the state recurrence — resident in VMEM per (batch, head):
+
+    grid = (B, nh, n_chunks)   # last dim sequential on TPU: the (hd, ds)
+                               # state lives in VMEM scratch across chunks
+
+Inputs are pre-chunked views (B, nh|ng, nc, Q, ...) so every BlockSpec is a
+contiguous tile; B/C are indexed per head group (ng groups, hpg = nh/ng).
+All decay exponents are <= 0, so no max-subtraction is needed.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -jnp.inf
+
+
+def _make_kernel(Q, hd, ds, n_chunks):
+    def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, hout_ref, h_scr):
+        c_idx = pl.program_id(2)
+
+        @pl.when(c_idx == 0)
+        def _init():
+            h_scr[...] = jnp.zeros_like(h_scr)
+
+        x = x_ref[0, 0, 0].astype(jnp.float32)  # (Q, hd)
+        dt = dt_ref[0, 0, 0].astype(jnp.float32)  # (Q,)
+        A = a_ref[0].astype(jnp.float32)  # scalar
+        Bm = b_ref[0, 0, 0].astype(jnp.float32)  # (Q, ds)
+        Cm = c_ref[0, 0, 0].astype(jnp.float32)  # (Q, ds)
+
+        a = dt * A  # (Q,) <= 0
+        cum = jnp.cumsum(a)
+        total = cum[-1]
+
+        # intra-chunk quadratic form (all VMEM-resident)
+        G = jax.lax.dot_general(
+            Cm, Bm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (Q, Q) = C_i . B_j
+        expo = cum[:, None] - cum[None, :]
+        iota_i = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+        iota_j = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+        tri = iota_i >= iota_j
+        decay = jnp.exp(jnp.where(tri, expo, NEG_INF))
+        s = G * decay * dt[None, :]
+        y = jax.lax.dot(s, x, preferred_element_type=jnp.float32)  # (Q, hd)
+
+        # inter-chunk contribution of the incoming state h (hd, ds)
+        h = h_scr[...]
+        y += jnp.exp(cum)[:, None] * jax.lax.dot_general(
+            Cm, h, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+
+        # state recurrence
+        wj = jnp.exp(total - cum) * dt  # (Q,)
+        h_new = jnp.exp(total) * h + jax.lax.dot_general(
+            x, Bm * wj[:, None], (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # (hd, ds)
+        h_scr[...] = h_new
+        y_ref[0, 0, 0] = y.astype(y_ref.dtype)
+
+        @pl.when(c_idx == n_chunks - 1)
+        def _final():
+            hout_ref[0, 0] = h_new.astype(hout_ref.dtype)
+
+    return _kernel
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_chunk_scan(
+    x: jax.Array,  # (B, S, nh, hd)
+    dt: jax.Array,  # (B, S, nh) fp32 (post-softplus)
+    A: jax.Array,  # (nh,) fp32, negative
+    Bm: jax.Array,  # (B, S, ng, ds)
+    Cm: jax.Array,  # (B, S, ng, ds)
+    *,
+    chunk: int = 256,
+    interpret: bool = False,
+):
+    """Returns (y (B, S, nh, hd), h_final (B, nh, hd, ds)). S % chunk == 0
+    (ops.py pads)."""
+    B, S, nh, hd = x.shape
+    ng, ds = Bm.shape[2], Bm.shape[3]
+    hpg = nh // ng
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+
+    xt = x.transpose(0, 2, 1, 3).reshape(B, nh, nc, Q, hd)
+    dtt = dt.transpose(0, 2, 1).reshape(B, nh, nc, Q)
+    Bt = Bm.transpose(0, 2, 1, 3).reshape(B, ng, nc, Q, ds)
+    Ct = Cm.transpose(0, 2, 1, 3).reshape(B, ng, nc, Q, ds)
+
+    y, h_fin = pl.pallas_call(
+        _make_kernel(Q, hd, ds, nc),
+        grid=(B, nh, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, Q, hd), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, Q), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec(
+                (1, 1, 1, Q, ds), lambda b, h, c, hpg=hpg: (b, h // hpg, c, 0, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, 1, Q, ds), lambda b, h, c, hpg=hpg: (b, h // hpg, c, 0, 0)
+            ),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, Q, hd), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, hd, ds), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, nh, nc, Q, hd), x.dtype),
+            jax.ShapeDtypeStruct((B, nh, hd, ds), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, ds), jnp.float32)],
+        interpret=interpret,
+    )(xt, dtt, A, Bt, Ct)
+    y = y.reshape(B, nh, S, hd).transpose(0, 2, 1, 3)
+    return y, h_fin

@@ -1,0 +1,237 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks the device count on first use).
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh) cell
+with ShapeDtypeStruct inputs (no allocation), then record memory_analysis(),
+cost_analysis() and the collective schedule for EXPERIMENTS.md / roofline.
+
+Usage:
+    python -m repro.launch.dryrun --arch chatglm3-6b --shape train_4k
+    python -m repro.launch.dryrun --all [--mesh single|multi|both]
+Results: benchmarks/results/dryrun/<arch>__<shape>__<mesh>.json
+"""
+import argparse
+import gc
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES_BY_NAME, dryrun_cells, get_entry
+from repro.launch import steps as S
+from repro.launch.hlo_stats import collective_stats
+from repro.launch.mesh import make_production_mesh
+from repro.models import api
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "../../../benchmarks/results/dryrun")
+
+
+def _mem_stats(compiled):
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if ma is None:
+        return {}
+    out = {}
+    for f in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "generated_code_size_in_bytes",
+        "alias_size_in_bytes",
+        "peak_memory_in_bytes",
+    ):
+        v = getattr(ma, f, None)
+        if v is not None:
+            out[f] = int(v)
+    return out
+
+
+def _cost_stats(compiled):
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return {k: float(v) for k, v in ca.items() if isinstance(v, (int, float))}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool) -> dict:
+    entry = get_entry(arch)
+    cfg = entry.config
+    shape = SHAPES_BY_NAME[shape_name] if arch != "dlrm-scratchpipe" else entry.shapes[0]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "devices": int(len(jax.devices())),
+    }
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        if arch == "dlrm-scratchpipe":
+            lowered = _lower_dlrm(cfg, mesh, shape)
+        elif shape.kind == "train":
+            lowered = _lower_train(cfg, mesh, shape)
+        elif shape.kind == "prefill":
+            lowered = _lower_prefill(cfg, mesh, shape)
+        else:
+            lowered = _lower_decode(cfg, mesh, shape)
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+    rec["memory"] = _mem_stats(compiled)
+    rec["cost"] = _cost_stats(compiled)
+    rec["collectives"] = collective_stats(compiled.as_text())
+    return rec
+
+
+def _lower_train(cfg, mesh, shape):
+    train_step, specs, opt = S.make_train_step(cfg, mesh)
+    params_sds, opt_sds = S.abstract_state(cfg, mesh, opt)
+    batch_sds = api.abstract_batch(cfg, shape, mesh)
+    return jax.jit(train_step, donate_argnums=(0, 1)).lower(
+        params_sds, opt_sds, batch_sds
+    )
+
+
+def _lower_prefill(cfg, mesh, shape):
+    pre, specs = S.make_prefill_step(cfg, mesh, shape)
+    params_sds = S.abstract_state(cfg, mesh)
+    batch_sds = api.abstract_batch(cfg, shape, mesh)
+    return jax.jit(pre).lower(params_sds, batch_sds)
+
+
+def _lower_decode(cfg, mesh, shape):
+    dec, specs = S.make_serve_step(cfg, mesh, shape)
+    params_sds = S.abstract_state(cfg, mesh)
+    cache_sds = S.abstract_cache(cfg, mesh, shape)
+    from repro.parallel.sharding import mesh_axes, shard_dim
+
+    ax = mesh_axes(mesh)
+    dp = ax.data if len(ax.data) > 1 else ax.data[0]
+    b_ax = shard_dim(ax, shape.global_batch, dp)
+    tokens_sds = jax.ShapeDtypeStruct(
+        (shape.global_batch, 1),
+        jnp.int32,
+        sharding=NamedSharding(mesh, P(b_ax, None)),
+    )
+    pos_sds = jax.ShapeDtypeStruct((), jnp.int32, sharding=NamedSharding(mesh, P()))
+    return jax.jit(dec, donate_argnums=(1,)).lower(
+        params_sds, cache_sds, tokens_sds, pos_sds
+    )
+
+
+def _lower_dlrm(cfg, mesh, shape):
+    """The paper's model in 'GPU-only' multi-device mode (Table I baseline):
+    row-sharded tables + DP MLPs, full train step."""
+    from repro.models import dlrm
+    from repro.optim import SGD
+    from repro.parallel.sharding import mesh_axes, shard_dim
+
+    ax = mesh_axes(mesh)
+    opt = SGD()
+    lr = 0.05
+
+    def train_step(params, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: dlrm.loss_full_tables(p, cfg, batch, mesh)
+        )(params)
+        params, _ = opt.step(params, grads, (), lr)
+        return params, loss
+
+    params_abs = jax.eval_shape(lambda k: dlrm.init_full(cfg, k), jax.random.key(0))
+    specs = dlrm.full_specs(cfg, ax)
+    is_p = lambda x: isinstance(x, P)  # noqa: E731
+    params_sds = jax.tree.map(
+        lambda spec, a: jax.ShapeDtypeStruct(
+            a.shape, a.dtype, sharding=NamedSharding(mesh, spec)
+        ),
+        specs,
+        params_abs,
+        is_leaf=is_p,
+    )
+    B, T, L = shape.global_batch, cfg.num_tables, cfg.lookups_per_table
+    dp = ax.data if len(ax.data) > 1 else ax.data[0]
+    bsh = NamedSharding(mesh, P(dp))
+    batch_sds = {
+        "dense": jax.ShapeDtypeStruct(
+            (B, cfg.num_dense_features), jnp.float32,
+            sharding=NamedSharding(mesh, P(dp, None)),
+        ),
+        "label": jax.ShapeDtypeStruct((B,), jnp.float32, sharding=bsh),
+        "sparse_ids": jax.ShapeDtypeStruct(
+            (B, T, L), jnp.int32, sharding=NamedSharding(mesh, P(dp, None, None))
+        ),
+    }
+    return jax.jit(train_step, donate_argnums=(0,)).lower(params_sds, batch_sds)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--include-dlrm", action="store_true")
+    ap.add_argument("--out", default=RESULTS_DIR)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    if args.all:
+        cells = [
+            (c["arch"], c["shape"])
+            for c in dryrun_cells(include_dlrm=args.include_dlrm)
+            if not c["skip"]
+        ]
+    else:
+        cells = [(args.arch, args.shape)]
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    failures = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}"
+            path = os.path.join(args.out, tag.replace("/", "_") + ".json")
+            if os.path.exists(path):
+                print(f"[skip cached] {tag}")
+                continue
+            print(f"[dryrun] {tag} ...", flush=True)
+            try:
+                rec = run_cell(arch, shape, mp)
+                rec["ok"] = True
+            except Exception as e:
+                rec = {
+                    "arch": arch,
+                    "shape": shape,
+                    "mesh": "2x16x16" if mp else "16x16",
+                    "ok": False,
+                    "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-4000:],
+                }
+                failures += 1
+                print(f"  FAILED: {rec['error']}", flush=True)
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+            if rec.get("ok"):
+                c = rec["collectives"].get("total", {})
+                print(
+                    f"  ok lower={rec['lower_s']}s compile={rec['compile_s']}s "
+                    f"flops/dev={rec['cost'].get('flops', 0):.3e} "
+                    f"coll_bytes/dev={c.get('bytes_in', 0):.3e}",
+                    flush=True,
+                )
+            gc.collect()
+    if failures:
+        raise SystemExit(f"{failures} cell(s) failed")
+
+
+if __name__ == "__main__":
+    main()

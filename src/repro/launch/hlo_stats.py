@@ -1,0 +1,96 @@
+"""Collective-traffic accounting from compiled/lowered HLO text.
+
+``cost_analysis()`` has no collective-bytes entry, so we parse the SPMD
+module: for every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op we sum the *operand* byte sizes (per-partition, i.e.
+per-chip — exactly the roofline's collective term numerator).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\("
+)
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|\S+)\s")
+_NAME_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Returns {op_kind: {"count": n, "bytes_in": b, "bytes_out": b}} plus a
+    "total" entry. Bytes are per-partition (SPMD module)."""
+    out: Dict[str, Dict[str, float]] = defaultdict(
+        lambda: {"count": 0, "bytes_in": 0, "bytes_out": 0}
+    )
+    # symbol table: defined name -> byte size of its (possibly tuple) shape
+    sizes: Dict[str, int] = {}
+    lines = hlo_text.splitlines()
+    for line in lines:
+        d = _DEF_RE.match(line)
+        if d:
+            sizes[d.group(1)] = sum(
+                _shape_bytes(t, s) for t, s in _SHAPE_RE.findall(d.group(2))
+            )
+    for line in lines:
+        m = _OP_RE.search(line)
+        if m is None:
+            continue
+        kind = m.group(1)
+        # Output shape(s) live inside the matched "= <shape(s)> op(" span.
+        out_b = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(m.group(0)))
+        # Operand shapes: spelled inline, else resolved via the symbol table.
+        args = line[m.end() :].split(")")[0]
+        in_b = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(args))
+        if in_b == 0:
+            in_b = sum(sizes.get(n, 0) for n in _NAME_RE.findall(args))
+        if in_b == 0:
+            in_b = out_b  # conservative fallback
+        rec = out[kind]
+        rec["count"] += 1
+        rec["bytes_in"] += in_b
+        rec["bytes_out"] += out_b
+    total = {
+        "count": sum(r["count"] for r in out.values()),
+        "bytes_in": sum(r["bytes_in"] for r in out.values()),
+        "bytes_out": sum(r["bytes_out"] for r in out.values()),
+    }
+    result = dict(out)
+    result["total"] = total
+    return result
+
+
+def collective_bytes(hlo_text: str) -> int:
+    """Spec'd roofline numerator: sum of collective operand sizes/partition."""
+    return int(collective_stats(hlo_text)["total"]["bytes_in"])

@@ -1,0 +1,25 @@
+"""Production meshes. Importing this module never touches jax device state —
+meshes are built only inside the factory functions."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips (TPU v5e pod).
+    Multi-pod:  (pod=2, data=16, model=16) = 512 chips, the "pod" axis being
+    the DCN/cross-pod data-parallel dimension."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over locally available devices (tests / examples)."""
+    return jax.make_mesh(
+        (data, model),
+        ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )

@@ -1,0 +1,136 @@
+"""Production train/prefill/serve step builders with full sharding specs.
+
+These are the computations the dry-run lowers and the CLIs execute:
+  * train_step: fwd + bwd + grad-clip + AdamW(ZeRO-1) update
+  * prefill_step: prompt forward populating the KV/SSM cache
+  * serve_step: one batched greedy decode step against the cache
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import api
+from repro.optim import AdamW, clip_by_global_norm
+from repro.parallel.sharding import mesh_axes, tree_shardings, zero1_spec
+
+
+def opt_state_specs(cfg: ModelConfig, ax, params_abs, pspecs):
+    """AdamW state specs: m/v/master follow the param spec, plus ZeRO-1
+    sharding over the data axes when cfg.zero1."""
+
+    def per_leaf(spec, leaf):
+        if cfg.zero1:
+            return zero1_spec(spec, leaf.shape, ax)
+        return spec
+
+    is_p = lambda x: isinstance(x, P)  # noqa: E731
+    like = jax.tree.map(per_leaf, pspecs, params_abs, is_leaf=is_p)
+    return {"m": like, "v": like, "t": P(), "master": like}
+
+
+def make_train_step(cfg: ModelConfig, mesh: Mesh, *, lr: float = 3e-4):
+    """Returns (train_step, shardings dict). train_step(params, opt_state,
+    batch) -> (params, opt_state, metrics)."""
+    opt = AdamW()
+    loss_fn = api.make_loss_fn(cfg, mesh)
+
+    if cfg.embed_offload:
+        # ScratchPipe path: the embedding rows are an activation input; their
+        # gradient is returned to the cache runtime (duplication/coalescing/
+        # scatter happens in the scratchpad, not in this graph).
+        def train_step(params, opt_state, batch):
+            emb = batch["inputs_embeds"]
+            rest = {k: v for k, v in batch.items() if k != "inputs_embeds"}
+
+            def lf(p, e):
+                return loss_fn(p, dict(rest, inputs_embeds=e))
+
+            loss, (grads, g_emb) = jax.value_and_grad(lf, argnums=(0, 1))(
+                params, emb
+            )
+            grads, gnorm = clip_by_global_norm(grads, 1.0)
+            params, opt_state = opt.step(params, grads, opt_state, lr)
+            return params, opt_state, {
+                "loss": loss,
+                "grad_norm": gnorm,
+                "embed_row_grads": g_emb,
+            }
+
+    else:
+
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            grads, gnorm = clip_by_global_norm(grads, 1.0)
+            params, opt_state = opt.step(params, grads, opt_state, lr)
+            return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    ax = mesh_axes(mesh)
+    pspecs = api.param_specs(cfg, ax)
+    params_abs = api.abstract_params(cfg, ax)
+    ospecs = opt_state_specs(cfg, ax, params_abs, pspecs)
+    return train_step, {"params": pspecs, "opt": ospecs}, opt
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeSpec):
+    pre = api.make_prefill_fn(cfg, mesh)
+    ax = mesh_axes(mesh)
+    pspecs = api.param_specs(cfg, ax)
+    cspecs = api.cache_specs(cfg, ax, shape.global_batch, shape.seq_len)
+    return pre, {"params": pspecs, "cache": cspecs}
+
+
+def make_serve_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeSpec):
+    dec = api.make_decode_fn(cfg, mesh)
+    ax = mesh_axes(mesh)
+    pspecs = api.param_specs(cfg, ax)
+    cspecs = api.cache_specs(cfg, ax, shape.global_batch, shape.seq_len)
+    return dec, {"params": pspecs, "cache": cspecs}
+
+
+def abstract_state(cfg: ModelConfig, mesh: Mesh, opt: Optional[AdamW] = None):
+    """ShapeDtypeStructs (with shardings) for params [+ optimizer state]."""
+    ax = mesh_axes(mesh)
+    params_abs = api.abstract_params(cfg, ax)
+    pspecs = api.param_specs(cfg, ax)
+
+    def attach(abs_tree, spec_tree):
+        is_p = lambda x: isinstance(x, P)  # noqa: E731
+        return jax.tree.map(
+            lambda spec, a: jax.ShapeDtypeStruct(
+                a.shape, a.dtype, sharding=NamedSharding(mesh, spec)
+            ),
+            spec_tree,
+            abs_tree,
+            is_leaf=is_p,
+        )
+
+    params_sds = attach(params_abs, pspecs)
+    if opt is None:
+        return params_sds
+    opt_abs = jax.eval_shape(opt.init, params_abs)
+    ospecs = opt_state_specs(cfg, ax, params_abs, pspecs)
+    opt_sds = attach(opt_abs, ospecs)
+    return params_sds, opt_sds
+
+
+def abstract_cache(cfg: ModelConfig, mesh: Mesh, shape: ShapeSpec):
+    ax = mesh_axes(mesh)
+    cache_abs = jax.eval_shape(
+        lambda: api.init_cache(cfg, shape.global_batch, shape.seq_len, ax)
+    )
+    cspecs = api.cache_specs(cfg, ax, shape.global_batch, shape.seq_len)
+    is_p = lambda x: isinstance(x, P)  # noqa: E731
+    return jax.tree.map(
+        lambda spec, a: jax.ShapeDtypeStruct(
+            a.shape, a.dtype, sharding=NamedSharding(mesh, spec)
+        ),
+        cspecs,
+        cache_abs,
+        is_leaf=is_p,
+    )

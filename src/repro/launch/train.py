@@ -1,0 +1,145 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [--smoke]``.
+
+LM archs run the pjit train step (AdamW + ZeRO-1) over a synthetic token
+stream under the TrainSupervisor (checkpoint/restart, NaN quarantine).
+``--arch dlrm-scratchpipe`` runs the paper's system: host-resident tables +
+ScratchPipe pipeline + the DLRM [Train] stage.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config, get_smoke_config
+from repro.launch import steps as S
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import api
+from repro.runtime import TrainSupervisor
+
+
+def synth_lm_stream(cfg, shape, steps, seed=0):
+    from repro.configs.base import ShapeSpec
+
+    for i in range(steps):
+        yield api.synth_batch(cfg, shape, seed=seed + i)
+
+
+def train_lm(args):
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    mesh = make_host_mesh() if args.smoke else make_production_mesh()
+    from repro.configs.base import ShapeSpec
+
+    shape = (
+        ShapeSpec("smoke", args.seq_len, args.batch, "train")
+        if args.smoke
+        else ShapeSpec("train_4k", 4096, 256, "train")
+    )
+    with jax.set_mesh(mesh):
+        train_step, specs, opt = S.make_train_step(cfg, mesh, lr=args.lr)
+        from repro.parallel.sharding import mesh_axes
+
+        params = api.init(cfg, jax.random.key(args.seed), mesh_axes(mesh))
+        opt_state = opt.init(params)
+        step_jit = jax.jit(train_step, donate_argnums=(0, 1))
+
+        ckpt = CheckpointManager(args.ckpt_dir, keep=2)
+
+        def step_fn(state, batch):
+            params, opt_state = state
+            params, opt_state, metrics = step_jit(params, opt_state, batch)
+            return (params, opt_state), {
+                "loss": float(metrics["loss"]),
+                "grad_norm": float(metrics["grad_norm"]),
+            }
+
+        def stream_factory(skip):
+            it = synth_lm_stream(cfg, shape, args.steps, seed=args.seed)
+            for _ in range(skip):
+                next(it)
+            return it
+
+        sup = TrainSupervisor(
+            ckpt, step_fn, stream_factory, ckpt_every=args.ckpt_every
+        )
+        t0 = time.time()
+        state, report = sup.run((params, opt_state), args.steps)
+        dt = time.time() - t0
+        print(
+            f"done: steps={report.steps_run} restarts={report.restarts} "
+            f"time={dt:.1f}s ({dt / max(report.steps_run, 1):.3f}s/step)"
+        )
+
+
+def train_dlrm(args):
+    from repro.configs import get_entry
+    from repro.core.dlrm_runtime import DLRMTrainer
+    from repro.core.host_table import HostEmbeddingTable
+    from repro.core.pipeline import ScratchPipe
+    from repro.data.lookahead import LookaheadStream
+    from repro.data.synthetic import TraceConfig, dlrm_batches
+
+    cfg = (
+        get_smoke_config("dlrm-scratchpipe")
+        if args.smoke
+        else get_config("dlrm-scratchpipe")
+    )
+    tc = TraceConfig(
+        num_tables=cfg.num_tables,
+        rows_per_table=cfg.rows_per_table,
+        lookups_per_table=cfg.lookups_per_table,
+        batch_size=args.batch or cfg.batch_size,
+        locality=args.locality,
+        seed=args.seed,
+    )
+    rows = cfg.num_tables * cfg.rows_per_table
+    slots = max(2048, int(rows * cfg.cache_fraction))
+    host = HostEmbeddingTable(rows, cfg.embed_dim, seed=args.seed)
+    trainer = DLRMTrainer(cfg, jax.random.key(args.seed), lr=args.lr)
+    pipe = ScratchPipe(
+        host,
+        slots,
+        trainer.train_fn,
+        past_window=cfg.past_window,
+        future_window=cfg.future_window,
+    )
+    stream = LookaheadStream(dlrm_batches(tc, args.steps))
+    t0 = time.time()
+    stats = pipe.run(stream, lookahead_fn=stream.peek_ids)
+    dt = time.time() - t0
+    losses = [float(s.aux["loss"]) for s in stats]
+    hit = float(np.mean([s.hit_rate for s in stats[6:]])) if len(stats) > 6 else 0
+    print(
+        f"done: steps={len(stats)} loss {losses[0]:.4f}->{losses[-1]:.4f} "
+        f"plan_hit={hit:.3f} {dt / max(len(stats), 1) * 1e3:.1f}ms/step"
+    )
+    print(
+        f"traffic: host {host.traffic.total / 1e6:.1f}MB "
+        f"pcie {pipe.pcie.total / 1e6:.1f}MB hbm {pipe.hbm.total / 1e6:.1f}MB"
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--locality", default="medium")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+    if args.arch == "dlrm-scratchpipe":
+        train_dlrm(args)
+    else:
+        train_lm(args)
+
+
+if __name__ == "__main__":
+    main()

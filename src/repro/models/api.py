@@ -1,0 +1,181 @@
+"""Unified model API: family dispatch + head/vocab padding + synthetic batch
+and ShapeDtypeStruct builders for every (arch x shape) dry-run cell."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import hybrid, ssm_lm, transformer
+from repro.models.transformer import FRAME_DIM, PATCH_DIM
+from repro.parallel.sharding import MeshAxes, batch_spec, mesh_axes, shard_dim
+
+_FAMILY_MOD = {
+    "dense": transformer,
+    "encoder": transformer,
+    "vlm": transformer,
+    "moe": transformer,
+    "ssm": ssm_lm,
+    "hybrid": hybrid,
+}
+
+
+def family_module(cfg):
+    return _FAMILY_MOD[cfg.family]
+
+
+# ---------------------------------------------------------------------------
+# Runtime config: pad heads/vocab to the TP width
+# ---------------------------------------------------------------------------
+
+
+def runtime_config(cfg: ModelConfig, ax: Optional[MeshAxes]) -> Tuple[ModelConfig, int]:
+    """Returns (cfg', vocab_pad). Pads num_heads up to a multiple of the TP
+    width (llama4-scout / qwen2.5: 40 -> 48 at TP=16 — real extra compute,
+    recorded in the roofline's useful-flops ratio) and the vocab row count."""
+    tp = ax.model_size if ax else 1
+    H = cfg.num_heads
+    if H and H % tp:
+        H = -(-H // tp) * tp
+        if cfg.num_kv_heads and H % cfg.num_kv_heads:
+            H = -(-H // cfg.num_kv_heads) * cfg.num_kv_heads
+    vocab_pad = -(-cfg.vocab_size // tp) * tp
+    if H != cfg.num_heads:
+        cfg = dataclasses.replace(cfg, num_heads=H)
+    return cfg, vocab_pad
+
+
+def init(cfg: ModelConfig, key, ax: Optional[MeshAxes] = None):
+    rc, vp = runtime_config(cfg, ax)
+    return family_module(rc).init_params(rc, key, vp)
+
+
+def abstract_params(cfg: ModelConfig, ax: Optional[MeshAxes] = None):
+    rc, vp = runtime_config(cfg, ax)
+    return jax.eval_shape(
+        lambda k: family_module(rc).init_params(rc, k, vp),
+        jax.random.key(0),
+    )
+
+
+def param_specs(cfg: ModelConfig, ax: MeshAxes):
+    rc, vp = runtime_config(cfg, ax)
+    return family_module(rc).param_specs(rc, ax, vp)
+
+
+def make_loss_fn(cfg: ModelConfig, mesh: Optional[Mesh]):
+    ax = mesh_axes(mesh) if mesh is not None else None
+    rc, _ = runtime_config(cfg, ax)
+    mod = family_module(rc)
+
+    def loss(params, batch):
+        return mod.loss_fn(params, rc, batch, mesh)
+
+    return loss
+
+
+def make_prefill_fn(cfg: ModelConfig, mesh: Optional[Mesh]):
+    ax = mesh_axes(mesh) if mesh is not None else None
+    rc, _ = runtime_config(cfg, ax)
+    mod = family_module(rc)
+
+    def pre(params, batch):
+        return mod.prefill(params, rc, batch, mesh)
+
+    return pre
+
+
+def make_decode_fn(cfg: ModelConfig, mesh: Optional[Mesh]):
+    ax = mesh_axes(mesh) if mesh is not None else None
+    rc, _ = runtime_config(cfg, ax)
+    mod = family_module(rc)
+
+    def dec(params, cache, tokens, pos):
+        return mod.decode_step(params, rc, cache, tokens, pos, mesh)
+
+    return dec
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int, ax=None):
+    rc, _ = runtime_config(cfg, ax)
+    return family_module(rc).init_cache(rc, batch, seq_len)
+
+
+def cache_specs(cfg: ModelConfig, ax: MeshAxes, batch: int, seq_len: int):
+    rc, _ = runtime_config(cfg, ax)
+    return family_module(rc).cache_spec(rc, ax, batch, seq_len)
+
+
+# ---------------------------------------------------------------------------
+# Batches: concrete (smoke/examples) and abstract (dry-run)
+# ---------------------------------------------------------------------------
+
+VLM_PATCHES_FRACTION = True  # phi-3-vision: frontend_positions patches prepended
+
+
+def batch_structure(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Tuple]:
+    """name -> (shape, dtype) for the *train/prefill* inputs of this arch."""
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.embed_offload and shape.kind == "train":
+        # ScratchPipe-offloaded embedding: rows arrive pre-gathered.
+        return {
+            "inputs_embeds": ((B, S, cfg.d_model), cfg.compute_dtype),
+            "labels": ((B, S), "int32"),
+        }
+    if cfg.frontend == "frames":
+        d = {"frames": ((B, S, FRAME_DIM), cfg.compute_dtype)}
+        if shape.kind == "train":
+            d["labels"] = ((B, S), "int32")
+        return d
+    if cfg.frontend == "patches":
+        Pn = cfg.frontend_positions
+        d = {
+            "patches": ((B, Pn, PATCH_DIM), cfg.compute_dtype),
+            "tokens": ((B, S - Pn), "int32"),
+        }
+        if shape.kind == "train":
+            d["labels"] = ((B, S - Pn), "int32")
+        return d
+    d = {"tokens": ((B, S), "int32")}
+    if shape.kind == "train":
+        d["labels"] = ((B, S), "int32")
+    return d
+
+
+def synth_batch(cfg: ModelConfig, shape: ShapeSpec, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    out = {}
+    for name, (shp, dt) in batch_structure(cfg, shape).items():
+        if dt == "int32":
+            out[name] = jnp.asarray(
+                rng.integers(0, cfg.vocab_size, size=shp, dtype=np.int32)
+            )
+        else:
+            out[name] = jnp.asarray(
+                rng.standard_normal(shp).astype(np.float32), dtype=jnp.dtype(dt)
+            )
+    return out
+
+
+def batch_shardings(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh):
+    ax = mesh_axes(mesh)
+    out = {}
+    for name, (shp, dt) in batch_structure(cfg, shape).items():
+        nd = len(shp)
+        dp = ax.data if len(ax.data) > 1 else ax.data[0]
+        b_ax = shard_dim(ax, shp[0], dp)
+        out[name] = NamedSharding(mesh, P(b_ax, *([None] * (nd - 1))))
+    return out
+
+
+def abstract_batch(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh):
+    sh = batch_shardings(cfg, shape, mesh)
+    return {
+        name: jax.ShapeDtypeStruct(shp, jnp.dtype(dt), sharding=sh[name])
+        for name, (shp, dt) in batch_structure(cfg, shape).items()
+    }

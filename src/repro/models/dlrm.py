@@ -1,0 +1,146 @@
+"""DLRM (the paper's RecSys model, §V): bottom MLP over dense features,
+embedding-bag gather+reduce per table, dot-product feature interaction,
+top MLP -> CTR logit.
+
+Two execution modes:
+  * ``forward_from_bags`` — embeddings arrive as an *activation* input
+    (B, T, Dm). This is the ScratchPipe path: the runtime gathers bags from
+    the GPU/HBM scratchpad and receives ``d_loss/d_bags`` back for the
+    gradient duplication/coalescing/scatter step.
+  * ``loss_full_tables`` — tables are model parameters row-sharded over
+    "model" (the paper's 8-GPU "GPU-only" baseline, Table I); lookups go
+    through the masked shard-local gather + psum.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel import collectives as C
+from repro.parallel.sharding import MeshAxes, shard_dim
+
+
+def _init_mlp(key, dims, dt):
+    ks = jax.random.split(key, len(dims) - 1)
+    return [
+        {
+            "w": jax.random.normal(k, (a, b), dt) * math.sqrt(2.0 / a),
+            "b": jnp.zeros((b,), dt),
+        }
+        for k, a, b in zip(ks, dims[:-1], dims[1:])
+    ]
+
+
+def _mlp(params, x, final_linear=False):
+    n = len(params)
+    for i, lyr in enumerate(params):
+        x = x @ lyr["w"] + lyr["b"]
+        if not (final_linear and i == n - 1):
+            x = jax.nn.relu(x)
+    return x
+
+
+def interaction_dim(cfg) -> int:
+    n = cfg.num_tables + 1
+    return n * (n - 1) // 2 + cfg.bottom_mlp[-1]
+
+
+def init_mlps(cfg, key):
+    dt = jnp.dtype(cfg.param_dtype)
+    kb, kt = jax.random.split(key)
+    bot_dims = (cfg.num_dense_features,) + tuple(cfg.bottom_mlp)
+    top_dims = (interaction_dim(cfg),) + tuple(cfg.top_mlp)
+    return {
+        "bottom": _init_mlp(kb, bot_dims, dt),
+        "top": _init_mlp(kt, top_dims, dt),
+    }
+
+
+def mlp_specs(cfg) -> Dict:
+    rep = lambda params: [  # noqa: E731
+        {"w": P(None, None), "b": P(None)} for _ in params
+    ]
+    bot = len(cfg.bottom_mlp)
+    top = len(cfg.top_mlp)
+    return {
+        "bottom": [{"w": P(None, None), "b": P(None)} for _ in range(bot)],
+        "top": [{"w": P(None, None), "b": P(None)} for _ in range(top)],
+    }
+
+
+def forward_from_bags(mlps, dense: jax.Array, bags: jax.Array) -> jax.Array:
+    """dense: (B, 13); bags: (B, T, Dm) reduced embedding bags. -> logit (B,)."""
+    b = _mlp(mlps["bottom"], dense)  # (B, Dm)
+    feats = jnp.concatenate([b[:, None, :], bags], axis=1)  # (B, T+1, Dm)
+    inter = jnp.einsum(
+        "bid,bjd->bij", feats, feats, preferred_element_type=jnp.float32
+    )
+    n = feats.shape[1]
+    iu, ju = jnp.triu_indices(n, k=1)
+    flat = inter[:, iu, ju].astype(dense.dtype)  # (B, n(n-1)/2)
+    z = jnp.concatenate([b, flat], axis=-1)
+    return _mlp(mlps["top"], z, final_linear=True)[:, 0]
+
+
+def bce_loss(logit: jax.Array, label: jax.Array) -> jax.Array:
+    logit = logit.astype(jnp.float32)
+    label = label.astype(jnp.float32)
+    return jnp.mean(
+        jnp.maximum(logit, 0.0) - logit * label + jnp.log1p(jnp.exp(-jnp.abs(logit)))
+    )
+
+
+def loss_from_bags(mlps, batch) -> jax.Array:
+    logit = forward_from_bags(mlps, batch["dense"], batch["bags"])
+    return bce_loss(logit, batch["label"])
+
+
+# ---------------------------------------------------------------------------
+# Full-table (multi-device "GPU-only") mode
+# ---------------------------------------------------------------------------
+
+
+def init_full(cfg, key):
+    kt, km = jax.random.split(key)
+    dt = jnp.dtype(cfg.param_dtype)
+    tables = (
+        jax.random.normal(
+            kt, (cfg.num_tables * cfg.rows_per_table, cfg.embed_dim), dt
+        )
+        / math.sqrt(cfg.embed_dim)
+    )
+    return {"tables": tables, "mlps": init_mlps(cfg, key=km)}
+
+
+def full_specs(cfg, ax: MeshAxes):
+    rows = cfg.num_tables * cfg.rows_per_table
+    return {
+        "tables": P(shard_dim(ax, rows, ax.model), None),
+        "mlps": mlp_specs(cfg),
+    }
+
+
+def gather_bags_full(tables, cfg, sparse_ids, mesh) -> jax.Array:
+    """sparse_ids: (B, T, Lk) per-table row ids. Flattens to global row ids
+    (t * rows + id) and does the shard-masked lookup + psum, then reduces the
+    Lk lookups per bag (sum — the paper's reduction)."""
+    B, T, Lk = sparse_ids.shape
+    offs = (jnp.arange(T, dtype=jnp.int32) * cfg.rows_per_table)[None, :, None]
+    flat = (sparse_ids + offs).reshape(B, T * Lk)
+    if mesh is not None and "model" in mesh.axis_names and int(
+        mesh.shape["model"]
+    ) > 1 and tables.shape[0] % int(mesh.shape["model"]) == 0:
+        emb = C.vocab_sharded_lookup(tables, flat, mesh)
+    else:
+        emb = jnp.take(tables, flat, axis=0)
+    return jnp.sum(emb.reshape(B, T, Lk, cfg.embed_dim), axis=2)
+
+
+def loss_full_tables(params, cfg, batch, mesh) -> jax.Array:
+    bags = gather_bags_full(params["tables"], cfg, batch["sparse_ids"], mesh)
+    logit = forward_from_bags(params["mlps"], batch["dense"], bags.astype(batch["dense"].dtype))
+    return bce_loss(logit, batch["label"])

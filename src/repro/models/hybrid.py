@@ -1,0 +1,335 @@
+"""Zamba2-style hybrid LM: groups of mamba2 layers interleaved with a SHARED
+attention block (weights reused at every application, zamba-style concat of
+the original embedding stream), plus a mamba tail.
+
+Structure (cfg.hybrid_*): G groups x m mamba layers, each group followed by
+one application of the shared block; then ``tail`` mamba layers.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+from repro.models import mamba2 as M
+from repro.models import transformer as T
+from repro.parallel import collectives as C
+from repro.parallel.sharding import MeshAxes, shard_dim
+
+
+def _init_shared_block(key, cfg):
+    dt = jnp.dtype(cfg.param_dtype)
+    D, F = cfg.d_model, cfg.d_ff
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    return {
+        "concat_proj": jax.random.normal(k1, (2 * D, D), dt) / math.sqrt(2 * D),
+        "attn_norm": jnp.ones((D,), dt),
+        "attn": L.init_attention(k2, cfg),
+        "mlp_norm": jnp.ones((D,), dt),
+        "mlp": {
+            "w_gate": jax.random.normal(k3, (D, F), dt) / math.sqrt(D),
+            "w_up": jax.random.normal(k4, (D, F), dt) / math.sqrt(D),
+            "w_down": jax.random.normal(k5, (F, D), dt) / math.sqrt(F),
+        },
+    }
+
+
+def _shared_block_specs(cfg, ax: MeshAxes):
+    m = ax.model
+    H, K, hd, F = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim, cfg.d_ff
+    h_ax = m if (H * hd) % ax.model_size == 0 and H % ax.model_size == 0 else None
+    k_ax = m if K % ax.model_size == 0 else None
+    f_ax = shard_dim(ax, F, m)
+    return {
+        "concat_proj": P(None, None),
+        "attn_norm": P(None),
+        "attn": {
+            "wq": P(None, h_ax),
+            "wk": P(None, k_ax),
+            "wv": P(None, k_ax),
+            "wo": P(h_ax, None),
+        },
+        "mlp_norm": P(None),
+        "mlp": {
+            "w_gate": P(None, f_ax),
+            "w_up": P(None, f_ax),
+            "w_down": P(f_ax, None),
+        },
+    }
+
+
+def _shared_forward(cfg, sp, x, x0, positions):
+    """One application of the shared attention block. concat([x,x0]) @ W is
+    computed as x @ W_hi + x0 @ W_lo — identical math, never materializes
+    the (B,S,2D) concat."""
+    D = cfg.d_model
+    u = x @ sp["concat_proj"][:D] + x0 @ sp["concat_proj"][D:]
+    h = L.rms_norm(u, sp["attn_norm"], cfg.norm_eps)
+    x = x + L.attention_forward(sp["attn"], h, positions, cfg)
+    h = L.rms_norm(x, sp["mlp_norm"], cfg.norm_eps)
+    m = sp["mlp"]
+    return x + L.swiglu(h, m["w_gate"], m["w_up"], m["w_down"])
+
+
+def _shared_decode(cfg, sp, x, x0, pos, kc, vc):
+    u = jnp.concatenate([x, x0], axis=-1) @ sp["concat_proj"]
+    h = L.rms_norm(u, sp["attn_norm"], cfg.norm_eps)
+    a, kc, vc = L.attention_decode(sp["attn"], h, pos, kc, vc, cfg)
+    x = x + a
+    h = L.rms_norm(x, sp["mlp_norm"], cfg.norm_eps)
+    m = sp["mlp"]
+    return x + L.swiglu(h, m["w_gate"], m["w_up"], m["w_down"]), kc, vc
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg, key, vocab_pad: int):
+    dt = jnp.dtype(cfg.param_dtype)
+    G, m, tail = cfg.hybrid_groups, cfg.hybrid_layers_per_group, cfg.hybrid_tail_layers
+    ke, kg, kt, ks, kh = jax.random.split(key, 5)
+
+    def group_init(k):
+        return T.stack_init(lambda kk: M.init_mamba_layer(kk, cfg), k, m)
+
+    params = {
+        "embed": jax.random.normal(ke, (vocab_pad, cfg.d_model), dt) * 0.02,
+        "groups": T.stack_init(group_init, kg, G),  # [G, m, ...]
+        "shared": _init_shared_block(ks, cfg),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+        "lm_head": jax.random.normal(kh, (cfg.d_model, vocab_pad), dt) * 0.02,
+    }
+    if tail:
+        params["tail"] = T.stack_init(
+            lambda kk: M.init_mamba_layer(kk, cfg), kt, tail
+        )
+    return params
+
+
+def param_specs(cfg, ax: MeshAxes, vocab_pad: int):
+    v_ax = shard_dim(ax, vocab_pad, ax.model)
+    sp = {
+        "embed": P(v_ax, None),
+        "groups": M.mamba_layer_specs(cfg, ax, extra_leading=2),
+        "shared": _shared_block_specs(cfg, ax),
+        "final_norm": P(None),
+        "lm_head": P(None, v_ax),
+    }
+    if cfg.hybrid_tail_layers:
+        sp["tail"] = M.mamba_layer_specs(cfg, ax, extra_leading=1)
+    return sp
+
+
+def _run_mamba_stack(cfg, stack, x):
+    def body(h, lp):
+        out, _ = M.mamba_layer_forward(cfg, lp, h)
+        return out, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = lax.scan(body, x, stack, unroll=cfg.unroll_scans or 1)
+    return x
+
+
+def forward_hidden(params, cfg, batch, mesh):
+    x0 = T.embed_tokens(params, cfg, batch["tokens"], mesh)
+    B, S, _ = x0.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    shared = params["shared"]
+
+    def group_body(h, gp):
+        h = _run_mamba_stack(cfg, gp, h)
+        h = _shared_forward(cfg, shared, h, x0, positions)
+        return h, None
+
+    if cfg.remat:
+        group_body = jax.checkpoint(group_body)
+    x, _ = lax.scan(group_body, x0, params["groups"], unroll=cfg.unroll_scans or 1)
+    if cfg.hybrid_tail_layers:
+        x = _run_mamba_stack(cfg, params["tail"], x)
+    return L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def loss_fn(params, cfg, batch, mesh):
+    x = forward_hidden(params, cfg, batch, mesh)
+    return C.sharded_xent_loss(
+        x,
+        params["lm_head"].astype(x.dtype),
+        batch["labels"],
+        batch.get("loss_mask"),
+        true_vocab=cfg.vocab_size,
+        unroll=cfg.unroll_scans,
+        seq_chunk=cfg.xent_chunk,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Decode: mamba states per layer + KV cache per shared-block application
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg, batch_size: int, seq_len: int):
+    G, m, tail = cfg.hybrid_groups, cfg.hybrid_layers_per_group, cfg.hybrid_tail_layers
+    dt = jnp.dtype(cfg.compute_dtype)
+    kv_shape = (G, batch_size, seq_len, cfg.num_kv_heads, cfg.head_dim)
+    cache = {
+        "groups": M.init_mamba_state(cfg, batch_size, lead=(G, m)),
+        "k": jnp.zeros(kv_shape, dt),
+        "v": jnp.zeros(kv_shape, dt),
+        "x0": jnp.zeros((batch_size, 1, cfg.d_model), dt),
+    }
+    if tail:
+        cache["tail"] = M.init_mamba_state(cfg, batch_size, lead=(tail,))
+    return cache
+
+
+def cache_spec(cfg, ax: MeshAxes, batch_size: int, seq_len: int):
+    dp = ax.data if len(ax.data) > 1 else ax.data[0]
+    b_ax = dp if batch_size % ax.data_size == 0 else None
+    if cfg.num_kv_heads % ax.model_size == 0:
+        kv = P(None, b_ax, None, ax.model, None)
+    elif seq_len % ax.model_size == 0:
+        kv = P(None, b_ax, ax.model, None, None)
+    else:
+        kv = P(None, b_ax, None, None, None)
+    sp = {
+        "groups": M.mamba_state_specs(cfg, ax, batch_size, n_lead=2),
+        "k": kv,
+        "v": kv,
+        "x0": P(b_ax, None, None),
+    }
+    if cfg.hybrid_tail_layers:
+        sp["tail"] = M.mamba_state_specs(cfg, ax, batch_size, n_lead=1)
+    return sp
+
+
+def prefill(params, cfg, batch, mesh):
+    """Forward over the prompt collecting shared-block KV caches (per group
+    application) and final mamba states."""
+    x0 = T.embed_tokens(params, cfg, batch["tokens"], mesh)
+    B, S, _ = x0.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    shared = params["shared"]
+
+    def mamba_collect(h, stack):
+        def body(hh, lp):
+            out, h_fin = M.mamba_layer_forward(cfg, lp, hh)
+            hn = L.rms_norm(hh, lp["norm"], cfg.norm_eps)
+            tail_in = hn[:, -(cfg.ssm_conv - 1) :]
+            st = {
+                "conv_x": jnp.einsum("bsd,de->bse", tail_in, lp["wx"]),
+                "conv_B": jnp.einsum("bsd,de->bse", tail_in, lp["wB"]),
+                "conv_C": jnp.einsum("bsd,de->bse", tail_in, lp["wC"]),
+                "ssm": h_fin,
+            }
+            return out, st
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        return lax.scan(body, h, stack, unroll=cfg.unroll_scans or 1)
+
+    def group_body(h, gp):
+        h, st = mamba_collect(h, gp)
+        u = jnp.concatenate([h, x0], axis=-1) @ shared["concat_proj"]
+        hn = L.rms_norm(u, shared["attn_norm"], cfg.norm_eps)
+        p = shared["attn"]
+        H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+        q = (hn @ p["wq"]).reshape(B, S, H, hd)
+        k = (hn @ p["wk"]).reshape(B, S, K, hd)
+        v = (hn @ p["wv"]).reshape(B, S, K, hd)
+        q = L.apply_rope(q, positions, cfg.rope_theta, cfg.rope_fraction)
+        k = L.apply_rope(k, positions, cfg.rope_theta, cfg.rope_fraction)
+        o = L.chunked_attention(
+            q, k, v, causal=cfg.causal, block_kv=cfg.attn_block_kv
+        )
+        h = h + jnp.einsum("bsh,hd->bsd", o.reshape(B, S, H * hd), p["wo"])
+        hn = L.rms_norm(h, shared["mlp_norm"], cfg.norm_eps)
+        m = shared["mlp"]
+        h = h + L.swiglu(hn, m["w_gate"], m["w_up"], m["w_down"])
+        return h, (st, k, v)
+
+    if cfg.remat:
+        group_body = jax.checkpoint(group_body)
+    x, (gstates, kc, vc) = lax.scan(group_body, x0, params["groups"], unroll=cfg.unroll_scans or 1)
+    cache = {"groups": gstates, "k": kc, "v": vc, "x0": x0[:, -1:]}
+    if cfg.hybrid_tail_layers:
+        x, tstates = mamba_collect(x, params["tail"])
+        cache["tail"] = tstates
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = C.sharded_logits(
+        x[:, -1], params["lm_head"].astype(x.dtype), cfg.vocab_size
+    )
+    return logits, cache
+
+
+def decode_step(params, cfg, cache, tokens, pos, mesh):
+    x0 = T.embed_tokens(params, cfg, tokens, mesh)
+    shared = params["shared"]
+    G = cfg.hybrid_groups
+
+    def mamba_sub(h, stack, states):
+        n = jax.tree.leaves(stack)[0].shape[0]
+
+        def body(carry, xs):
+            hh, st = carry
+            lp, i = xs
+            st_i = jax.tree.map(
+                lambda a: lax.dynamic_index_in_dim(a, i, 0, False), st
+            )
+            hh, st_new = M.mamba_layer_decode(cfg, lp, hh, st_i)
+            st = jax.tree.map(
+                lambda a, nw: lax.dynamic_update_index_in_dim(
+                    a, nw.astype(a.dtype), i, 0
+                ),
+                st,
+                st_new,
+            )
+            return (hh, st), None
+
+        (h, states), _ = lax.scan(body, (h, states), (stack, jnp.arange(n)), unroll=cfg.unroll_scans or 1)
+        return h, states
+
+    def group_body(carry, xs):
+        h, gst, kc, vc = carry
+        gp, gstate_idx = xs
+        st_g = jax.tree.map(
+            lambda a: lax.dynamic_index_in_dim(a, gstate_idx, 0, False), gst
+        )
+        h, st_g = mamba_sub(h, gp, st_g)
+        gst = jax.tree.map(
+            lambda a, nw: lax.dynamic_update_index_in_dim(
+                a, nw.astype(a.dtype), gstate_idx, 0
+            ),
+            gst,
+            st_g,
+        )
+        ki = lax.dynamic_index_in_dim(kc, gstate_idx, 0, False)
+        vi = lax.dynamic_index_in_dim(vc, gstate_idx, 0, False)
+        h, ki, vi = _shared_decode(cfg, shared, h, x0, pos, ki, vi)
+        kc = lax.dynamic_update_index_in_dim(kc, ki.astype(kc.dtype), gstate_idx, 0)
+        vc = lax.dynamic_update_index_in_dim(vc, vi.astype(vc.dtype), gstate_idx, 0)
+        return (h, gst, kc, vc), None
+
+    (x, gst, kc, vc), _ = lax.scan(
+        group_body,
+        (x0, cache["groups"], cache["k"], cache["v"]),
+        (params["groups"], jnp.arange(G)),
+        unroll=cfg.unroll_scans or 1,
+    )
+    new_cache = dict(cache, groups=gst, k=kc, v=vc, x0=x0)
+    if cfg.hybrid_tail_layers:
+        x, tst = mamba_sub(x, params["tail"], cache["tail"])
+        new_cache["tail"] = tst
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = C.sharded_logits(
+        x[:, 0], params["lm_head"].astype(x.dtype), cfg.vocab_size
+    )
+    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    return nxt, new_cache

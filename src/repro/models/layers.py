@@ -1,0 +1,296 @@
+"""Shared building blocks: norms, RoPE, GQA attention (train/prefill/decode),
+SwiGLU/GELU MLPs. Pure-JAX implementations that lower on any backend; the
+Pallas kernels in ``repro.kernels`` are drop-in replacements on TPU
+(``cfg.use_pallas``).
+
+Dtype policy: params in cfg.param_dtype, activations in cfg.compute_dtype,
+softmax/norm statistics and matmul accumulation in fp32.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * lax.rsqrt(var + eps)).astype(x.dtype) * w.astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, w: jax.Array, b: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * w.astype(x.dtype) + b.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (split-half convention; ``fraction`` < 1 rotates a dim prefix only)
+# ---------------------------------------------------------------------------
+
+
+def apply_rope(
+    x: jax.Array, positions: jax.Array, theta: float, fraction: float = 1.0
+) -> jax.Array:
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    if theta <= 0.0:
+        return x
+    hd = x.shape[-1]
+    rot = int(hd * fraction)
+    rot -= rot % 2
+    xr, xp = x[..., :rot], x[..., rot:]
+    half = rot // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = xr[..., :half].astype(jnp.float32), xr[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), xp], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Chunked (flash-style) attention — train & prefill
+# ---------------------------------------------------------------------------
+
+
+def chunked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    block_kv: int = 1024,
+    q_offset: int = 0,
+    unroll: bool = False,
+) -> jax.Array:
+    """Online-softmax attention, scanned over KV blocks (never materializes
+    the (Sq, Skv) score matrix).
+
+    q: (B, Sq, H, hd); k, v: (B, Skv, K, hd) with H % K == 0. KV heads are
+    repeated to H inside (flops-identical; keeps the head dim cleanly
+    TP-shardable — grouped (K, G) reshapes of a sharded flat dim do not
+    partition).
+    """
+    B, Sq, H, hd = q.shape
+    Skv, K = k.shape[1], k.shape[2]
+    G = H // K
+    scale = 1.0 / math.sqrt(hd)
+    bkv = min(block_kv, Skv)
+    n_blocks = (Skv + bkv - 1) // bkv
+    pad = n_blocks * bkv - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+
+    q_pos = q_offset + jnp.arange(Sq)
+    kb = k.reshape(B, n_blocks, bkv, H, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, n_blocks, bkv, H, hd).transpose(1, 0, 2, 3, 4)
+
+    def body(carry, blk):
+        m, denom, acc = carry
+        k_blk, v_blk, j = blk  # (B, bkv, H, hd), scalar block index
+        s = jnp.einsum(
+            "bqhd,bjhd->bhqj", q, k_blk, preferred_element_type=jnp.float32
+        ) * scale
+        kv_pos = j * bkv + jnp.arange(bkv)
+        valid = jnp.broadcast_to((kv_pos < Skv)[None, :], (Sq, bkv))
+        if causal:
+            valid = valid & (kv_pos[None, :] <= q_pos[:, None])
+        if window is not None:
+            valid = valid & (q_pos[:, None] - kv_pos[None, :] < window)
+        mask = valid[None, None, :, :]  # (1,1,Sq,bkv)
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None]) * mask.astype(jnp.float32)
+        alpha = jnp.exp(m - m_new)
+        denom = denom * alpha + jnp.sum(p, axis=-1)
+        pv = jnp.einsum(
+            "bhqj,bjhd->bhqd", p.astype(v_blk.dtype), v_blk,
+            preferred_element_type=jnp.float32,
+        )
+        acc = acc * alpha[..., None] + pv
+        return (m_new, denom, acc), None
+
+    m0 = jnp.full((B, H, Sq), NEG_INF, jnp.float32)
+    d0 = jnp.zeros((B, H, Sq), jnp.float32)
+    a0 = jnp.zeros((B, H, Sq, hd), jnp.float32)
+    (m, denom, acc), _ = lax.scan(
+        body, (m0, d0, a0), (kb, vb, jnp.arange(n_blocks)), unroll=unroll or 1
+    )
+    out = acc / jnp.maximum(denom[..., None], 1e-30)
+    out = out.transpose(0, 2, 1, 3).reshape(B, Sq, H, hd)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention (one query token vs a cache)
+# ---------------------------------------------------------------------------
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    pos: jax.Array,
+    *,
+    rolling: bool = False,
+) -> jax.Array:
+    """q: (B, 1, H, hd); caches: (B, S, K, hd); pos: scalar int32 = index of
+    the token *just written*. RoPE is applied before caching, so no positions
+    are needed here. ``rolling=True`` -> sliding-window ring buffer of size S.
+    """
+    B, _, H, hd = q.shape
+    S, K = k_cache.shape[1], k_cache.shape[2]
+    G = H // K
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, K, G, hd)
+    s = jnp.einsum(
+        "bkgd,bjkd->bkgj", qg, k_cache, preferred_element_type=jnp.float32
+    ) * scale
+    slots = jnp.arange(S)
+    n_valid = jnp.minimum(pos + 1, S) if rolling else pos + 1
+    valid = slots < n_valid
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum(
+        "bkgj,bjkd->bkgd", p.astype(v_cache.dtype), v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def cache_write(
+    cache: jax.Array, new: jax.Array, pos: jax.Array, *, rolling: bool = False
+) -> jax.Array:
+    """Write one token (B, 1, K, hd) into (B, S, K, hd) at ``pos`` (ring slot
+    ``pos % S`` when rolling)."""
+    S = cache.shape[1]
+    slot = (pos % S) if rolling else pos
+    return lax.dynamic_update_slice_in_dim(cache, new.astype(cache.dtype), slot, 1)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def swiglu(x, wg, wu, wd):
+    h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, wg)) * jnp.einsum(
+        "bsd,df->bsf", x, wu
+    )
+    return jnp.einsum("bsf,fd->bsd", h, wd)
+
+
+def gelu_mlp(x, w1, b1, w2, b2):
+    h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, w1) + b1)
+    return jnp.einsum("bsf,fd->bsd", h, w2) + b2
+
+
+# ---------------------------------------------------------------------------
+# Attention block (projection + rope + core + output projection)
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg, d_in: Optional[int] = None, dtype=None):
+    """Params for one attention block. Heads are padded up to a multiple of
+    the TP width at *init spec* time via cfg.padded_heads (see api.py)."""
+    D = d_in or cfg.d_model
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    dt = dtype or jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    std = 1.0 / math.sqrt(D)
+    p = {
+        "wq": jax.random.normal(ks[0], (D, H * hd), dt) * std,
+        "wk": jax.random.normal(ks[1], (D, K * hd), dt) * std,
+        "wv": jax.random.normal(ks[2], (D, K * hd), dt) * std,
+        "wo": jax.random.normal(ks[3], (H * hd, cfg.d_model), dt)
+        * (1.0 / math.sqrt(H * hd)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dt)
+        p["bk"] = jnp.zeros((K * hd,), dt)
+        p["bv"] = jnp.zeros((K * hd,), dt)
+    return p
+
+
+def attention_forward(
+    p,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg,
+    *,
+    x_kv: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Train/prefill attention. x: (B, S, D)."""
+    B, S, _ = x.shape
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    xkv = x if x_kv is None else x_kv
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"])
+    k = jnp.einsum("bsd,dh->bsh", xkv, p["wk"])
+    v = jnp.einsum("bsd,dh->bsh", xkv, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, K, hd)
+    v = v.reshape(B, S, K, hd)
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.rope_fraction)
+    k = apply_rope(k, positions, cfg.rope_theta, cfg.rope_fraction)
+    out = chunked_attention(
+        q,
+        k,
+        v,
+        causal=cfg.causal,
+        window=cfg.sliding_window,
+        block_kv=cfg.attn_block_kv,
+        unroll=cfg.unroll_scans,
+    )
+    return jnp.einsum("bsh,hd->bsd", out.reshape(B, S, H * hd), p["wo"])
+
+
+def attention_decode(
+    p,
+    x: jax.Array,
+    pos: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    cfg,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode. x: (B, 1, D); caches (B, S, K, hd); pos scalar.
+    Returns (out, new_k_cache, new_v_cache)."""
+    B = x.shape[0]
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    rolling = cfg.sliding_window is not None
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"])
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"])
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, 1, H, hd)
+    k = k.reshape(B, 1, K, hd)
+    v = v.reshape(B, 1, K, hd)
+    posb = jnp.broadcast_to(pos[None, None], (B, 1))
+    q = apply_rope(q, posb, cfg.rope_theta, cfg.rope_fraction)
+    k = apply_rope(k, posb, cfg.rope_theta, cfg.rope_fraction)
+    k_cache = cache_write(k_cache, k, pos, rolling=rolling)
+    v_cache = cache_write(v_cache, v, pos, rolling=rolling)
+    out = decode_attention(q, k_cache, v_cache, pos, rolling=rolling)
+    out = jnp.einsum("bsh,hd->bsd", out.reshape(B, 1, H * hd), p["wo"])
+    return out, k_cache, v_cache

@@ -1,0 +1,313 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) in pure JAX.
+
+Chunked SSD: within a chunk the recurrence is evaluated as a masked
+"attention-like" quadratic form (C_i·B_j with segment decay); across chunks a
+sequential lax.scan carries the (heads, headdim, dstate) state. All decay
+exponents are <= 0 so exp() is numerically safe without max-subtraction.
+
+TP sharding: x/z inner projections and heads shard over "model" (the flat
+d_inner dim is head-aligned); B/C/dt projections are small and replicated.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+from repro.parallel.sharding import MeshAxes
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv (width ssm_conv, unrolled shifts)
+# ---------------------------------------------------------------------------
+
+
+def causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """x: (B, S, C); w: (K, C); left-padded causal depthwise conv."""
+    K = w.shape[0]
+    S = x.shape[1]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    y = sum(w[i] * lax.dynamic_slice_in_dim(xp, i, S, axis=1) for i in range(K))
+    return y + b
+
+
+def conv_step(state: jax.Array, xt: jax.Array, w: jax.Array, b: jax.Array):
+    """state: (B, K-1, C) last inputs; xt: (B, C). Returns (y (B,C), state)."""
+    K = w.shape[0]
+    window = jnp.concatenate([state, xt[:, None]], axis=1)  # (B, K, C)
+    y = jnp.einsum("bkc,kc->bc", window, w) + b
+    return y, window[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+
+def ssd_scan(
+    x: jax.Array,  # (B, S, nh, hd)
+    dt: jax.Array,  # (B, S, nh) fp32, post-softplus
+    A: jax.Array,  # (nh,) fp32, negative
+    Bm: jax.Array,  # (B, S, ng, ds)
+    Cm: jax.Array,  # (B, S, ng, ds)
+    chunk: int,
+    h0=None,
+    unroll: bool = False,
+    low_prec: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B, S, nh, hd), h_final (B, nh, hd, ds))."""
+    Bt, S, nh, hd = x.shape
+    ng, ds = Bm.shape[2], Bm.shape[3]
+    hpg = nh // ng
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = S + pad
+    nc = Sp // Q
+
+    # chunked views, group-major head layout (B, nc, Q, ng, hpg, ...)
+    xg = x.reshape(Bt, nc, Q, ng, hpg, hd)
+    dtg = dt.reshape(Bt, nc, Q, ng, hpg)
+    Bg = Bm.reshape(Bt, nc, Q, ng, ds)
+    Cg = Cm.reshape(Bt, nc, Q, ng, ds)
+    Ag = A.reshape(ng, hpg)
+
+    tri = jnp.tril(jnp.ones((Q, Q), jnp.float32))  # i >= j
+
+    def chunk_body(h, inp):
+        xc, dtc, Bc, Cc = inp  # (B,Q,ng,hpg,hd) (B,Q,ng,hpg) (B,Q,ng,ds) x2
+        a = dtc * Ag  # (B,Q,ng,hpg), <= 0
+        cum = jnp.cumsum(a, axis=1)  # inclusive
+        total = cum[:, -1]  # (B,ng,hpg)
+
+        # intra-chunk quadratic form. The i<j exponent is positive and would
+        # overflow -> mask inside the exp (tri masking after would give inf*0).
+        G = jnp.einsum("bigs,bjgs->bgij", Cc, Bc, preferred_element_type=jnp.float32)
+        expo = cum[:, :, None] - cum[:, None, :]  # (B,i,j,ng,hpg)
+        trib = tri[None, :, :, None, None]
+        decay = jnp.exp(jnp.where(trib > 0, expo, -jnp.inf))
+        w_ij = decay * dtc[:, None, :]
+        lp = jnp.bfloat16 if low_prec else jnp.float32
+        # s: (B,ng,i,j,hpg) = G (B,ng,i,j,1) * w_ij -> (B,ng,i,j,hpg)
+        # decay in (0,1] and G ~O(ds): bf16 storage is safe; the y_intra
+        # contraction still accumulates in fp32.
+        s = G.astype(lp)[:, :, :, :, None] * w_ij.transpose(0, 3, 1, 2, 4).astype(lp)
+        y_intra = jnp.einsum(
+            "bgijn,bjgnd->bignd", s, xc.astype(lp),
+            preferred_element_type=jnp.float32,
+        )
+
+        # inter-chunk: contribution of the incoming state
+        y_inter = jnp.einsum(
+            "bigs,bgnds->bignd", Cc, h, preferred_element_type=jnp.float32
+        ) * jnp.exp(cum)[..., None]
+
+        # state update
+        wj = jnp.exp(total[:, None] - cum) * dtc  # (B,Q,ng,hpg)
+        h_new = h * jnp.exp(total)[..., None, None] + jnp.einsum(
+            "bjgs,bjgnd,bjgn->bgnds", Bc, xc, wj, preferred_element_type=jnp.float32
+        )
+        return h_new, (y_intra + y_inter).astype(x.dtype)
+
+    if h0 is None:
+        h0 = jnp.zeros((Bt, ng, hpg, hd, ds), jnp.float32)
+    xs = (
+        xg.transpose(1, 0, 2, 3, 4, 5),
+        dtg.transpose(1, 0, 2, 3, 4),
+        Bg.transpose(1, 0, 2, 3, 4),
+        Cg.transpose(1, 0, 2, 3, 4),
+    )
+    h_final, ys = lax.scan(chunk_body, h0, xs, unroll=unroll or 1)
+    y = ys.transpose(1, 0, 2, 3, 4, 5).reshape(Bt, Sp, nh, hd)[:, :S]
+    return y, h_final.reshape(Bt, nh, hd, ds)
+
+
+def ssd_step(
+    h: jax.Array,  # (B, nh, hd, ds) fp32
+    xt: jax.Array,  # (B, nh, hd)
+    dtt: jax.Array,  # (B, nh) fp32
+    A: jax.Array,  # (nh,)
+    Bt_: jax.Array,  # (B, ng, ds)
+    Ct_: jax.Array,  # (B, ng, ds)
+) -> Tuple[jax.Array, jax.Array]:
+    """Single-token SSD recurrence. Returns (y (B,nh,hd), h_new)."""
+    nh = xt.shape[1]
+    ng = Bt_.shape[1]
+    hpg = nh // ng
+    Bh = jnp.repeat(Bt_, hpg, axis=1)  # (B, nh, ds)
+    Ch = jnp.repeat(Ct_, hpg, axis=1)
+    decay = jnp.exp(dtt * A[None, :])  # (B, nh)
+    h_new = h * decay[..., None, None] + jnp.einsum(
+        "bns,bnd,bn->bnds", Bh, xt, dtt, preferred_element_type=jnp.float32
+    )
+    y = jnp.einsum("bnds,bns->bnd", h_new, Ch, preferred_element_type=jnp.float32)
+    return y.astype(xt.dtype), h_new
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block (layer)
+# ---------------------------------------------------------------------------
+
+
+def init_mamba_layer(key, cfg):
+    dt_ = jnp.dtype(cfg.param_dtype)
+    D, din = cfg.d_model, cfg.d_inner
+    nh, ng, ds, K = cfg.ssm_nheads, cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_conv
+    ks = jax.random.split(key, 8)
+    std = 1.0 / math.sqrt(D)
+    return {
+        "norm": jnp.ones((D,), dt_),
+        "wz": jax.random.normal(ks[0], (D, din), dt_) * std,
+        "wx": jax.random.normal(ks[1], (D, din), dt_) * std,
+        "wB": jax.random.normal(ks[2], (D, ng * ds), dt_) * std,
+        "wC": jax.random.normal(ks[3], (D, ng * ds), dt_) * std,
+        "wdt": jax.random.normal(ks[4], (D, nh), dt_) * std,
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "A_log": jnp.log(
+            jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)
+        ),  # A in [-16,-1]
+        "D_skip": jnp.ones((nh,), jnp.float32),
+        "conv_wx": jax.random.normal(ks[5], (K, din), dt_) / math.sqrt(K),
+        "conv_bx": jnp.zeros((din,), dt_),
+        "conv_wB": jax.random.normal(ks[6], (K, ng * ds), dt_) / math.sqrt(K),
+        "conv_bB": jnp.zeros((ng * ds,), dt_),
+        "conv_wC": jax.random.normal(ks[7], (K, ng * ds), dt_) / math.sqrt(K),
+        "conv_bC": jnp.zeros((ng * ds,), dt_),
+        "out_norm": jnp.ones((din,), dt_),
+        "wo": jax.random.normal(ks[4], (din, D), dt_) / math.sqrt(din),
+    }
+
+
+def mamba_layer_specs(cfg, ax: MeshAxes, extra_leading: int = 1):
+    """Specs with ``extra_leading`` stacked dims (L, or G,m for hybrid)."""
+    m = ax.model
+    tp = ax.model_size
+    din_ax = m if cfg.d_inner % tp == 0 else None
+    nh_ax = m if cfg.ssm_nheads % tp == 0 else None
+    lead = (None,) * extra_leading
+    sp = {
+        "norm": P(*lead, None),
+        "wz": P(*lead, None, din_ax),
+        "wx": P(*lead, None, din_ax),
+        "wB": P(*lead, None, None),
+        "wC": P(*lead, None, None),
+        "wdt": P(*lead, None, nh_ax),
+        "dt_bias": P(*lead, nh_ax),
+        "A_log": P(*lead, nh_ax),
+        "D_skip": P(*lead, nh_ax),
+        "conv_wx": P(*lead, None, din_ax),
+        "conv_bx": P(*lead, din_ax),
+        "conv_wB": P(*lead, None, None),
+        "conv_bB": P(*lead, None),
+        "conv_wC": P(*lead, None, None),
+        "conv_bC": P(*lead, None),
+        "out_norm": P(*lead, din_ax),
+        "wo": P(*lead, din_ax, None),
+    }
+    return sp
+
+
+def mamba_layer_forward(cfg, p, x, h0=None):
+    """x: (B, S, D). Returns (x_out, h_final)."""
+    B, S, D = x.shape
+    nh, ng, ds = cfg.ssm_nheads, cfg.ssm_ngroups, cfg.ssm_state
+    hd = cfg.ssm_headdim
+    h = L.rms_norm(x, p["norm"], cfg.norm_eps)
+    z = jnp.einsum("bsd,de->bse", h, p["wz"])
+    xi = jnp.einsum("bsd,de->bse", h, p["wx"])
+    Bc = jnp.einsum("bsd,de->bse", h, p["wB"])
+    Cc = jnp.einsum("bsd,de->bse", h, p["wC"])
+    dt_raw = jnp.einsum("bsd,dn->bsn", h, p["wdt"]).astype(jnp.float32)
+
+    xi = jax.nn.silu(causal_conv(xi, p["conv_wx"], p["conv_bx"]))
+    Bc = jax.nn.silu(causal_conv(Bc, p["conv_wB"], p["conv_bB"]))
+    Cc = jax.nn.silu(causal_conv(Cc, p["conv_wC"], p["conv_bC"]))
+
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = xi.reshape(B, S, nh, hd)
+    y, h_fin = ssd_scan(
+        xh,
+        dt,
+        A,
+        Bc.reshape(B, S, ng, ds).astype(jnp.float32),
+        Cc.reshape(B, S, ng, ds).astype(jnp.float32),
+        cfg.ssm_chunk,
+        h0=h0,
+        unroll=cfg.unroll_scans,
+        low_prec=cfg.ssd_bf16,
+    )
+    y = y + p["D_skip"][None, None, :, None].astype(y.dtype) * xh
+    y = y.reshape(B, S, cfg.d_inner)
+    y = L.rms_norm(y * jax.nn.silu(z), p["out_norm"], cfg.norm_eps)
+    return x + jnp.einsum("bse,ed->bsd", y, p["wo"]), h_fin
+
+
+def mamba_layer_decode(cfg, p, x, state):
+    """x: (B, 1, D); state = {"conv_x","conv_B","conv_C","ssm"}. Returns
+    (x_out, new_state)."""
+    B = x.shape[0]
+    nh, ng, ds, hd = cfg.ssm_nheads, cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_headdim
+    h = L.rms_norm(x[:, 0], p["norm"], cfg.norm_eps)  # (B, D)
+    z = h @ p["wz"]
+    xi = h @ p["wx"]
+    Bc = h @ p["wB"]
+    Cc = h @ p["wC"]
+    dt_raw = (h @ p["wdt"]).astype(jnp.float32)
+
+    xi, cx = conv_step(state["conv_x"], xi, p["conv_wx"], p["conv_bx"])
+    Bc, cB = conv_step(state["conv_B"], Bc, p["conv_wB"], p["conv_bB"])
+    Cc, cC = conv_step(state["conv_C"], Cc, p["conv_wC"], p["conv_bC"])
+    xi, Bc, Cc = jax.nn.silu(xi), jax.nn.silu(Bc), jax.nn.silu(Cc)
+
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, ssm = ssd_step(
+        state["ssm"],
+        xi.reshape(B, nh, hd),
+        dt,
+        A,
+        Bc.reshape(B, ng, ds).astype(jnp.float32),
+        Cc.reshape(B, ng, ds).astype(jnp.float32),
+    )
+    y = y + p["D_skip"][None, :, None].astype(y.dtype) * xi.reshape(B, nh, hd)
+    y = y.reshape(B, cfg.d_inner)
+    y = L.rms_norm(y * jax.nn.silu(z), p["out_norm"], cfg.norm_eps)
+    out = x + (y @ p["wo"])[:, None]
+    return out, {"conv_x": cx, "conv_B": cB, "conv_C": cC, "ssm": ssm}
+
+
+def init_mamba_state(cfg, batch: int, lead: Tuple[int, ...] = ()):
+    K = cfg.ssm_conv
+    nh, ng, ds, hd = cfg.ssm_nheads, cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_headdim
+    dt_ = jnp.dtype(cfg.compute_dtype)
+    return {
+        "conv_x": jnp.zeros(lead + (batch, K - 1, cfg.d_inner), dt_),
+        "conv_B": jnp.zeros(lead + (batch, K - 1, ng * ds), dt_),
+        "conv_C": jnp.zeros(lead + (batch, K - 1, ng * ds), dt_),
+        "ssm": jnp.zeros(lead + (batch, nh, hd, ds), jnp.float32),
+    }
+
+
+def mamba_state_specs(cfg, ax: MeshAxes, batch: int, n_lead: int = 1):
+    dp = ax.data if len(ax.data) > 1 else ax.data[0]
+    b_ax = dp if batch % ax.data_size == 0 else None
+    tp = ax.model_size
+    din_ax = ax.model if cfg.d_inner % tp == 0 else None
+    nh_ax = ax.model if cfg.ssm_nheads % tp == 0 else None
+    lead = (None,) * n_lead
+    return {
+        "conv_x": P(*lead, b_ax, None, din_ax),
+        "conv_B": P(*lead, b_ax, None, None),
+        "conv_C": P(*lead, b_ax, None, None),
+        "ssm": P(*lead, b_ax, nh_ax, None, None),
+    }

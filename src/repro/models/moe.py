@@ -1,0 +1,137 @@
+"""Mixture-of-Experts FFN (mixtral / llama4-scout families).
+
+Sort-based capacity dispatch (GShard-style, but scatter/gather instead of a
+dense (T, E, C) one-hot so memory stays O(T·k·D)), executed inside shard_map:
+tokens stay on their data shard, expert FFN inner dim is TP-sharded on
+"model", and only the (T, D) combined output is psum'd — i.e. the same
+activation all-reduce a dense TP FFN performs.
+
+Router top-k gates use the mixtral convention (softmax over the selected
+logits). Aux load-balance loss (Switch): E * sum_e f_e * p_e.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+CAPACITY_FACTOR = 1.25
+AUX_WEIGHT = 0.01
+
+
+def _dp_axes(mesh) -> Tuple[str, ...]:
+    return tuple(n for n in mesh.axis_names if n in ("pod", "data"))
+
+
+def init_moe_mlp(key, cfg):
+    dt = jnp.dtype(cfg.param_dtype)
+    D, F, E = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    return {
+        "router": jax.random.normal(kr, (D, E), dt) * 0.02,
+        "wg": jax.random.normal(kg, (E, D, F), dt) / math.sqrt(D),
+        "wu": jax.random.normal(ku, (E, D, F), dt) / math.sqrt(D),
+        "wd": jax.random.normal(kd, (E, F, D), dt) / math.sqrt(F),
+    }
+
+
+def moe_mlp_specs(cfg, ax):
+    """Leading [L] dim included (stacked layers). Expert inner dim on model;
+    with cfg.fsdp the d_model dim additionally shards over the data axes
+    (the shard_map re-gathers one layer's experts per scan step)."""
+    m = ax.model
+    f_ax = m if cfg.moe_d_ff % ax.model_size == 0 else None
+    dp = ax.data if len(ax.data) > 1 else ax.data[0]
+    dp_sz = ax.data_size
+    d_ax = dp if (cfg.fsdp and cfg.d_model % dp_sz == 0) else None
+    return {
+        "router": P(None, None, None),
+        "wg": P(None, None, d_ax, f_ax),
+        "wu": P(None, None, d_ax, f_ax),
+        "wd": P(None, None, f_ax, d_ax),
+    }
+
+
+def _capacity(tokens: int, cfg) -> int:
+    factor = getattr(cfg, 'moe_capacity_factor', CAPACITY_FACTOR)
+    c = int(math.ceil(tokens * cfg.num_experts_per_tok / cfg.num_experts * factor))
+    return max(8, -(-c // 8) * 8)  # round up to a multiple of 8
+
+
+def moe_ffn(cfg, p, x: jax.Array, mesh) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (out (B, S, D), aux_loss scalar)."""
+    B, S, D = x.shape
+    E, k = cfg.num_experts, cfg.num_experts_per_tok
+    dp = _dp_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= int(mesh.shape[a])
+    sharded_b = B % dp_size == 0
+    b_local = B // dp_size if sharded_b else B
+    cap = _capacity(b_local * S, cfg)
+
+    def local(xl, router, wg, wu, wd):
+        b, s, _ = xl.shape
+        T = b * s
+        xf = xl.reshape(T, D)
+        logits = jnp.einsum(
+            "td,de->te", xf, router, preferred_element_type=jnp.float32
+        )
+        glog, idx = lax.top_k(logits, k)  # (T, k)
+        gates = jax.nn.softmax(glog, axis=-1)
+
+        flat_e = idx.reshape(-1)  # (T*k,) row-major: token-major order
+        order = jnp.argsort(flat_e, stable=True)
+        sorted_e = flat_e[order]
+        starts = jnp.searchsorted(sorted_e, jnp.arange(E))
+        rank = jnp.arange(T * k) - starts[sorted_e]
+        keep = rank < cap
+        tok = order // k
+
+        e_idx = jnp.where(keep, sorted_e, 0)
+        r_idx = jnp.where(keep, rank, cap - 1)
+        buf = jnp.zeros((E, cap, D), xf.dtype)
+        buf = buf.at[e_idx, r_idx].add(
+            jnp.where(keep[:, None], xf[tok], jnp.zeros((), xf.dtype))
+        )
+
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, wg)) * jnp.einsum(
+            "ecd,edf->ecf", buf, wu
+        )
+        y = jnp.einsum("ecf,efd->ecd", h, wd)  # partial over sharded F
+
+        contrib = y[e_idx, r_idx].astype(jnp.float32)
+        gate_flat = gates.reshape(-1)[order]
+        w = jnp.where(keep, gate_flat, 0.0)
+        out = jnp.zeros((T, D), jnp.float32).at[tok].add(contrib * w[:, None])
+        out = lax.psum(out, "model").astype(xl.dtype).reshape(b, s, D)
+
+        # Switch aux loss: fraction routed * mean prob, summed over experts.
+        probs = jax.nn.softmax(logits, axis=-1)
+        pe = jnp.mean(probs, axis=0)
+        fe = jnp.mean(
+            jnp.sum(jax.nn.one_hot(idx, E, dtype=jnp.float32), axis=1), axis=0
+        )
+        aux = E * jnp.sum(pe * fe)
+        if dp:
+            aux = lax.pmean(aux, dp)
+        return out, aux
+
+    dspec = (dp if len(dp) > 1 else (dp[0] if dp else None)) if sharded_b else None
+    out, aux = jax.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(
+            P(dspec, None, None),
+            P(None, None),
+            P(None, None, "model"),
+            P(None, None, "model"),
+            P(None, "model", None),
+        ),
+        out_specs=(P(dspec, None, None), P()),
+    )(x, p["router"], p["wg"], p["wu"], p["wd"])
+    return out, AUX_WEIGHT * aux

@@ -1,0 +1,138 @@
+"""Mamba2 LM (attention-free): embedding + stacked mamba2 blocks + tied head."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+from repro.models import mamba2 as M
+from repro.models import transformer as T
+from repro.parallel import collectives as C
+from repro.parallel.sharding import MeshAxes, shard_dim
+
+
+def init_params(cfg, key, vocab_pad: int):
+    dt = jnp.dtype(cfg.param_dtype)
+    ke, kl, kh = jax.random.split(key, 3)
+    params = {
+        "embed": jax.random.normal(ke, (vocab_pad, cfg.d_model), dt) * 0.02,
+        "layers": T.stack_init(lambda k: M.init_mamba_layer(k, cfg), kl, cfg.num_layers),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = jax.random.normal(kh, (cfg.d_model, vocab_pad), dt) * 0.02
+    return params
+
+
+def param_specs(cfg, ax: MeshAxes, vocab_pad: int):
+    v_ax = shard_dim(ax, vocab_pad, ax.model)
+    sp = {
+        "embed": P(v_ax, None),
+        "layers": M.mamba_layer_specs(cfg, ax, extra_leading=1),
+        "final_norm": P(None),
+    }
+    if not cfg.tie_embeddings:
+        sp["lm_head"] = P(None, v_ax)
+    return sp
+
+
+def forward_hidden(params, cfg, batch, mesh):
+    x = T.embed_tokens(params, cfg, batch["tokens"], mesh)
+
+    def body(h, lp):
+        out, _ = M.mamba_layer_forward(cfg, lp, h)
+        return out, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = lax.scan(body, x, params["layers"], unroll=cfg.unroll_scans or 1)
+    return L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def loss_fn(params, cfg, batch, mesh):
+    x = forward_hidden(params, cfg, batch, mesh)
+    return C.sharded_xent_loss(
+        x,
+        T.head_weight(params, cfg).astype(x.dtype),
+        batch["labels"],
+        batch.get("loss_mask"),
+        true_vocab=cfg.vocab_size,
+        unroll=cfg.unroll_scans,
+        seq_chunk=cfg.xent_chunk,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Decode / prefill
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg, batch_size: int, seq_len: int = 0):
+    """SSM decode state is O(1) in sequence length."""
+    return M.init_mamba_state(cfg, batch_size, lead=(cfg.num_layers,))
+
+
+def cache_spec(cfg, ax: MeshAxes, batch_size: int, seq_len: int = 0):
+    return M.mamba_state_specs(cfg, ax, batch_size, n_lead=1)
+
+
+def decode_step(params, cfg, cache, tokens, pos, mesh):
+    x = T.embed_tokens(params, cfg, tokens, mesh)
+
+    def body(carry, xs):
+        h, st = carry
+        lp, i = xs
+        st_i = jax.tree.map(lambda a: lax.dynamic_index_in_dim(a, i, 0, False), st)
+        h, st_new = M.mamba_layer_decode(cfg, lp, h, st_i)
+        st = jax.tree.map(
+            lambda a, n: lax.dynamic_update_index_in_dim(a, n.astype(a.dtype), i, 0),
+            st,
+            st_new,
+        )
+        return (h, st), None
+
+    (x, cache), _ = lax.scan(
+        body, (x, cache), (params["layers"], jnp.arange(cfg.num_layers))
+    , unroll=cfg.unroll_scans or 1)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = C.sharded_logits(
+        x[:, 0], T.head_weight(params, cfg).astype(x.dtype), cfg.vocab_size
+    )
+    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    return nxt, cache
+
+
+def prefill(params, cfg, batch, mesh):
+    """Run the prompt through the SSD scan, returning last logits + states.
+
+    Conv states are reconstructed from the last (K-1) prompt tokens' conv
+    inputs; for the dry-run roofline what matters is the full-sequence scan.
+    """
+    x = T.embed_tokens(params, cfg, batch["tokens"], mesh)
+    B, S, _ = x.shape
+
+    def body(h, lp):
+        out, h_fin = M.mamba_layer_forward(cfg, lp, h)
+        # conv tail states for subsequent decode
+        hn = L.rms_norm(h, lp["norm"], cfg.norm_eps)
+        tail = hn[:, -(cfg.ssm_conv - 1) :]
+        conv_x = jnp.einsum("bsd,de->bse", tail, lp["wx"])
+        conv_B = jnp.einsum("bsd,de->bse", tail, lp["wB"])
+        conv_C = jnp.einsum("bsd,de->bse", tail, lp["wC"])
+        return out, {
+            "conv_x": conv_x,
+            "conv_B": conv_B,
+            "conv_C": conv_C,
+            "ssm": h_fin,
+        }
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, cache = lax.scan(body, x, params["layers"], unroll=cfg.unroll_scans or 1)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = C.sharded_logits(
+        x[:, -1], T.head_weight(params, cfg).astype(x.dtype), cfg.vocab_size
+    )
+    return logits, cache

@@ -1,0 +1,418 @@
+"""Dense transformer LM + encoder-only (hubert) + VLM backbone (phi-3-vision)
++ MoE variants (via repro.models.moe).
+
+Parameters are plain nested dicts; repeated layers are stacked on a leading
+[L] dim and executed with lax.scan (+ per-layer remat) so HLO size and
+compile time stay flat in depth. ``mesh`` is threaded through the stack for
+the explicit-collective paths (vocab-sharded embedding, MoE dispatch).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+from repro.parallel import collectives as C
+from repro.parallel.sharding import MeshAxes, shard_dim
+
+FRAME_DIM = 512  # audio frontend stub: precomputed frame-embedding width
+PATCH_DIM = 1024  # vision frontend stub: precomputed patch-embedding width
+
+
+def stack_init(fn, key, n):
+    """Init n layers and stack every leaf on a leading [n] dim."""
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def model_axis_size(mesh) -> int:
+    if mesh is None or "model" not in mesh.axis_names:
+        return 1
+    return int(mesh.shape["model"])
+
+
+# ---------------------------------------------------------------------------
+# Layer init / specs
+# ---------------------------------------------------------------------------
+
+
+def init_layer(key, cfg):
+    dt = jnp.dtype(cfg.param_dtype)
+    D, F = cfg.d_model, cfg.d_ff
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {"attn": L.init_attention(k1, cfg)}
+    if cfg.family == "encoder":  # LN + gelu MLP (hubert-style)
+        p["attn_norm"] = {"w": jnp.ones((D,), dt), "b": jnp.zeros((D,), dt)}
+        p["mlp_norm"] = {"w": jnp.ones((D,), dt), "b": jnp.zeros((D,), dt)}
+        p["mlp"] = {
+            "w1": jax.random.normal(k2, (D, F), dt) / math.sqrt(D),
+            "b1": jnp.zeros((F,), dt),
+            "w2": jax.random.normal(k3, (F, D), dt) / math.sqrt(F),
+            "b2": jnp.zeros((D,), dt),
+        }
+    else:
+        p["attn_norm"] = jnp.ones((D,), dt)
+        p["mlp_norm"] = jnp.ones((D,), dt)
+        if cfg.family == "moe":
+            from repro.models import moe
+
+            p["mlp"] = moe.init_moe_mlp(k2, cfg)
+        elif cfg.fuse_gate_up:
+            p["mlp"] = {
+                "w_gu": jax.random.normal(k2, (2, D, F), dt) / math.sqrt(D),
+                "w_down": jax.random.normal(k4, (F, D), dt) / math.sqrt(F),
+            }
+        else:
+            p["mlp"] = {
+                "w_gate": jax.random.normal(k2, (D, F), dt) / math.sqrt(D),
+                "w_up": jax.random.normal(k3, (D, F), dt) / math.sqrt(D),
+                "w_down": jax.random.normal(k4, (F, D), dt) / math.sqrt(F),
+            }
+    return p
+
+
+def layer_specs(cfg, ax: MeshAxes) -> Dict[str, Any]:
+    """PartitionSpecs mirroring init_layer output, with the leading [L] dim.
+
+    TP: heads / FFN-inner over "model". FSDP (cfg.fsdp): the d_model dim of
+    every layer weight additionally shards over the data axes — XLA
+    all-gathers one layer per scan step (weights never fully resident),
+    which is what fits the >=30B archs on 16GB/chip."""
+    m = ax.model
+    H, K, hd, F, D = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim, cfg.d_ff, cfg.d_model
+    h_ax = shard_dim(ax, H * hd, m) if H % ax.model_size == 0 else None
+    k_ax = m if K % ax.model_size == 0 else None
+    f_ax = shard_dim(ax, F, m)
+    dp = ax.data if len(ax.data) > 1 else ax.data[0]
+    d_ax = shard_dim(ax, D, dp) if cfg.fsdp else None
+    attn = {
+        "wq": P(None, d_ax, h_ax),
+        "wk": P(None, d_ax, k_ax),
+        "wv": P(None, d_ax, k_ax),
+        "wo": P(None, h_ax, d_ax),
+    }
+    if cfg.qkv_bias:
+        attn["bq"] = P(None, h_ax)
+        attn["bk"] = P(None, k_ax)
+        attn["bv"] = P(None, k_ax)
+    sp = {"attn": attn}
+    if cfg.family == "encoder":
+        sp["attn_norm"] = {"w": P(None, None), "b": P(None, None)}
+        sp["mlp_norm"] = {"w": P(None, None), "b": P(None, None)}
+        sp["mlp"] = {
+            "w1": P(None, d_ax, f_ax),
+            "b1": P(None, f_ax),
+            "w2": P(None, f_ax, d_ax),
+            "b2": P(None, None),
+        }
+    else:
+        sp["attn_norm"] = P(None, None)
+        sp["mlp_norm"] = P(None, None)
+        if cfg.family == "moe":
+            from repro.models import moe
+
+            sp["mlp"] = moe.moe_mlp_specs(cfg, ax)
+        elif cfg.fuse_gate_up:
+            sp["mlp"] = {
+                "w_gu": P(None, None, d_ax, f_ax),
+                "w_down": P(None, f_ax, d_ax),
+            }
+        else:
+            sp["mlp"] = {
+                "w_gate": P(None, d_ax, f_ax),
+                "w_up": P(None, d_ax, f_ax),
+                "w_down": P(None, f_ax, d_ax),
+            }
+    return sp
+
+
+# ---------------------------------------------------------------------------
+# Layer forward / decode
+# ---------------------------------------------------------------------------
+
+
+def _norm(cfg, x, n):
+    if cfg.family == "encoder":
+        return L.layer_norm(x, n["w"], n["b"], cfg.norm_eps)
+    return L.rms_norm(x, n, cfg.norm_eps)
+
+
+def _ffn(cfg, m, h, mesh) -> Tuple[jax.Array, jax.Array]:
+    """Returns (delta, aux_loss)."""
+    zero = jnp.zeros((), jnp.float32)
+    if cfg.family == "encoder":
+        return L.gelu_mlp(h, m["w1"], m["b1"], m["w2"], m["b2"]), zero
+    if cfg.family == "moe":
+        from repro.models import moe
+
+        return moe.moe_ffn(cfg, m, h, mesh)
+    if "w_gu" in m:
+        # fused gate/up: one read of h, stacked (2, D, F) weight
+        gu = jnp.einsum("bsd,kdf->kbsf", h, m["w_gu"])
+        hh = jax.nn.silu(gu[0]) * gu[1]
+        return jnp.einsum("bsf,fd->bsd", hh, m["w_down"]), zero
+    return L.swiglu(h, m["w_gate"], m["w_up"], m["w_down"]), zero
+
+
+def _sp_constraint(cfg, x, mesh):
+    """Sequence-parallel residual: shard S over "model" between blocks."""
+    if not cfg.seq_parallel or mesh is None:
+        return x
+    from repro.parallel.sharding import constraint, mesh_axes
+
+    ax = mesh_axes(mesh)
+    dp = ax.data if len(ax.data) > 1 else ax.data[0]
+    if x.shape[1] % ax.model_size:
+        return x
+    return constraint(x, P(dp, "model", None))
+
+
+def layer_forward(cfg, p, x, positions, mesh):
+    x = _sp_constraint(cfg, x, mesh)
+    h = _norm(cfg, x, p["attn_norm"])
+    x = x + L.attention_forward(p["attn"], h, positions, cfg)
+    x = _sp_constraint(cfg, x, mesh)
+    h = _norm(cfg, x, p["mlp_norm"])
+    delta, aux = _ffn(cfg, p["mlp"], h, mesh)
+    return x + delta, aux
+
+
+def layer_decode(cfg, p, x, pos, kc, vc, mesh):
+    h = _norm(cfg, x, p["attn_norm"])
+    a, kc, vc = L.attention_decode(p["attn"], h, pos, kc, vc, cfg)
+    x = x + a
+    h = _norm(cfg, x, p["mlp_norm"])
+    delta, _ = _ffn(cfg, p["mlp"], h, mesh)
+    return x + delta, kc, vc
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg, key, vocab_pad: int):
+    dt = jnp.dtype(cfg.param_dtype)
+    D = cfg.d_model
+    ke, kl, kh, kf = jax.random.split(key, 4)
+    params = {
+        "layers": stack_init(lambda k: init_layer(k, cfg), kl, cfg.num_layers),
+        "final_norm": (
+            {"w": jnp.ones((D,), dt), "b": jnp.zeros((D,), dt)}
+            if cfg.family == "encoder"
+            else jnp.ones((D,), dt)
+        ),
+    }
+    if not cfg.embed_offload:
+        # embed_offload: the table lives in the ScratchPipe host tier and
+        # rows arrive as the inputs_embeds activation (paper's technique).
+        params["embed"] = jax.random.normal(ke, (vocab_pad, D), dt) * 0.02
+    if not cfg.tie_embeddings:
+        params["lm_head"] = jax.random.normal(kh, (D, vocab_pad), dt) * 0.02
+    if cfg.frontend == "frames":
+        params["frontend_proj"] = jax.random.normal(kf, (FRAME_DIM, D), dt) * 0.02
+    elif cfg.frontend == "patches":
+        params["frontend_proj"] = jax.random.normal(kf, (PATCH_DIM, D), dt) * 0.02
+    return params
+
+
+def param_specs(cfg, ax: MeshAxes, vocab_pad: int):
+    v_ax = shard_dim(ax, vocab_pad, ax.model)
+    dp = ax.data if len(ax.data) > 1 else ax.data[0]
+    d_ax = shard_dim(ax, cfg.d_model, dp) if cfg.fsdp else None
+    sp = {
+        "layers": layer_specs(cfg, ax),
+        "final_norm": (
+            {"w": P(None), "b": P(None)} if cfg.family == "encoder" else P(None)
+        ),
+    }
+    if not cfg.embed_offload:
+        sp["embed"] = P(v_ax, d_ax)
+    if not cfg.tie_embeddings:
+        sp["lm_head"] = P(d_ax, v_ax)
+    if cfg.frontend:
+        sp["frontend_proj"] = P(None, None)
+    return sp
+
+
+def embed_tokens(params, cfg, tokens, mesh) -> jax.Array:
+    table = params["embed"]
+    if (
+        model_axis_size(mesh) > 1
+        and table.shape[0] % model_axis_size(mesh) == 0
+    ):
+        emb = C.vocab_sharded_lookup(table, tokens, mesh)
+    else:
+        emb = jnp.take(table, tokens, axis=0)
+    return emb.astype(jnp.dtype(cfg.compute_dtype))
+
+
+def build_inputs(params, cfg, batch, mesh) -> Tuple[jax.Array, jax.Array]:
+    """Returns (x (B,S,D), positions (B,S)). Handles modality frontends.
+    ``inputs_embeds`` bypasses the embedding lookup (ScratchPipe cached-
+    embedding path supplies rows gathered from the scratchpad)."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    if "inputs_embeds" in batch:
+        x = batch["inputs_embeds"].astype(dt)
+        B, S = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        return x, positions
+    if cfg.frontend == "frames":
+        x = batch["frames"].astype(dt) @ params["frontend_proj"].astype(dt)
+    elif cfg.frontend == "patches":
+        patches = batch["patches"].astype(dt) @ params["frontend_proj"].astype(dt)
+        tok = embed_tokens(params, cfg, batch["tokens"], mesh)
+        x = jnp.concatenate([patches, tok], axis=1)
+    else:
+        x = embed_tokens(params, cfg, batch["tokens"], mesh)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    return x, positions
+
+
+def run_layers(cfg, layer_params, x, positions, mesh, fwd=layer_forward):
+    def body(h, lp):
+        hn, aux = fwd(cfg, lp, h, positions, mesh)
+        return hn, aux
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    if cfg.scan_layers:
+        x, auxs = lax.scan(body, x, layer_params)
+        aux = jnp.sum(auxs)
+    else:
+        n = jax.tree.leaves(layer_params)[0].shape[0]
+        aux = jnp.zeros((), jnp.float32)
+        for i in range(n):
+            lp = jax.tree.map(lambda a: a[i], layer_params)
+            x, a = body(x, lp)
+            aux = aux + a
+    return x, aux
+
+
+def forward_hidden(params, cfg, batch, mesh) -> Tuple[jax.Array, jax.Array]:
+    x, positions = build_inputs(params, cfg, batch, mesh)
+    x, aux = run_layers(cfg, params["layers"], x, positions, mesh)
+    return _norm(cfg, x, params["final_norm"]), aux
+
+
+def head_weight(params, cfg):
+    return params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+
+def loss_fn(params, cfg, batch, mesh) -> jax.Array:
+    x, aux = forward_hidden(params, cfg, batch, mesh)
+    labels = batch["labels"]
+    mask = batch.get("loss_mask")
+    if cfg.frontend == "patches":  # image positions carry no LM loss
+        n_img = batch["patches"].shape[1]
+        x = x[:, n_img:]
+    xent = C.sharded_xent_loss(
+        x, head_weight(params, cfg).astype(x.dtype), labels, mask,
+        true_vocab=cfg.vocab_size, unroll=cfg.unroll_scans,
+        seq_chunk=cfg.xent_chunk,
+    )
+    return xent + aux
+
+
+# ---------------------------------------------------------------------------
+# Decode (serve_step) and prefill
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg, batch_size: int, seq_len: int, dtype=None):
+    dt = dtype or jnp.dtype(cfg.compute_dtype)
+    S = min(seq_len, cfg.sliding_window) if cfg.sliding_window else seq_len
+    shape = (cfg.num_layers, batch_size, S, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def cache_spec(cfg, ax: MeshAxes, batch_size: int, seq_len: int) -> Dict[str, P]:
+    """(L, B, S, K, hd): B over data if divisible; K over model if divisible,
+    else S over model (sequence-parallel KV)."""
+    dp = ax.data if len(ax.data) > 1 else ax.data[0]
+    b_ax = shard_dim(ax, batch_size, dp)
+    S = min(seq_len, cfg.sliding_window) if cfg.sliding_window else seq_len
+    if cfg.num_kv_heads % ax.model_size == 0:
+        spec = P(None, b_ax, None, ax.model, None)
+    elif S % ax.model_size == 0:
+        spec = P(None, b_ax, ax.model, None, None)
+    else:
+        spec = P(None, b_ax, None, None, None)
+    return {"k": spec, "v": spec}
+
+
+def decode_step(params, cfg, cache, tokens, pos, mesh):
+    """One greedy decode step. tokens (B, 1) int32; pos scalar int32 (index
+    of the position being generated). Returns (next_tokens (B,1), new_cache)."""
+    x = embed_tokens(params, cfg, tokens, mesh)
+
+    def body(carry, xs):
+        h, kc, vc = carry
+        lp, i = xs
+        ki = lax.dynamic_index_in_dim(kc, i, 0, keepdims=False)
+        vi = lax.dynamic_index_in_dim(vc, i, 0, keepdims=False)
+        h, knew, vnew = layer_decode(cfg, lp, h, pos, ki, vi, mesh)
+        kc = lax.dynamic_update_index_in_dim(kc, knew.astype(kc.dtype), i, 0)
+        vc = lax.dynamic_update_index_in_dim(vc, vnew.astype(vc.dtype), i, 0)
+        return (h, kc, vc), None
+
+    n = cfg.num_layers
+    (x, kc, vc), _ = lax.scan(
+        body,
+        (x, cache["k"], cache["v"]),
+        (params["layers"], jnp.arange(n)),
+        unroll=cfg.unroll_scans or 1,
+    )
+    x = _norm(cfg, x, params["final_norm"])
+    logits = C.sharded_logits(
+        x[:, 0], head_weight(params, cfg).astype(x.dtype), cfg.vocab_size
+    )
+    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    return nxt, {"k": kc, "v": vc}
+
+
+def prefill(params, cfg, batch, mesh):
+    """Forward over a full prompt, returning last-position logits and the
+    populated KV cache (stacked per layer via scan ys)."""
+    x, positions = build_inputs(params, cfg, batch, mesh)
+
+    def fwd_collect(h, lp):
+        hn = _norm(cfg, h, lp["attn_norm"])
+        p = lp["attn"]
+        B, S, _ = h.shape
+        H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+        q = jnp.einsum("bsd,dh->bsh", hn, p["wq"])
+        k = jnp.einsum("bsd,dh->bsh", hn, p["wk"])
+        v = jnp.einsum("bsd,dh->bsh", hn, p["wv"])
+        if cfg.qkv_bias:
+            q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+        q = q.reshape(B, S, H, hd)
+        k = k.reshape(B, S, K, hd)
+        v = v.reshape(B, S, K, hd)
+        q = L.apply_rope(q, positions, cfg.rope_theta, cfg.rope_fraction)
+        k = L.apply_rope(k, positions, cfg.rope_theta, cfg.rope_fraction)
+        o = L.chunked_attention(
+            q, k, v, causal=cfg.causal, window=cfg.sliding_window,
+            block_kv=cfg.attn_block_kv, unroll=cfg.unroll_scans,
+        )
+        h = h + jnp.einsum("bsh,hd->bsd", o.reshape(B, S, H * hd), p["wo"])
+        hn = _norm(cfg, h, lp["mlp_norm"])
+        delta, _ = _ffn(cfg, lp["mlp"], hn, mesh)
+        h = h + delta
+        if cfg.sliding_window:
+            k = k[:, -cfg.sliding_window :]
+            v = v[:, -cfg.sliding_window :]
+        return h, (k, v)
+
+    body = jax.checkpoint(fwd_collect) if cfg.remat else fwd_collect
+    x, (kc, vc) = lax.scan(body, x, params["layers"], unroll=cfg.unroll_scans or 1)
+    x = _norm(cfg, x, params["final_norm"])
+    logits = C.sharded_logits(
+        x[:, -1], head_weight(params, cfg).astype(x.dtype), cfg.vocab_size
+    )
+    return logits, {"k": kc, "v": vc}

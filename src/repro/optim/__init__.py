@@ -1,0 +1,8 @@
+from repro.optim.optimizers import (  # noqa: F401
+    AdamW,
+    RowWiseAdagrad,
+    SGD,
+    clip_by_global_norm,
+    global_norm,
+    warmup_cosine,
+)

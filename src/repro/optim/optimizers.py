@@ -1,0 +1,133 @@
+"""Optimizers (no external deps): SGD, AdamW (with fp32 master weights for
+bf16 params), row-wise Adagrad (the standard embedding-table optimizer).
+
+API: ``opt.init(params) -> state``; ``opt.step(params, grads, state, lr) ->
+(params, state)``. States are plain pytrees (checkpointable / shardable —
+ZeRO-1 shards them over the data axes via parallel.sharding.zero1_spec).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+@dataclasses.dataclass(frozen=True)
+class SGD:
+    momentum: float = 0.0
+
+    def init(self, params):
+        if self.momentum == 0.0:
+            return ()
+        return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+    def step(self, params, grads, state, lr):
+        if self.momentum == 0.0:
+            new = jax.tree.map(
+                lambda p, g: (p.astype(jnp.float32) - lr * g.astype(jnp.float32)).astype(p.dtype),
+                params,
+                grads,
+            )
+            return new, state
+        vel = jax.tree.map(
+            lambda v, g: self.momentum * v + g.astype(jnp.float32), state, grads
+        )
+        new = jax.tree.map(
+            lambda p, v: (p.astype(jnp.float32) - lr * v).astype(p.dtype), params, vel
+        )
+        return new, vel
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    master_fp32: bool = True  # keep fp32 master copy when params are low-prec
+
+    def init(self, params):
+        st = {
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "t": jnp.zeros((), jnp.int32),
+        }
+        if self.master_fp32:
+            st["master"] = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+        return st
+
+    def step(self, params, grads, state, lr):
+        t = state["t"] + 1
+        b1t = 1.0 - self.b1 ** t.astype(jnp.float32)
+        b2t = 1.0 - self.b2 ** t.astype(jnp.float32)
+        m = jax.tree.map(
+            lambda m_, g: self.b1 * m_ + (1 - self.b1) * g.astype(jnp.float32),
+            state["m"],
+            grads,
+        )
+        v = jax.tree.map(
+            lambda v_, g: self.b2 * v_ + (1 - self.b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"],
+            grads,
+        )
+        base = state["master"] if self.master_fp32 else params
+
+        def upd(p32, m_, v_):
+            mh = m_ / b1t
+            vh = v_ / b2t
+            step = lr * (mh / (jnp.sqrt(vh) + self.eps) + self.weight_decay * p32)
+            return p32.astype(jnp.float32) - step
+
+        new_master = jax.tree.map(upd, base, m, v)
+        new_params = jax.tree.map(
+            lambda p, nm: nm.astype(p.dtype), params, new_master
+        )
+        st = {"m": m, "v": v, "t": t}
+        if self.master_fp32:
+            st["master"] = new_master
+        return new_params, st
+
+
+@dataclasses.dataclass(frozen=True)
+class RowWiseAdagrad:
+    """One accumulator per embedding ROW (Facebook's DLRM embedding optimizer)
+    — 1/D the state of full Adagrad; the natural choice for scratchpad rows."""
+
+    eps: float = 1e-8
+
+    def init_rows(self, num_rows: int):
+        return jnp.zeros((num_rows,), jnp.float32)
+
+    def step_rows(self, rows, row_grads, acc, lr):
+        """rows (n, D) updated with grads (n, D); acc (n,) gathered slice."""
+        g2 = jnp.mean(jnp.square(row_grads.astype(jnp.float32)), axis=-1)
+        acc = acc + g2
+        scale = lr / (jnp.sqrt(acc) + self.eps)
+        new = rows.astype(jnp.float32) - scale[:, None] * row_grads.astype(jnp.float32)
+        return new.astype(rows.dtype), acc
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+
+def warmup_cosine(step, *, base_lr: float, warmup: int, total: int, min_frac=0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = base_lr * step / jnp.maximum(warmup, 1)
+    progress = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = base_lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * progress)))
+    return jnp.where(step < warmup, warm, cos)

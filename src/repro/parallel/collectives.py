@@ -1,0 +1,201 @@
+"""Explicit-collective building blocks (shard_map) used by the model zoo.
+
+* ``vocab_sharded_lookup`` — model-parallel embedding gather: each TP shard
+  owns a contiguous row range, does a masked local take, psum over "model".
+  (This is the paper's multi-GPU "table-wise/row-wise parallel" analogue and
+  avoids all-gathering multi-GB tables.)
+* ``sharded_xent_loss``    — vocab-parallel softmax cross-entropy, chunked
+  over the sequence so full (B,S,V) logits are never materialized.
+* ``hierarchical_psum``    — cross-pod gradient sync: reduce-scatter inside
+  the pod, psum across pods on 1/N of the bytes, all-gather inside the pod.
+* ``ef_int8_psum``         — error-feedback int8-quantized gradient sync for
+  the cross-pod hop (gradient compression).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def _dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(n for n in mesh.axis_names if n in ("pod", "data"))
+
+
+# ---------------------------------------------------------------------------
+# Vocab-sharded (row-partitioned) embedding lookup
+# ---------------------------------------------------------------------------
+
+
+def vocab_sharded_lookup(table: jax.Array, ids: jax.Array, mesh: Mesh) -> jax.Array:
+    """table (V, D) row-sharded over "model"; ids (..., ) int32 dp-sharded on
+    dim 0. Returns (..., D) embeddings, replicated over "model".
+
+    Backward pass is the masked local scatter-add (gather transpose) + the
+    psum transpose — i.e. exactly the paper's gradient "scatter" primitive,
+    executed shard-locally.
+    """
+    dp = _dp_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= int(mesh.shape[a])
+    dspec = dp if ids.shape[0] % dp_size == 0 else None
+
+    def local(tab, ids_):
+        rows_local = tab.shape[0]
+        lo = lax.axis_index("model") * rows_local
+        loc = ids_ - lo
+        ok = (loc >= 0) & (loc < rows_local)
+        emb = jnp.take(tab, jnp.where(ok, loc, 0), axis=0)
+        emb = jnp.where(ok[..., None], emb, jnp.zeros((), emb.dtype))
+        return lax.psum(emb, "model")
+
+    nd = ids.ndim
+    in_specs = (P("model", None), P(dspec, *([None] * (nd - 1))))
+    out_specs = P(dspec, *([None] * nd))
+    return jax.shard_map(local, mesh=mesh, in_specs=in_specs, out_specs=out_specs)(
+        table, ids
+    )
+
+
+# ---------------------------------------------------------------------------
+# Vocab-parallel cross-entropy (chunked over sequence)
+# ---------------------------------------------------------------------------
+
+
+def sharded_xent_loss(
+    x: jax.Array,
+    head_w: jax.Array,
+    labels: jax.Array,
+    mask: Optional[jax.Array] = None,
+    *,
+    true_vocab: int,
+    seq_chunk: int = 512,
+    unroll: bool = False,
+) -> jax.Array:
+    """Mean token cross-entropy without materializing (B, S, V) logits.
+
+    x: (B, S, D) activations; head_w: (D, Vpad) vocab-sharded over "model";
+    labels: (B, S) int32; mask: (B, S) {0,1}. Rows >= true_vocab are padding
+    and are excluded from the softmax. Runs inside jit; sharding propagation
+    keeps per-chunk logits (B, c, Vpad/TP) per device. Chunks are rematerialized
+    in the backward pass (jax.checkpoint).
+    """
+    B, S, D = x.shape
+    V = head_w.shape[1]
+    if mask is None:
+        mask = jnp.ones((B, S), dtype=jnp.float32)
+    chunk = min(seq_chunk, S)
+    n = S // chunk
+    rem = S - n * chunk
+
+    def chunk_loss(xs, ls, ms):
+        # xs (B, c, D), ls (B, c), ms (B, c)
+        logits = jnp.einsum(
+            "bcd,dv->bcv", xs, head_w, preferred_element_type=jnp.float32
+        )
+        iota_v = lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+        logits = jnp.where(iota_v < true_vocab, logits, -jnp.inf)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        label_logit = jnp.sum(
+            jnp.where(iota_v == ls[..., None], logits, 0.0), axis=-1
+        )
+        return jnp.sum((lse - label_logit) * ms)
+
+    chunk_loss = jax.checkpoint(chunk_loss)
+
+    def body(tot, i):
+        xs = lax.dynamic_slice_in_dim(x, i * chunk, chunk, axis=1)
+        ls = lax.dynamic_slice_in_dim(labels, i * chunk, chunk, axis=1)
+        ms = lax.dynamic_slice_in_dim(mask, i * chunk, chunk, axis=1)
+        return tot + chunk_loss(xs, ls, ms), None
+
+    total, _ = lax.scan(
+        body, jnp.zeros((), jnp.float32), jnp.arange(n), unroll=unroll or 1
+    )
+    if rem:
+        total = total + chunk_loss(
+            x[:, n * chunk :], labels[:, n * chunk :], mask[:, n * chunk :]
+        )
+    return total / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def sharded_logits(x: jax.Array, head_w: jax.Array, true_vocab: int) -> jax.Array:
+    """Decode-time logits (B, Vpad) with padding rows masked to -inf."""
+    logits = jnp.einsum("bd,dv->bv", x, head_w, preferred_element_type=jnp.float32)
+    iota_v = lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+    return jnp.where(iota_v < true_vocab, logits, -jnp.inf)
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical / compressed gradient sync (explicit, for DP-only trees)
+# ---------------------------------------------------------------------------
+
+
+def hierarchical_psum(g: jax.Array, *, pod_axis: str = "pod", data_axis: str = "data"):
+    """All-reduce over (pod, data) with minimal cross-pod bytes.
+
+    reduce-scatter over the in-pod axis -> psum over the pod axis on 1/N of
+    the tensor -> all-gather back over the in-pod axis. Must run inside
+    shard_map with both axes present. Falls back to plain psum for tensors
+    whose leading dim does not divide the in-pod axis.
+    """
+    n = lax.axis_size(data_axis)
+    if g.ndim == 0 or g.shape[0] % n != 0:
+        return lax.psum(g, (pod_axis, data_axis))
+    shard = lax.psum_scatter(g, data_axis, scatter_dimension=0, tiled=True)
+    shard = lax.psum(shard, pod_axis)
+    return lax.all_gather(shard, data_axis, axis=0, tiled=True)
+
+
+def ef_int8_psum(
+    g: jax.Array, err=None, *, pod_axis: str = "pod", data_axis: str = "data"
+) -> Tuple[jax.Array, jax.Array]:
+    """Error-feedback int8 compression on the *cross-pod* hop.
+
+    In-pod: exact reduce-scatter. Cross-pod: quantize the local shard to int8
+    (per-tensor scale), exchange via all_gather over the pod axis (int8 on the
+    wire), sum dequantized, with the quantization residual fed back next step.
+    Returns (synced_grad, new_error_state). ``err`` is the residual returned
+    by the previous call (shaped like the in-pod scatter shard); pass None /
+    a zero scalar on the first step.
+    """
+    n = lax.axis_size(data_axis)
+    if g.ndim == 0 or g.shape[0] % n != 0:
+        return lax.psum(g, (pod_axis, data_axis)), err
+    shard = lax.psum_scatter(g, data_axis, scatter_dimension=0, tiled=True)
+    if err is None:
+        err = jnp.zeros((), shard.dtype)
+    compensated = shard + err
+    scale = jnp.maximum(jnp.max(jnp.abs(compensated)), 1e-8) / 127.0
+    q = jnp.clip(jnp.round(compensated / scale), -127, 127).astype(jnp.int8)
+    new_err = compensated - q.astype(compensated.dtype) * scale
+    # int8 payload on the cross-pod wire; scales are O(1) floats.
+    q_all = lax.all_gather(q, pod_axis, axis=0)  # (npod, ...)
+    s_all = lax.all_gather(scale, pod_axis, axis=0)  # (npod,)
+    deq = jnp.tensordot(
+        s_all, q_all.astype(compensated.dtype), axes=((0,), (0,))
+    )
+    return lax.all_gather(deq, data_axis, axis=0, tiled=True), new_err
+
+
+def psum_tree_hierarchical(grads, errs=None, *, mode: str = "hierarchical"):
+    """Apply the chosen sync to every leaf (inside shard_map over (pod,data))."""
+    if mode == "plain":
+        return jax.tree.map(lambda g: lax.psum(g, ("pod", "data")), grads), errs
+    if mode == "hierarchical":
+        return jax.tree.map(hierarchical_psum, grads), errs
+    if mode == "ef_int8":
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_e = jax.tree.leaves(errs)
+        out_g, out_e = [], []
+        for g, e in zip(flat_g, flat_e):
+            sg, se = ef_int8_psum(g, e)
+            out_g.append(sg)
+            out_e.append(se)
+        return jax.tree.unflatten(tdef, out_g), jax.tree.unflatten(tdef, out_e)
+    raise ValueError(f"unknown grad sync mode {mode!r}")

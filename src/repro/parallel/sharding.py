@@ -1,0 +1,116 @@
+"""Sharding rules: logical axes -> mesh axes (DP/TP/EP/SP).
+
+Mesh layouts (launch/mesh.py):
+  single-pod: (data=16, model=16)
+  multi-pod : (pod=2, data=16, model=16)
+
+Conventions:
+  * batch dims shard over all data-parallel axes ("pod","data").
+  * TP width dims (heads, ffn inner, vocab rows) shard over "model".
+  * a dim is only sharded if divisible by the product of its mesh axes;
+    otherwise it is replicated (recorded; GQA kv-heads < TP is the usual case).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshAxes:
+    """Resolved axis names + sizes for the active mesh."""
+
+    data: Tuple[str, ...]  # ("pod","data") or ("data",)
+    model: str  # "model"
+    sizes: Tuple[Tuple[str, int], ...]
+
+    @property
+    def data_size(self) -> int:
+        d = dict(self.sizes)
+        out = 1
+        for a in self.data:
+            out *= d[a]
+        return out
+
+    @property
+    def model_size(self) -> int:
+        return dict(self.sizes)[self.model]
+
+    def size(self, axis: Union[str, Tuple[str, ...]]) -> int:
+        d = dict(self.sizes)
+        if isinstance(axis, str):
+            return d[axis]
+        out = 1
+        for a in axis:
+            out *= d[a]
+        return out
+
+
+def mesh_axes(mesh: Mesh) -> MeshAxes:
+    names = tuple(mesh.axis_names)
+    sizes = tuple((n, int(mesh.shape[n])) for n in names)
+    data = tuple(n for n in names if n in ("pod", "data"))
+    return MeshAxes(data=data, model="model", sizes=sizes)
+
+
+def shard_dim(
+    ax: MeshAxes, dim_size: int, axis: Union[str, Tuple[str, ...], None]
+) -> Optional[Union[str, Tuple[str, ...]]]:
+    """Return the mesh axis (or None) for a dim, honoring divisibility."""
+    if axis is None:
+        return None
+    if dim_size % ax.size(axis) == 0:
+        return axis
+    return None
+
+
+def batch_spec(ax: MeshAxes, batch: int, extra_dims: int = 1) -> P:
+    """Spec for (batch, ...) activations: batch over the data axes."""
+    b = shard_dim(ax, batch, ax.data if len(ax.data) > 1 else ax.data[0])
+    return P(b, *([None] * extra_dims))
+
+
+def named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def tree_shardings(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def constraint(x, spec: P):
+    """with_sharding_constraint that is a no-op outside a mesh context."""
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        return x
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-1: optimizer-state specs = param spec + data-axis sharding on dim 0
+# ---------------------------------------------------------------------------
+
+
+def zero1_spec(param_spec: P, shape: Sequence[int], ax: MeshAxes) -> P:
+    """Shard optimizer state over the data axes on the first free dim.
+    No-op when the param is already data-sharded (FSDP weights)."""
+    spec = list(param_spec) + [None] * (len(shape) - len(param_spec))
+    dp: Union[str, Tuple[str, ...]] = ax.data if len(ax.data) > 1 else ax.data[0]
+    dp_axes = set(ax.data)
+    for cur in spec:
+        cur_axes = cur if isinstance(cur, tuple) else (cur,)
+        if any(a in dp_axes for a in cur_axes if a):
+            return P(*spec)  # already FSDP-sharded over data
+    dp_size = ax.size(dp)
+    for i, (dim, cur) in enumerate(zip(shape, spec)):
+        if cur is None and dim % dp_size == 0 and dim >= dp_size:
+            spec[i] = dp
+            return P(*spec)
+    return P(*spec)  # too small to shard: replicate over data

@@ -1,0 +1,10 @@
+from repro.runtime.fault_tolerance import (  # noqa: F401
+    FailureInjector,
+    PreemptionHandler,
+    TrainSupervisor,
+)
+from repro.runtime.straggler import (  # noqa: F401
+    StepTimeMonitor,
+    StragglerPolicy,
+    plan_rebalance,
+)

@@ -1,0 +1,43 @@
+"""Elastic scaling: resume a job on a different device count / mesh shape.
+
+Checkpoints store *global* arrays (repro.checkpoint), so elasticity is:
+build the new mesh, recompute PartitionSpecs from the same rules, and
+device_put the restored arrays with the new shardings. The ScratchPipe
+planner/host-table state is device-count independent (host state). The data
+stream fast-forwards deterministically.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+from repro.checkpoint import CheckpointManager
+from repro.models import api
+from repro.parallel.sharding import mesh_axes, tree_shardings, zero1_spec
+
+
+def reshard_restore(
+    ckpt: CheckpointManager,
+    cfg,
+    new_mesh: Mesh,
+    *,
+    with_opt_state_like=None,
+    step: Optional[int] = None,
+) -> Tuple[object, int]:
+    """Restore model params (and optionally optimizer state) from ``ckpt``
+    onto ``new_mesh`` — the mesh used at save time is irrelevant."""
+    ax = mesh_axes(new_mesh)
+    target = api.abstract_params(cfg, ax)
+    specs = api.param_specs(cfg, ax)
+    sh = tree_shardings(new_mesh, specs)
+    if with_opt_state_like is None:
+        return ckpt.restore(target, step=step, shardings=sh)
+    target = {"params": target, "opt": with_opt_state_like}
+    opt_specs = jax.tree.map(
+        lambda l, s=None: None, with_opt_state_like
+    )  # replicated opt restore fallback
+    sh_full = {"params": sh, "opt": jax.tree.map(lambda _: None, with_opt_state_like)}
+    state, step = ckpt.restore(target, step=step)
+    return state, step

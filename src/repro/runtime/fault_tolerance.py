@@ -1,0 +1,140 @@
+"""Fault tolerance: supervised training loop with checkpoint/restart,
+NaN-step quarantine, and preemption-aware save.
+
+At 1000+-node scale the failure model is: a worker dies (XLA collective
+error / host crash) -> the coordinator restarts the job -> the supervisor
+restores the latest checkpoint, fast-forwards the (deterministic) data
+stream, and resumes; the ScratchPipe planner state is host state and is
+checkpointed alongside. This container exercises the same control flow with
+injected failures (tests/test_fault_tolerance.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+
+
+class PreemptionHandler:
+    """SIGTERM -> checkpoint at the next step boundary (SLURM/Borg style)."""
+
+    def __init__(self, install: bool = False):
+        self.requested = False
+        if install:
+            signal.signal(signal.SIGTERM, self._on_signal)
+
+    def _on_signal(self, *_):
+        self.requested = True
+
+
+@dataclasses.dataclass
+class SupervisorReport:
+    steps_run: int = 0
+    restarts: int = 0
+    nan_steps_skipped: int = 0
+    last_step: int = 0
+
+
+class TrainSupervisor:
+    """Runs ``step_fn(state, batch) -> (state, metrics)`` over a stream with
+    periodic checkpoints and automatic restore-on-failure.
+
+    * ``stream_factory(skip)`` rebuilds the batch iterator positioned after
+      ``skip`` consumed batches (deterministic replay).
+    * transient exceptions and non-finite losses trigger restore+resume
+      (up to ``max_restarts``).
+    """
+
+    def __init__(
+        self,
+        ckpt: CheckpointManager,
+        step_fn: Callable[[Any, Any], tuple],
+        stream_factory: Callable[[int], Iterator],
+        *,
+        ckpt_every: int = 50,
+        max_restarts: int = 5,
+        nan_policy: str = "restore",  # "restore" | "skip" | "raise"
+        preemption: Optional[PreemptionHandler] = None,
+    ):
+        self.ckpt = ckpt
+        self.step_fn = step_fn
+        self.stream_factory = stream_factory
+        self.ckpt_every = ckpt_every
+        self.max_restarts = max_restarts
+        self.nan_policy = nan_policy
+        self.preemption = preemption or PreemptionHandler()
+
+    def run(self, state, total_steps: int, *, shardings=None) -> tuple:
+        report = SupervisorReport()
+        step = 0
+        # resume if a checkpoint exists
+        if self.ckpt.latest_step() is not None:
+            state, step = self.ckpt.restore(state, shardings=shardings)
+        stream = self.stream_factory(step)
+        restarts = 0
+        while step < total_steps:
+            try:
+                batch = next(stream)
+            except StopIteration:
+                break
+            try:
+                new_state, metrics = self.step_fn(state, batch)
+                loss = metrics.get("loss")
+                if loss is not None and not np.isfinite(float(loss)):
+                    report.nan_steps_skipped += 1
+                    if self.nan_policy == "raise":
+                        raise FloatingPointError(f"non-finite loss at step {step}")
+                    if self.nan_policy == "restore":
+                        raise _NonFinite(step)
+                    # "skip": drop the update, keep going
+                    new_state = state
+                state = new_state
+                step += 1
+                report.steps_run += 1
+                report.last_step = step
+                if step % self.ckpt_every == 0 or self.preemption.requested:
+                    self.ckpt.save(step, state)
+                    if self.preemption.requested:
+                        self.ckpt.wait()
+                        break
+            except (_NonFinite, RuntimeError, FloatingPointError) as e:
+                if isinstance(e, FloatingPointError) and self.nan_policy == "raise":
+                    raise
+                restarts += 1
+                report.restarts += 1
+                if restarts > self.max_restarts:
+                    raise RuntimeError(
+                        f"exceeded max_restarts={self.max_restarts}"
+                    ) from e
+                if self.ckpt.latest_step() is None:
+                    # no checkpoint yet: restart from scratch
+                    step = 0
+                    stream = self.stream_factory(0)
+                    continue
+                state, step = self.ckpt.restore(state, shardings=shardings)
+                stream = self.stream_factory(step)
+        self.ckpt.wait()
+        return state, report
+
+
+class _NonFinite(Exception):
+    pass
+
+
+class FailureInjector:
+    """Deterministically raise at given step numbers (tests/benchmarks)."""
+
+    def __init__(self, fail_at):
+        self.fail_at = set(fail_at)
+        self.calls = 0
+
+    def maybe_fail(self):
+        self.calls += 1
+        if self.calls in self.fail_at:
+            raise RuntimeError(f"injected node failure at call {self.calls}")

@@ -1,0 +1,155 @@
+"""Checkpointing (atomic/async/keep-k/elastic) + fault-tolerance supervisor +
+straggler logic."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.runtime import StepTimeMonitor, TrainSupervisor, plan_rebalance
+from repro.runtime.fault_tolerance import FailureInjector
+
+
+def make_state(x=0.0):
+    return {
+        "w": jnp.full((4, 3), x, jnp.float32),
+        "nested": {"b": jnp.arange(5, dtype=jnp.int32)},
+    }
+
+
+def test_save_restore_roundtrip(tmp_path):
+    cm = CheckpointManager(str(tmp_path), keep=2)
+    st = make_state(1.5)
+    cm.save(10, st, host_arrays={"table": np.ones((3, 2))}, blocking=True)
+    got, step = cm.restore(jax.eval_shape(lambda: st))
+    assert step == 10
+    np.testing.assert_array_equal(np.asarray(got["w"]), np.asarray(st["w"]))
+    np.testing.assert_array_equal(
+        np.asarray(got["nested"]["b"]), np.asarray(st["nested"]["b"])
+    )
+    np.testing.assert_array_equal(cm.restore_host("table"), np.ones((3, 2)))
+    assert cm.manifest()["step"] == 10
+
+
+def test_async_save_and_keep_k(tmp_path):
+    cm = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        cm.save(s, make_state(float(s)))
+    cm.wait()
+    assert cm.all_steps() == [3, 4]
+    got, step = cm.restore(make_state())
+    assert step == 4
+    assert float(got["w"][0, 0]) == 4.0
+
+
+def test_restore_missing_leaf_raises(tmp_path):
+    cm = CheckpointManager(str(tmp_path))
+    cm.save(1, {"a": jnp.zeros(2)}, blocking=True)
+    with pytest.raises(KeyError):
+        cm.restore({"a": jnp.zeros(2), "zzz": jnp.zeros(3)})
+
+
+def test_supervisor_recovers_from_injected_failures(tmp_path):
+    """Two injected node failures; training must complete with the same
+    final state as an uninterrupted run (deterministic stream replay)."""
+    cm = CheckpointManager(str(tmp_path), keep=3)
+    inj = FailureInjector(fail_at=[7, 13])
+
+    def step_fn(state, batch):
+        inj.maybe_fail()
+        state = {"x": state["x"] + batch}
+        return state, {"loss": float(state["x"])}
+
+    def stream_factory(skip):
+        def gen():
+            for i in range(skip, 100):
+                yield jnp.float32(i)
+
+        return gen()
+
+    sup = TrainSupervisor(cm, step_fn, stream_factory, ckpt_every=2)
+    state, report = sup.run({"x": jnp.float32(0)}, total_steps=20)
+    assert report.restarts == 2
+    assert float(state["x"]) == sum(range(20))  # no lost or doubled batches
+
+
+def test_supervisor_nan_quarantine(tmp_path):
+    cm = CheckpointManager(str(tmp_path), keep=3)
+
+    def step_fn(state, batch):
+        val = jnp.where(batch == 5, jnp.nan, batch)
+        return {"x": state["x"] + val}, {"loss": float(val)}
+
+    def stream_factory(skip):
+        def gen():
+            for i in range(skip, 100):
+                yield jnp.float32(i)
+
+        return gen()
+
+    sup = TrainSupervisor(cm, step_fn, stream_factory, ckpt_every=100, nan_policy="skip")
+    state, report = sup.run({"x": jnp.float32(0)}, total_steps=10)
+    assert report.nan_steps_skipped == 1
+    assert float(state["x"]) == sum(range(10)) - 5  # nan batch dropped
+
+
+def test_preemption_checkpoint(tmp_path):
+    from repro.runtime import PreemptionHandler
+
+    cm = CheckpointManager(str(tmp_path))
+    ph = PreemptionHandler()
+
+    def step_fn(state, batch):
+        if batch == 3:
+            ph.requested = True  # simulated SIGTERM mid-run
+        return {"x": state["x"] + batch}, {"loss": 0.0}
+
+    def stream_factory(skip):
+        return iter([jnp.float32(i) for i in range(skip, 100)])
+
+    sup = TrainSupervisor(cm, step_fn, stream_factory, ckpt_every=1000, preemption=ph)
+    state, report = sup.run({"x": jnp.float32(0)}, total_steps=50)
+    assert report.last_step == 4  # stopped at the step after the signal
+    assert cm.latest_step() == 4  # and saved
+
+
+def test_elastic_restore_new_mesh(tmp_path, mesh1):
+    """Save under one layout, restore under another mesh's shardings."""
+    from repro.configs import get_smoke_config
+    from repro.models import api
+    from repro.parallel.sharding import mesh_axes, tree_shardings
+
+    cfg = get_smoke_config("chatglm3-6b")
+    params = api.init(cfg, jax.random.key(0))
+    cm = CheckpointManager(str(tmp_path))
+    cm.save(5, params, blocking=True)
+    ax = mesh_axes(mesh1)
+    sh = tree_shardings(mesh1, api.param_specs(cfg, ax))
+    got, step = cm.restore(api.abstract_params(cfg, ax), shardings=sh)
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(params)):
+        np.testing.assert_array_equal(
+            np.asarray(a, np.float32), np.asarray(b, np.float32)
+        )
+
+
+def test_straggler_monitor_and_rebalance():
+    mon = StepTimeMonitor(num_hosts=8)
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        t = np.full(8, 1.0) + rng.normal(0, 0.01, 8)
+        t[3] = 1.6  # persistent straggler
+        mon.observe(t)
+    assert mon.stragglers() == [3]
+    alloc = plan_rebalance(mon.ema, np.full(8, 4))
+    assert alloc.sum() == 32
+    assert alloc[3] < 4  # straggler gets less work
+    assert alloc.max() <= 6
+
+
+def test_rebalance_preserves_total_and_monotonicity():
+    times = np.array([1.0, 2.0, 1.0, 4.0])
+    alloc = plan_rebalance(times, np.array([8, 8, 8, 8]))
+    assert alloc.sum() == 32
+    assert alloc[3] <= alloc[1] <= alloc[0]

@@ -1,0 +1,116 @@
+"""Per-kernel shape/dtype sweeps against the ref.py jnp oracles
+(interpret=True executes the Pallas kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("N,D", [(32, 128), (64, 256), (16, 384)])
+@pytest.mark.parametrize("shape", [(4, 5), (2, 3, 7), (1, 1)])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_gather_reduce_sweep(N, D, shape, dtype):
+    st_ = jnp.asarray(RNG.standard_normal((N, D)), dtype=dtype)
+    ids = jnp.asarray(RNG.integers(0, N, shape + (5,)), jnp.int32)
+    out = ops.gather_reduce(st_, ids)
+    want = ref.gather_reduce_ref(st_, ids)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32),
+        rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5,
+        atol=2e-2 if dtype == jnp.bfloat16 else 1e-5,
+    )
+
+
+@pytest.mark.parametrize("N,D,nb,L", [(16, 128, 8, 4), (64, 256, 12, 7)])
+def test_coalesce_apply_sweep(N, D, nb, L):
+    st_ = jnp.asarray(RNG.standard_normal((N, D)).astype(np.float32))
+    # heavy duplication on purpose
+    ids = jnp.asarray(RNG.integers(0, max(2, N // 4), (nb, L)), jnp.int32)
+    g = jnp.asarray(RNG.standard_normal((nb, D)).astype(np.float32))
+    out = ops.coalesce_apply(st_, ids, g, 0.07)
+    want = ref.coalesce_apply_ref(st_, ids, g, 0.07)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-5)
+
+
+@pytest.mark.parametrize(
+    "Sq,Skv,H,K,hd,causal,window",
+    [
+        (128, 128, 4, 2, 64, True, None),
+        (256, 256, 4, 4, 32, True, None),
+        (128, 128, 8, 2, 64, True, 64),
+        (96, 96, 2, 2, 16, False, None),  # encoder (bidirectional) + padding
+        (160, 160, 4, 1, 32, True, None),  # MQA + padding path
+    ],
+)
+def test_flash_attention_sweep(Sq, Skv, H, K, hd, causal, window):
+    q = jnp.asarray(RNG.standard_normal((2, Sq, H, hd)).astype(np.float32))
+    k = jnp.asarray(RNG.standard_normal((2, Skv, K, hd)).astype(np.float32))
+    v = jnp.asarray(RNG.standard_normal((2, Skv, K, hd)).astype(np.float32))
+    out = ops.flash_attention(q, k, v, causal, window)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    q = jnp.asarray(RNG.standard_normal((1, 128, 4, 64)), jnp.bfloat16)
+    k = jnp.asarray(RNG.standard_normal((1, 128, 2, 64)), jnp.bfloat16)
+    v = jnp.asarray(RNG.standard_normal((1, 128, 2, 64)), jnp.bfloat16)
+    out = ops.flash_attention(q, k, v, True, None)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32), atol=3e-2
+    )
+
+
+def test_flash_attention_backward_matches_ref():
+    q = jnp.asarray(RNG.standard_normal((1, 128, 4, 32)).astype(np.float32))
+    k = jnp.asarray(RNG.standard_normal((1, 128, 2, 32)).astype(np.float32))
+    v = jnp.asarray(RNG.standard_normal((1, 128, 2, 32)).astype(np.float32))
+    g1 = jax.grad(lambda *a: ops.flash_attention(*a).sum(), argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(
+        lambda *a: ref.flash_attention_ref(*a).sum(), argnums=(0, 1, 2)
+    )(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.data())
+def test_gather_reduce_property(data):
+    """Hypothesis sweep: random (N, D multiple of 128, bags, L)."""
+    N = data.draw(st.integers(4, 80))
+    D = data.draw(st.sampled_from([128, 256]))
+    nb = data.draw(st.integers(1, 10))
+    L = data.draw(st.integers(1, 9))
+    seed = data.draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    st_ = jnp.asarray(rng.standard_normal((N, D)).astype(np.float32))
+    ids = jnp.asarray(rng.integers(0, N, (nb, L)), jnp.int32)
+    out = ops.gather_reduce(st_, ids)
+    want = ref.gather_reduce_ref(st_, ids)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-5)
+
+
+@pytest.mark.parametrize(
+    "B,S,ng,hpg,hd,ds,Q",
+    [(2, 32, 1, 4, 8, 16, 8), (1, 64, 2, 3, 16, 8, 16), (1, 40, 1, 2, 8, 8, 16)],
+)
+def test_ssd_chunk_kernel_vs_scan(B, S, ng, hpg, hd, ds, Q):
+    """Fused SSD Pallas kernel == the pure-jnp chunked scan (incl. padding)."""
+    from repro.models.mamba2 import ssd_scan
+
+    nh = ng * hpg
+    x = jnp.asarray(RNG.standard_normal((B, S, nh, hd)).astype(np.float32))
+    dt = jnp.asarray(RNG.uniform(0.05, 1.0, (B, S, nh)).astype(np.float32))
+    A = -jnp.asarray(RNG.uniform(0.3, 4.0, (nh,)).astype(np.float32))
+    Bm = jnp.asarray(RNG.standard_normal((B, S, ng, ds)).astype(np.float32))
+    Cm = jnp.asarray(RNG.standard_normal((B, S, ng, ds)).astype(np.float32))
+    y1, h1 = ops.ssd_chunk_scan(x, dt, A, Bm, Cm, chunk=Q)
+    y2, h2 = ssd_scan(x, dt, A, Bm, Cm, Q)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=2e-4)

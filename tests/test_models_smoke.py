@@ -1,0 +1,129 @@
+"""Per-arch REDUCED-config smoke tests (the assignment's requirement):
+one forward/train step on CPU asserting output shapes + no NaNs, plus
+prefill/decode for the decodable families."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_entry, get_smoke_config
+from repro.configs.base import ShapeSpec
+from repro.models import api
+
+TRAIN_SHAPE = ShapeSpec("smoke_train", 32, 4, "train")
+PRE_SHAPE = ShapeSpec("smoke_prefill", 16, 2, "prefill")
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_train_step_shapes_and_finite(arch, mesh1):
+    cfg = get_smoke_config(arch)
+    params = api.init(cfg, jax.random.key(0))
+    batch = api.synth_batch(cfg, TRAIN_SHAPE)
+    loss_fn = api.make_loss_fn(cfg, mesh1)
+    with jax.set_mesh(mesh1):
+        loss, grads = jax.jit(jax.value_and_grad(loss_fn))(params, batch)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss))
+    flat = jax.tree.leaves(grads)
+    assert all(np.isfinite(np.asarray(g, np.float32)).all() for g in flat)
+    # grads mirror params exactly
+    assert jax.tree.structure(grads) == jax.tree.structure(params)
+    gsum = sum(float(jnp.sum(jnp.abs(g.astype(jnp.float32)))) for g in flat)
+    assert gsum > 0.0
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_prefill_and_decode(arch, mesh1):
+    cfg = get_smoke_config(arch)
+    entry = get_entry(arch)
+    params = api.init(cfg, jax.random.key(0))
+    batch = api.synth_batch(cfg, PRE_SHAPE)
+    with jax.set_mesh(mesh1):
+        logits, cache = jax.jit(api.make_prefill_fn(cfg, mesh1))(params, batch)
+    B = PRE_SHAPE.global_batch
+    vp = logits.shape[-1]
+    assert logits.shape == (B, vp) and vp >= cfg.vocab_size
+    assert np.isfinite(np.asarray(logits[:, : cfg.vocab_size])).all()
+    if cfg.family == "encoder":
+        assert entry.skip_reason("decode_32k") is not None
+        return
+    # decode continues from the prefilled cache
+    if "k" in cache and cfg.family != "ssm" and cfg.sliding_window is None:
+        cache["k"] = jnp.pad(cache["k"], ((0, 0), (0, 0), (0, 4), (0, 0), (0, 0)))
+        cache["v"] = jnp.pad(cache["v"], ((0, 0), (0, 0), (0, 4), (0, 0), (0, 0)))
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    dec = jax.jit(api.make_decode_fn(cfg, mesh1))
+    with jax.set_mesh(mesh1):
+        for i in range(2):
+            tok, cache = dec(params, cache, tok, jnp.int32(PRE_SHAPE.seq_len + i))
+    assert tok.shape == (B, 1)
+    assert (np.asarray(tok) >= 0).all() and (np.asarray(tok) < cfg.vocab_size).all()
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_full_config_matches_assignment(arch):
+    """The FULL configs carry the exact published hyperparameters."""
+    cfg = get_entry(arch).config
+    expected = {
+        "hubert-xlarge": (48, 1280, 16, 16, 5120, 504),
+        "mixtral-8x7b": (32, 4096, 32, 8, 14336, 32000),
+        "llama4-scout-17b-a16e": (48, 5120, 40, 8, 8192, 202048),
+        "chatglm3-6b": (28, 4096, 32, 2, 13696, 65024),
+        "qwen2-72b": (80, 8192, 64, 8, 29568, 152064),
+        "mistral-large-123b": (88, 12288, 96, 8, 28672, 32768),
+        "qwen2.5-32b": (64, 5120, 40, 8, 27648, 152064),
+        "phi-3-vision-4.2b": (32, 3072, 32, 32, 8192, 32064),
+        "mamba2-2.7b": (64, 2560, 0, 0, 0, 50280),
+        "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+    }[arch]
+    got = (
+        cfg.num_layers,
+        cfg.d_model,
+        cfg.num_heads,
+        cfg.num_kv_heads,
+        cfg.d_ff,
+        cfg.vocab_size,
+    )
+    assert got == expected
+    if arch == "mixtral-8x7b":
+        assert (cfg.num_experts, cfg.num_experts_per_tok, cfg.sliding_window) == (8, 2, 4096)
+    if arch == "llama4-scout-17b-a16e":
+        assert (cfg.num_experts, cfg.num_experts_per_tok) == (16, 1)
+    if arch == "mamba2-2.7b":
+        assert cfg.ssm_state == 128
+    if arch == "zamba2-1.2b":
+        assert cfg.ssm_state == 64
+        total = (
+            cfg.hybrid_groups * cfg.hybrid_layers_per_group + cfg.hybrid_tail_layers
+        )
+        assert total == cfg.num_layers
+    if arch in ("chatglm3-6b", "qwen2-72b", "qwen2.5-32b"):
+        assert cfg.qkv_bias
+
+
+def test_head_padding_at_tp16():
+    """40-head archs pad to 48 Q-heads at TP=16 (recorded adaptation)."""
+    from repro.parallel.sharding import MeshAxes
+
+    ax = MeshAxes(data=("data",), model="model", sizes=(("data", 16), ("model", 16)))
+    cfg = get_entry("llama4-scout-17b-a16e").config
+    rc, vp = api.runtime_config(cfg, ax)
+    assert rc.num_heads == 48 and rc.num_heads % rc.num_kv_heads == 0
+    assert vp % 16 == 0 and vp >= cfg.vocab_size
+    # 1-device runs stay exact
+    rc1, _ = api.runtime_config(cfg, None)
+    assert rc1.num_heads == 40
+
+
+def test_unrolled_variant_matches_scanned(mesh1):
+    """unroll_scans (roofline calibration mode) is numerically identical."""
+    cfg = get_smoke_config("chatglm3-6b")
+    params = api.init(cfg, jax.random.key(0))
+    batch = api.synth_batch(cfg, TRAIN_SHAPE)
+    with jax.set_mesh(mesh1):
+        l1 = jax.jit(api.make_loss_fn(cfg, mesh1))(params, batch)
+        cfg2 = dataclasses.replace(cfg, unroll_scans=True, scan_layers=False)
+        l2 = jax.jit(api.make_loss_fn(cfg2, mesh1))(params, batch)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5)

@@ -1,0 +1,143 @@
+"""§Perf optimization flags preserve numerics; ScratchPipe checkpoint/restart
+resumes with identical training (the paper-system fault-tolerance story)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_smoke_config
+from repro.configs.base import ShapeSpec
+from repro.core.dlrm_runtime import DLRMTrainer
+from repro.core.host_table import HostEmbeddingTable
+from repro.core.pipeline import ScratchPipe
+from repro.data.lookahead import LookaheadStream
+from repro.data.synthetic import TraceConfig, dlrm_batches
+from repro.models import api
+
+SHAPE = ShapeSpec("t", 32, 4, "train")
+
+
+@pytest.mark.parametrize(
+    "arch,overrides",
+    [
+        ("qwen2-72b", dict(seq_parallel=True)),
+        ("qwen2-72b", dict(attn_block_kv=4096)),
+        ("qwen2-72b", dict(xent_chunk=32)),
+        ("zamba2-1.2b", dict(ssm_chunk=512)),
+        ("mixtral-8x7b", dict(xent_chunk=8)),
+    ],
+)
+def test_math_preserving_flags(arch, overrides, mesh1):
+    cfg = get_smoke_config(arch)
+    params = api.init(cfg, jax.random.key(0))
+    batch = api.synth_batch(cfg, SHAPE)
+    with jax.set_mesh(mesh1):
+        base = float(jax.jit(api.make_loss_fn(cfg, mesh1))(params, batch))
+        cfg2 = dataclasses.replace(cfg, **overrides)
+        got = float(jax.jit(api.make_loss_fn(cfg2, mesh1))(params, batch))
+    assert abs(got - base) < 1e-4, (arch, overrides, base, got)
+
+
+def test_fuse_gate_up_trains(mesh1):
+    """fuse_gate_up changes the param tree but must train equivalently to a
+    fresh unfused model (same fan-in init statistics, finite grads)."""
+    cfg = dataclasses.replace(get_smoke_config("qwen2-72b"), fuse_gate_up=True)
+    params = api.init(cfg, jax.random.key(0))
+    assert "w_gu" in jax.tree.leaves_with_path(params)[0][0][0].key or any(
+        "w_gu" in str(p) for p, _ in jax.tree_util.tree_flatten_with_path(params)[0]
+    )
+    batch = api.synth_batch(cfg, SHAPE)
+    with jax.set_mesh(mesh1):
+        loss, grads = jax.jit(jax.value_and_grad(api.make_loss_fn(cfg, mesh1)))(
+            params, batch
+        )
+    assert np.isfinite(float(loss))
+    assert all(np.isfinite(np.asarray(g, np.float32)).all() for g in jax.tree.leaves(grads))
+
+
+def test_embed_offload_grads_returned(mesh1):
+    """embed_offload: the train step returns d loss / d inputs_embeds (what
+    the ScratchPipe runtime scatters into the scratchpad)."""
+    from repro.launch import steps as S
+
+    cfg = dataclasses.replace(
+        get_smoke_config("llama4-scout-17b-a16e"), embed_offload=True
+    )
+    with jax.set_mesh(mesh1):
+        train_step, specs, opt = S.make_train_step(cfg, mesh1, lr=1e-2)
+        params = api.init(cfg, jax.random.key(0))
+        assert "embed" not in params
+        opt_state = opt.init(params)
+        batch = api.synth_batch(cfg, SHAPE)
+        p2, o2, metrics = jax.jit(train_step)(params, opt_state, batch)
+    g = metrics["embed_row_grads"]
+    assert g.shape == batch["inputs_embeds"].shape
+    assert float(jnp.sum(jnp.abs(g.astype(jnp.float32)))) > 0
+
+
+def test_scratchpipe_checkpoint_restart_identical(tmp_path):
+    """Train 12 steps; vs train 6, checkpoint at a drain boundary, restore
+    into a FRESH pipeline, train 6 more: identical final tables and losses
+    (deterministic stream replay + planner/scratchpad state round-trip)."""
+    cfg = get_smoke_config("dlrm-scratchpipe")
+    tc = TraceConfig(
+        num_tables=cfg.num_tables,
+        rows_per_table=cfg.rows_per_table,
+        lookups_per_table=cfg.lookups_per_table,
+        batch_size=8,
+        locality="medium",
+        seed=5,
+    )
+    rows = cfg.num_tables * cfg.rows_per_table
+    slots = 1024
+
+    def fresh():
+        host = HostEmbeddingTable(rows, cfg.embed_dim, seed=1)
+        tr = DLRMTrainer(cfg, jax.random.key(0), lr=0.05)
+        pipe = ScratchPipe(host, slots, tr.train_fn)
+        return host, tr, pipe
+
+    # uninterrupted run
+    host_a, tr_a, pipe_a = fresh()
+    sa = LookaheadStream(dlrm_batches(tc, 12))
+    stats_a = pipe_a.run(sa, lookahead_fn=sa.peek_ids)
+    pipe_a.flush_to_host()
+
+    # run 6, checkpoint, restart, run 6
+    host_b, tr_b, pipe_b = fresh()
+    sb = LookaheadStream(dlrm_batches(tc, 6))
+    stats_b1 = pipe_b.run(sb, lookahead_fn=sb.peek_ids)
+    cm = CheckpointManager(str(tmp_path))
+    cm.save(
+        6,
+        {"mlps": tr_b.mlps},
+        host_arrays=pipe_b.state_arrays(),
+        blocking=True,
+    )
+
+    host_c, tr_c, pipe_c = fresh()
+    restored, step = cm.restore({"mlps": jax.eval_shape(lambda: tr_c.mlps)})
+    tr_c.mlps = restored["mlps"]
+    pipe_c.load_state_arrays(
+        {
+            name: cm.restore_host(name)
+            for name in cm.manifest()["host"]
+        }
+    )
+    sc = LookaheadStream(
+        (lambda it: (next(it) for _ in range(6)))(
+            (x for i, x in enumerate(dlrm_batches(tc, 12)) if i >= 6)
+        )
+    )
+    stats_b2 = pipe_c.run(sc, lookahead_fn=sc.peek_ids)
+    pipe_c.flush_to_host()
+
+    losses_a = [float(s.aux["loss"]) for s in stats_a]
+    losses_b = [float(s.aux["loss"]) for s in stats_b1] + [
+        float(s.aux["loss"]) for s in stats_b2
+    ]
+    np.testing.assert_allclose(losses_b, losses_a, atol=1e-6)
+    np.testing.assert_allclose(host_c.data, host_a.data, atol=1e-6)

@@ -1,0 +1,60 @@
+"""Device-side (jnp) [Plan] controller == host (numpy) Planner, over random
+traces: same hit counts, same slot assignments, same evictions (both LRU)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.plan import Planner
+from repro.core.plan_jax import init_state, plan_step
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_device_planner_matches_host(seed):
+    rows, slots, n, steps = 200, 96, 12, 40  # slots >= 6-batch window (§VI-D)
+    rng = np.random.default_rng(seed)
+    host = Planner(rows, slots, past_window=3, future_window=2)
+    state = init_state(rows, slots)
+
+    batches = [rng.integers(0, rows, size=n) for _ in range(steps + 2)]
+    for t in range(steps):
+        ids = batches[t]
+        future = np.concatenate(batches[t + 1 : t + 3])
+        try:
+            r_host = host.plan(ids, [batches[t + 1], batches[t + 2]])
+        except RuntimeError:
+            pytest.skip("trace exceeded cache capacity (host raises)")
+        state, out = plan_step(
+            state,
+            jnp.asarray(ids, jnp.int32),
+            jnp.asarray(future, jnp.int32),
+        )
+        assert bool(out["ok"])
+        # identical hit/unique counts
+        assert int(out["n_hits"]) == r_host.n_hits, t
+        assert int(out["n_unique"]) == r_host.n_unique, t
+        # identical dense slot mapping for every input id
+        np.testing.assert_array_equal(np.asarray(out["slots"]), r_host.slots, t)
+        # identical miss/evict SETS (ordering differs: sort- vs unique-based)
+        miss_j = np.asarray(out["miss_ids"])
+        assert set(miss_j[miss_j >= 0]) == set(r_host.miss_ids), t
+        ev_j = np.asarray(out["evict_ids"])
+        assert set(ev_j[ev_j >= 0]) == set(r_host.evict_ids), t
+        # mapping consistency: hitmap and slot_to_id agree
+        hm = np.asarray(state.hitmap)
+        s2i = np.asarray(state.slot_to_id)
+        live = np.flatnonzero(s2i >= 0)
+        np.testing.assert_array_equal(hm[s2i[live]], live)
+
+
+def test_device_planner_reports_infeasible():
+    state = init_state(20, 3)
+    # fill 3 slots, all held by the past window -> 4th miss has no victim
+    for i in range(3):
+        state, out = plan_step(
+            state, jnp.asarray([i], jnp.int32), jnp.asarray([-1], jnp.int32)
+        )
+        assert bool(out["ok"])
+    state, out = plan_step(
+        state, jnp.asarray([10], jnp.int32), jnp.asarray([-1], jnp.int32)
+    )
+    assert not bool(out["ok"])  # host planner raises; device flags

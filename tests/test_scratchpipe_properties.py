@@ -1,0 +1,142 @@
+"""Property tests for the paper's correctness claims (§IV):
+
+  P1  "always hits": pipelined execution is EXACTLY equivalent to sequential
+      training for arbitrary traces (hypothesis-generated).
+  P2  the hold window is NECESSARY: with the future window disabled, a
+      crafted hazard trace produces divergent results (stale host reads) —
+      i.e. our adversarial intra-cycle ordering actually exercises RAW-4.
+  P3  straw-man (unpipelined dynamic cache) is also exact (paper §VI-B).
+  P4  worst-case scratchpad sizing (§VI-D): a window-working-set-sized
+      Storage never raises "too small".
+
+The [Train] stage here is a counting update (storage rows += 1), which makes
+equivalence integer-exact and fast; the full DLRM math equivalence is in
+tests/test_system.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.host_table import HostEmbeddingTable
+from repro.core.pipeline import ScratchPipe
+from repro.data.lookahead import LookaheadStream
+
+
+class SlotCountingTrainer:
+    """Counts one update per unique row per batch via the slot mapping."""
+
+    def train_fn(self, storage, slots, batch):
+        uniq = jnp.unique(jnp.asarray(slots).ravel(), size=slots.size, fill_value=-1)
+        ok = uniq >= 0
+        upd = jnp.where(ok, uniq, 0)
+        add = jnp.zeros_like(storage).at[upd].add(
+            jnp.where(ok, 1.0, 0.0)[:, None]
+        )
+        return storage + add, {}
+
+
+def run_pipe(batches, rows, slots, *, pipelined=True, past=3, future=2):
+    host = HostEmbeddingTable(rows, 4, seed=1)
+    host.data[:] = 0.0
+    tr = SlotCountingTrainer()
+    pipe = ScratchPipe(
+        host, slots, tr.train_fn, pipelined=pipelined,
+        past_window=past, future_window=future,
+    )
+    stream = LookaheadStream(iter([(b, {}) for b in batches]))
+    pipe.run(stream, lookahead_fn=stream.peek_ids)
+    pipe.flush_to_host()
+    return host.data[:, 0].copy()
+
+
+def exact_counts(batches, rows):
+    out = np.zeros(rows)
+    for b in batches:
+        np.add.at(out, np.unique(b), 1.0)
+    return out
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.data())
+def test_p1_pipelined_equals_sequential(data):
+    rows = data.draw(st.integers(20, 120))
+    n_batches = data.draw(st.integers(1, 25))
+    rng_seed = data.draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(rng_seed)
+    batches = [
+        rng.integers(0, rows, size=rng.integers(1, 12)) for _ in range(n_batches)
+    ]
+    # worst-case window working set (paper §VI-D): 6 batches' unique ids
+    worst = max(
+        (
+            sum(len(np.unique(b)) for b in batches[i : i + 6])
+            for i in range(len(batches))
+        ),
+        default=1,
+    )
+    slots = min(rows, worst + 4)
+    got = run_pipe(batches, rows, slots)
+    want = exact_counts(batches, rows)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_p2_future_window_is_necessary():
+    """Hazard trace (RAW-4): at b5's [Plan] both id0 and id1 are evictable.
+    LRU picks id0 — but b6 needs id0: b6's [Collect] then reads the host
+    copy BEFORE b5's [Insert] writes the trained value back -> b0's update
+    to id0 is lost. The 2-batch future window forbids evicting id0 (it
+    appears in the look-ahead) and picks id1 instead -> exact result."""
+    batches = [
+        np.array([0]),
+        np.array([1]),
+        np.array([2]),
+        np.array([3]),
+        np.array([2]),  # hit: no eviction, ages ids 0/1 out of the window
+        np.array([4]),  # miss: evicts id0 (LRU) unless the future holds it
+        np.array([0]),  # the victim is needed RIGHT HERE
+        np.array([7]),
+    ]
+    rows, slots = 10, 4
+    want = exact_counts(batches, rows)
+    ok = run_pipe(batches, rows, slots, past=3, future=2)
+    np.testing.assert_array_equal(ok, want)
+    bad = run_pipe(batches, rows, slots, past=3, future=0)
+    assert not np.array_equal(bad, want), (
+        "disabling the future window should corrupt the hazard trace "
+        "(RAW-4 stale host read)"
+    )
+    assert bad[0] == want[0] - 1  # id0 lost exactly b0's update
+
+
+def test_p3_strawman_exact():
+    rng = np.random.default_rng(0)
+    batches = [rng.integers(0, 40, size=6) for _ in range(15)]
+    got = run_pipe(batches, 40, 20, pipelined=False)
+    np.testing.assert_array_equal(got, exact_counts(batches, 40))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_p4_worst_case_sizing_never_raises(seed):
+    rng = np.random.default_rng(seed)
+    rows = 200
+    batches = [rng.integers(0, rows, size=10) for _ in range(20)]
+    worst = max(
+        sum(len(np.unique(b)) for b in batches[i : i + 6])
+        for i in range(len(batches))
+    )
+    run_pipe(batches, rows, min(rows, worst))  # must not raise
+
+
+def test_hit_rate_reaches_one_when_cache_covers_table():
+    rng = np.random.default_rng(1)
+    rows = 30
+    batches = [rng.integers(0, rows, size=8) for _ in range(30)]
+    host = HostEmbeddingTable(rows, 4, seed=1)
+    tr = SlotCountingTrainer()
+    pipe = ScratchPipe(host, rows, tr.train_fn)
+    stream = LookaheadStream(iter([(b, {}) for b in batches]))
+    stats = pipe.run(stream, lookahead_fn=stream.peek_ids)
+    # once every row has been inserted, every plan lookup hits
+    assert stats[-1].hit_rate == 1.0
