@@ -28,12 +28,19 @@ import jax
 import numpy as np
 
 from repro.configs.base import DLRMConfig
+from repro.configs.dlrm_scratchpipe import hetero_rows
 from repro.core.dlrm_runtime import DLRMTrainer
 from repro.core.host_table import HostEmbeddingTable
-from repro.core.pipeline import ScratchPipe
-from repro.core.static_cache import NoCacheBaseline, StaticCacheBaseline
+from repro.core.runtime import make_runtime
+from repro.core.table_group import TableGroup
 from repro.data.lookahead import LookaheadStream
-from repro.data.synthetic import TraceConfig, dlrm_batches, hot_ids_global
+from repro.data.synthetic import (
+    TraceConfig,
+    dlrm_batches,
+    dlrm_batches_group,
+    hot_ids_for_group,
+    hot_ids_global,
+)
 
 # ---- paper §V constants ----------------------------------------------------
 HOST_BW = 76.8e9 * 0.04
@@ -61,10 +68,15 @@ def _fresh_host(rows: int, dim: int, seed: int) -> HostEmbeddingTable:
     return HostEmbeddingTable(rows, dim, seed=seed, data=_TABLE_CACHE[key].copy())
 
 
-def bench_cfg(embed_dim=128, lookups=20, batch=BENCH_BATCH) -> DLRMConfig:
+def bench_cfg(
+    embed_dim=128, lookups=20, batch=BENCH_BATCH, num_tables=8, hetero=False
+) -> DLRMConfig:
     return DLRMConfig(
         name="dlrm-bench",
+        num_tables=num_tables,
         rows_per_table=BENCH_ROWS_PER_TABLE,
+        # heterogeneous multi-table scenario: Criteo-style geometric spread
+        table_rows=hetero_rows(num_tables, BENCH_ROWS_PER_TABLE) if hetero else None,
         embed_dim=embed_dim,
         lookups_per_table=lookups,
         batch_size=batch,
@@ -153,9 +165,16 @@ def run_design(
     embed_dim: int = 128,
     lookups: int = 20,
     seed: int = 0,
+    num_tables: int = 8,
+    hetero: bool = False,
 ) -> DesignResult:
-    """design in {nocache, static, strawman, scratchpipe}."""
-    cfg = bench_cfg(embed_dim, lookups)
+    """design in {nocache, static, strawman, scratchpipe} — constructed
+    through the EmbeddingCacheRuntime registry. ``num_tables``/``hetero``
+    select the multi-table DLRM scenario (hetero = Criteo-style geometric
+    table sizes cached with per-table slot budgets)."""
+    cfg = bench_cfg(embed_dim, lookups, num_tables=num_tables, hetero=hetero)
+    group = TableGroup.from_config(cfg)
+    rows = group.total_rows
     tc = TraceConfig(
         num_tables=cfg.num_tables,
         rows_per_table=cfg.rows_per_table,
@@ -164,43 +183,78 @@ def run_design(
         locality=locality,
         seed=seed,
     )
-    rows = cfg.num_tables * cfg.rows_per_table
+
+    def batches():
+        if hetero:
+            return dlrm_batches_group(
+                group,
+                steps,
+                batch_size=cfg.batch_size,
+                lookups_per_table=cfg.lookups_per_table,
+                locality=locality,
+                seed=seed,
+            )
+        return dlrm_batches(tc, steps)
+
     host = _fresh_host(rows, cfg.embed_dim, seed=1)
     trainer = DLRMTrainer(cfg, jax.random.key(0), lr=0.05)
     row_b = host.row_bytes
     t0 = time.time()
     try:
         if design == "nocache":
-            runner = NoCacheBaseline(host, trainer.train_fn)
-            stats = runner.run(dlrm_batches(tc, steps))
-            pcie = runner.pcie.total
-            # all embedding fwd+bwd on the host tier: gather + RMW update
+            runner = make_runtime("nocache", host, trainer.train_fn)
+            stats = runner.run(batches())
+            pcie = runner.traffic()["pcie"].total
+            # all embedding fwd+bwd on the host tier: gather + RMW update.
+            # 3x row bytes per unique row — deliberately more than the raw
+            # host.traffic counters (which log gather + scatter = 2x): the
+            # latency model charges the gradient read-modify-write too.
             host_b = sum(s.n_unique for s in stats) * row_b * 3
             dev_b = 0
             hit = 0.0
         elif design == "static":
-            hot = hot_ids_global(tc, cache_frac, steps=20)
-            runner = StaticCacheBaseline(host, hot, trainer.train_fn)
-            stats = runner.run(dlrm_batches(tc, steps))
-            pcie = runner.pcie.total
+            hot = (
+                hot_ids_for_group(group, cache_frac, locality=locality)
+                if hetero
+                else hot_ids_global(tc, cache_frac, steps=20)
+            )
+            runner = make_runtime("static", host, trainer.train_fn, hot_ids=hot)
+            stats = runner.run(batches())
+            tr = runner.traffic()
+            pcie = tr["pcie"].total
+            # host model: gather + gradient RMW on every missed row (3x);
+            # the raw host.traffic counters log gather + scatter (2x)
             host_b = sum(s.n_miss for s in stats) * row_b * 3
-            dev_b = sum(s.n_hits for s in stats) * row_b * 3 + sum(
-                s.n_lookups for s in stats
-            ) * row_b
+            dev_b = tr["hbm"].total  # runtime-accumulated pinned-region bytes
             hit = float(np.mean([s.hit_rate for s in stats]))
         else:
             slots = max(1024, int(rows * cache_frac))
-            pipe = ScratchPipe(
+            budgets = None
+            if hetero:
+                # per-table budgets need the §VI-D per-table window floor
+                floor = group.window_floor(
+                    cfg.batch_size * cfg.lookups_per_table
+                )
+                need = sum(min(floor, r) for r in group.rows)
+                slots = max(slots, need)
+                budgets = group.slot_budgets(slots, min_per_table=floor)
+            pipe = make_runtime(
+                design,
                 host,
-                slots,
                 trainer.train_fn,
-                pipelined=(design == "scratchpipe"),
+                num_slots=slots,
+                # per-table slot budgets only make sense with per-table
+                # (heterogeneous) hot sets; the uniform scenario keeps the
+                # seed-equivalent global slot pool
+                table_group=group if hetero else None,
+                slot_budgets=budgets,
             )
-            stream = LookaheadStream(dlrm_batches(tc, steps))
+            stream = LookaheadStream(batches())
             stats = pipe.run(stream, lookahead_fn=stream.peek_ids)
-            pcie = pipe.pcie.total
-            host_b = host.traffic.total
-            dev_b = pipe.hbm.total
+            tr = pipe.traffic()
+            pcie = tr["pcie"].total
+            host_b = tr["host"].total
+            dev_b = tr["hbm"].total
             warm = stats[6:] if len(stats) > 6 else stats
             hit = float(np.mean([s.hit_rate for s in warm]))
     except RuntimeError as e:

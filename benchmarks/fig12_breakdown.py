@@ -10,7 +10,7 @@ from __future__ import annotations
 from benchmarks.common import LOCALITIES, run_design
 
 
-def run(steps: int = 25) -> list:
+def run(steps: int = 25, num_tables: int = 8) -> list:
     rows = []
     for loc in LOCALITIES:
         for design, frac in (
@@ -20,7 +20,7 @@ def run(steps: int = 25) -> list:
             ("strawman", 0.10),
             ("scratchpipe", 0.10),
         ):
-            r = run_design(design, loc, frac, steps=steps)
+            r = run_design(design, loc, frac, steps=steps, num_tables=num_tables)
             rows.append(
                 {
                     "bench": "fig12_breakdown",

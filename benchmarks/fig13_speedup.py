@@ -8,17 +8,20 @@ import numpy as np
 from benchmarks.common import LOCALITIES, run_design
 
 
-def run(steps: int = 25) -> list:
+def run(steps: int = 25, num_tables: int = 8) -> list:
     rows = []
     for loc in LOCALITIES:
-        base = run_design("nocache", loc, 0.0, steps=steps)
-        static = run_design("static", loc, 0.10, steps=steps)
-        straw = run_design("strawman", loc, 0.10, steps=steps)
-        pipe = run_design("scratchpipe", loc, 0.10, steps=steps)
+        base = run_design("nocache", loc, 0.0, steps=steps, num_tables=num_tables)
+        static = run_design("static", loc, 0.10, steps=steps, num_tables=num_tables)
+        straw = run_design("strawman", loc, 0.10, steps=steps, num_tables=num_tables)
+        pipe = run_design(
+            "scratchpipe", loc, 0.10, steps=steps, num_tables=num_tables
+        )
         rows.append(
             {
                 "bench": "fig13_speedup",
                 "locality": loc,
+                "num_tables": num_tables,
                 "nocache_ms": round(base.iter_ms_paper, 2),
                 "static_ms": round(static.iter_ms_paper, 2),
                 "strawman_ms": round(straw.iter_ms_paper, 2),

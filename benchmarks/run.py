@@ -39,7 +39,7 @@ def _csv_line(name, t0, derived):
     print(f"{name},{us:.0f},{derived}")
 
 
-def run_figures(steps: int):
+def run_figures(steps: int, num_tables: int = 8):
     from benchmarks import (
         fig6_hitrate,
         fig12_breakdown,
@@ -61,7 +61,13 @@ def run_figures(steps: int):
         (overhead, "overhead"),
     ):
         t0 = time.time()
-        rows = mod.run(steps) if "steps" in mod.run.__code__.co_varnames else mod.run()
+        varnames = mod.run.__code__.co_varnames
+        kwargs = {}
+        if "steps" in varnames:
+            kwargs["steps"] = steps
+        if "num_tables" in varnames:
+            kwargs["num_tables"] = num_tables
+        rows = mod.run(**kwargs)
         print(f"\n=== {name} ===", flush=True)
         _emit(rows)
         checks = mod.validate(rows)
@@ -136,10 +142,19 @@ def run_dryrun_summary():
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=12)
+    ap.add_argument(
+        "--tables",
+        type=int,
+        default=8,
+        help="embedding tables in the DLRM cache benchmarks (1 = the "
+        "single-table scenario; 8 = the paper's config)",
+    )
     ap.add_argument("--skip-roofline", action="store_true")
     args = ap.parse_args()
+    if args.tables < 1:
+        ap.error("--tables must be >= 1")
     t0 = time.time()
-    ok = run_figures(args.steps)
+    ok = run_figures(args.steps, args.tables)
     run_dryrun_summary()
     if not args.skip_roofline:
         run_roofline_summary()

@@ -1,11 +1,15 @@
-"""End-to-end driver: train a ~100M-parameter DLRM for a few hundred steps
-under ScratchPipe, with checkpoint/restart supervision and all three designs
-compared on the same trace.
+"""End-to-end driver: train a multi-table DLRM for a few hundred steps
+under ScratchPipe, comparing cache designs (selected from the
+EmbeddingCacheRuntime registry) on the same trace.
 
-Model: 8 tables x 100k rows x 128-dim (~102M embedding params) + MLPerf-DLRM
-MLPs. The trace is medium-locality (calibrated to Fig. 3).
+Model: 8 embedding tables with HETEROGENEOUS row counts (Criteo-style
+geometric spread, 2x between consecutive tables; ~200M embedding params) fused
+into one TableGroup + MLPerf-DLRM MLPs. Each table's lookup stream samples
+its own Zipf over its own row space; the scratchpad is partitioned into
+per-table slot budgets. The trace is medium-locality (calibrated to Fig. 3).
 
     PYTHONPATH=src python examples/train_dlrm_scratchpipe.py [--steps 200]
+    PYTHONPATH=src python examples/train_dlrm_scratchpipe.py --tables 4
 """
 import argparse
 import time
@@ -14,54 +18,80 @@ import jax
 import numpy as np
 
 from repro.configs.base import DLRMConfig
-from repro.core import HostEmbeddingTable, ScratchPipe
+from repro.configs.dlrm_scratchpipe import hetero_rows
+from repro.core import HostEmbeddingTable, TableGroup, make_runtime
 from repro.core.dlrm_runtime import DLRMTrainer
-from repro.core.static_cache import StaticCacheBaseline
 from repro.data.lookahead import LookaheadStream
-from repro.data.synthetic import TraceConfig, dlrm_batches, hot_ids_global
+from repro.data.synthetic import dlrm_batches_group, hot_ids_for_group
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--tables", type=int, default=8)
     ap.add_argument("--locality", default="medium")
     ap.add_argument("--cache-frac", type=float, default=0.0,
                     help="0 = auto-size by the paper's §VI-D worst-case rule")
     args = ap.parse_args()
 
     cfg = DLRMConfig(
-        name="dlrm-100m",
-        rows_per_table=100_000,
+        name="dlrm-100m-multitable",
+        table_rows=hetero_rows(args.tables, 100_000),
         batch_size=128,
         lookups_per_table=20,
     )
+    group = TableGroup.from_config(cfg)
+    rows = group.total_rows
     print(f"model: {cfg.param_count() / 1e6:.1f}M params "
           f"({cfg.table_bytes / 1e9:.2f} GB of embedding tables)")
-    tc = TraceConfig(
-        num_tables=cfg.num_tables,
-        rows_per_table=cfg.rows_per_table,
-        lookups_per_table=cfg.lookups_per_table,
-        batch_size=cfg.batch_size,
-        locality=args.locality,
-    )
-    rows = cfg.num_tables * cfg.rows_per_table
+    print(f"tables: {group}")
 
-    # scratchpad sizing, §VI-D: >= worst-case 6-batch window working set
-    if args.cache_frac > 0:
-        slots = int(rows * args.cache_frac)
-    else:
-        probe = [np.unique(ids).size for ids, _ in dlrm_batches(tc, 4)]
-        slots = min(rows, int(6 * max(probe) * 1.1))
-        print(
-            f"scratchpad auto-sized to {slots} slots "
-            f"({slots / rows:.1%} of the table, §VI-D worst-case rule)"
+    def batches(steps):
+        return dlrm_batches_group(
+            group,
+            steps,
+            batch_size=cfg.batch_size,
+            lookups_per_table=cfg.lookups_per_table,
+            locality=args.locality,
         )
 
-    # ---- ScratchPipe ------------------------------------------------------
+    # scratchpad sizing, §VI-D: >= worst-case 6-batch window working set.
+    # With per-table budgets the rule applies per table: size each table's
+    # budget for ITS worst-case window working set.
+    if args.cache_frac > 0:
+        slots = int(rows * args.cache_frac)
+        # even with an explicit fraction, every table's budget must cover
+        # its §VI-D window floor or the planner runs out of victims
+        floor = group.window_floor(cfg.batch_size * cfg.lookups_per_table)
+        need = sum(min(floor, r) for r in group.rows)
+        if slots < need:
+            print(f"cache-frac {args.cache_frac} below the §VI-D window "
+                  f"floor; growing scratchpad {slots} -> {need} slots")
+            slots = need
+        budgets = group.slot_budgets(slots, min_per_table=floor)
+    else:
+        probes = [group.split(ids) for ids, _ in batches(4)]
+        budgets = [
+            min(
+                group.tables[t].rows,
+                int(6 * max(np.unique(p[t]).size for p in probes) * 1.1),
+            )
+            for t in range(group.num_tables)
+        ]
+        slots = sum(budgets)
+        print(
+            f"scratchpad auto-sized to {slots} slots, per-table budgets "
+            f"{budgets} ({slots / rows:.1%} of the rows, §VI-D rule)"
+        )
+
+    # ---- ScratchPipe (registry-selected) ----------------------------------
     host = HostEmbeddingTable(rows, cfg.embed_dim, seed=1)
     tr = DLRMTrainer(cfg, jax.random.key(0), lr=0.05)
-    pipe = ScratchPipe(host, slots, tr.train_fn)
-    stream = LookaheadStream(dlrm_batches(tc, args.steps))
+    pipe = make_runtime(
+        "scratchpipe", host, tr.train_fn,
+        num_slots=slots, table_group=group, slot_budgets=budgets,
+    )
+    stream = LookaheadStream(batches(args.steps))
     t0 = time.time()
     stats = pipe.run(stream, lookahead_fn=stream.peek_ids)
     dt = time.time() - t0
@@ -72,19 +102,31 @@ def main():
         f"loss {losses[0]:.4f}->{losses[-1]:.4f} "
         f"hit={np.mean([s.hit_rate for s in stats[6:]]):.3f}"
     )
+    traffic = pipe.traffic()
     print(
-        f"  host {host.traffic.total / 1e6:.0f} MB | "
-        f"pcie {pipe.pcie.total / 1e6:.0f} MB | hbm {pipe.hbm.total / 1e6:.0f} MB"
+        f"  host {traffic['host'].total / 1e6:.0f} MB | "
+        f"pcie {traffic['pcie'].total / 1e6:.0f} MB | "
+        f"hbm {traffic['hbm'].total / 1e6:.0f} MB"
     )
+    last = stats[-1]
+    if last.by_table is not None:
+        per = ", ".join(
+            f"{group.tables[t].name}:{int(h)}/{int(h + m)}"
+            for t, (h, m) in enumerate(
+                zip(last.by_table["hits"], last.by_table["misses"])
+            )
+        )
+        print(f"  final-step per-table unique hits: {per}")
 
     # ---- static-cache baseline on the same trace ---------------------------
     frac = slots / rows
     host2 = HostEmbeddingTable(rows, cfg.embed_dim, seed=1)
     tr2 = DLRMTrainer(cfg, jax.random.key(0), lr=0.05)
-    sc = StaticCacheBaseline(
-        host2, hot_ids_global(tc, frac, steps=20), tr2.train_fn
+    sc = make_runtime(
+        "static", host2, tr2.train_fn,
+        hot_ids=hot_ids_for_group(group, frac, locality=args.locality),
     )
-    stats2 = sc.run(dlrm_batches(tc, args.steps))
+    stats2 = sc.run(batches(args.steps))
     sc.flush_to_host()
     losses2 = [float(s.aux["loss"]) for s in stats2]
     print(

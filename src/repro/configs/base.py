@@ -188,6 +188,10 @@ class DLRMConfig:
     family: str = "dlrm"
     num_tables: int = 8
     rows_per_table: int = 10_000_000
+    # Heterogeneous per-table row counts (realistic Criteo-style workloads).
+    # When set it overrides num_tables/rows_per_table; tables fuse into one
+    # global row space at offsets cumsum(table_rows) (core.TableGroup).
+    table_rows: Optional[Tuple[int, ...]] = None
     embed_dim: int = 128
     lookups_per_table: int = 20  # pooling factor (paper default 20)
     num_dense_features: int = 13
@@ -202,12 +206,36 @@ class DLRMConfig:
     future_window: int = 2
     use_pallas: bool = False
 
+    def __post_init__(self):
+        if self.table_rows is not None:
+            object.__setattr__(self, "num_tables", len(self.table_rows))
+
+    @property
+    def table_row_list(self) -> Tuple[int, ...]:
+        """Per-table row counts (uniform fallback when table_rows unset)."""
+        if self.table_rows is not None:
+            return self.table_rows
+        return (self.rows_per_table,) * self.num_tables
+
+    @property
+    def table_offsets(self) -> Tuple[int, ...]:
+        """Fused-row-space start offset of each table (len num_tables)."""
+        offs, acc = [], 0
+        for r in self.table_row_list:
+            offs.append(acc)
+            acc += r
+        return tuple(offs)
+
+    @property
+    def total_rows(self) -> int:
+        return sum(self.table_row_list)
+
     @property
     def table_bytes(self) -> int:
-        return self.num_tables * self.rows_per_table * self.embed_dim * 4
+        return self.total_rows * self.embed_dim * 4
 
     def param_count(self) -> int:
-        emb = self.num_tables * self.rows_per_table * self.embed_dim
+        emb = self.total_rows * self.embed_dim
         dims_b = (self.num_dense_features,) + self.bottom_mlp
         bot = sum(a * b + b for a, b in zip(dims_b[:-1], dims_b[1:]))
         n_int = self.num_tables + 1

@@ -29,6 +29,40 @@ def smoke_config() -> DLRMConfig:
     )
 
 
+def hetero_rows(num_tables: int, base_rows: int) -> tuple:
+    """Criteo-style heterogeneous table sizes: geometric spread around
+    ``base_rows`` with a 2x ratio between consecutive tables (largest is
+    2^(num_tables-1)x the smallest, floored at 64 rows — echoing the public
+    Criteo dataset's orders-of-magnitude vocabulary skew)."""
+    return tuple(
+        max(64, int(base_rows * 2.0 ** (num_tables / 2 - 1 - t)))
+        for t in range(num_tables)
+    )
+
+
+def multi_table_config(num_tables: int = 8, base_rows: int = 10_000_000) -> DLRMConfig:
+    """The paper's DLRM with HETEROGENEOUS per-table row counts — the
+    realistic multi-table workload the TableGroup runtime is built for."""
+    return DLRMConfig(
+        name=f"dlrm-multitable-{num_tables}",
+        table_rows=hetero_rows(num_tables, base_rows),
+    )
+
+
+def multi_table_smoke_config(num_tables: int = 4) -> DLRMConfig:
+    return DLRMConfig(
+        name=f"dlrm-multitable-smoke-{num_tables}",
+        table_rows=hetero_rows(num_tables, 512),
+        embed_dim=16,
+        lookups_per_table=4,
+        num_dense_features=13,
+        bottom_mlp=(32, 16),
+        top_mlp=(32, 16, 1),
+        batch_size=32,
+        cache_fraction=0.125,
+    )
+
+
 ENTRY = ArchEntry(
     config=config(), smoke=smoke_config(), shapes=(DLRM_TRAIN,), skips=()
 )

@@ -1,9 +1,19 @@
 # The paper's primary contribution: ScratchPipe — a look-forward, always-hit
-# embedding cache runtime (Plan/Collect/Exchange/Insert/Train pipeline).
+# embedding cache runtime (Plan/Collect/Exchange/Insert/Train pipeline),
+# generalized over multi-table embedding models via TableGroup and unified
+# behind the EmbeddingCacheRuntime registry.
 from repro.core.host_table import HostEmbeddingTable, HostTraffic  # noqa: F401
 from repro.core.pipeline import ScratchPipe, StepStats  # noqa: F401
 from repro.core.plan import Planner, PlanResult  # noqa: F401
+from repro.core.runtime import (  # noqa: F401
+    EmbeddingCacheRuntime,
+    available_runtimes,
+    make_runtime,
+    register_runtime,
+)
+from repro.core.sharded_pipeline import ShardedScratchPipe  # noqa: F401
 from repro.core.static_cache import (  # noqa: F401
     NoCacheBaseline,
     StaticCacheBaseline,
 )
+from repro.core.table_group import TableGroup, TableSpec, single_table  # noqa: F401

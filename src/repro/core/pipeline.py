@@ -32,6 +32,8 @@ import numpy as np
 from repro.core import scratchpad as sp
 from repro.core.host_table import HostEmbeddingTable, HostTraffic
 from repro.core.plan import Planner, PlanResult
+from repro.core.runtime import register_runtime
+from repro.core.table_group import TableGroup
 
 
 @dataclasses.dataclass
@@ -42,6 +44,8 @@ class StepStats:
     n_hits: int
     n_miss: int
     n_evict: int
+    hit_lookups: int = 0  # lookup-level (non-unique) hit count
+    by_table: Any = None  # per-table {hits, misses} (multi-table runs only)
     aux: Any = None
 
     @property
@@ -73,18 +77,42 @@ class ScratchPipe:
         policy: str = "lru",
         pipelined: bool = True,
         storage_dtype=None,
+        table_group: Optional[TableGroup] = None,
+        slot_budgets=None,
     ):
         self.host = host_table
         self.train_fn = train_fn
         self.pipelined = pipelined
+        self.table_group = table_group
         if not pipelined:  # straw-man (§IV-B): depth-1, no hazards possible
             past_window, future_window = 0, 0
+        if table_group is not None:
+            if table_group.total_rows != host_table.rows:
+                raise ValueError(
+                    f"table_group covers {table_group.total_rows} rows, "
+                    f"host table has {host_table.rows}"
+                )
+            budgets = (
+                list(slot_budgets)
+                if slot_budgets is not None
+                else table_group.slot_budgets(num_slots)
+            )
+            if sum(budgets) > num_slots:
+                raise ValueError(
+                    f"slot budgets {budgets} exceed num_slots={num_slots}"
+                )
+            row_offsets = table_group.offsets
+            slot_ranges = table_group.slot_ranges(budgets)
+        else:
+            row_offsets = slot_ranges = None
         self.planner = Planner(
             host_table.rows,
             num_slots,
             past_window=past_window,
             future_window=future_window,
             policy=policy,
+            row_offsets=row_offsets,
+            slot_ranges=slot_ranges,
         )
         import jax.numpy as jnp
 
@@ -134,6 +162,9 @@ class ScratchPipe:
         self.hbm.read += p.slots.size * self.host.row_bytes
         self.hbm.read += p.n_unique * self.host.row_bytes
         self.hbm.written += p.n_unique * self.host.row_bytes
+        by_table = None
+        if p.hits_by_table is not None:
+            by_table = {"hits": p.hits_by_table, "misses": p.misses_by_table}
         st = StepStats(
             step=p.step,
             n_lookups=int(p.slots.size),
@@ -141,6 +172,8 @@ class ScratchPipe:
             n_hits=p.n_hits,
             n_miss=int(p.miss_ids.size),
             n_evict=int(p.evict_slots.size),
+            hit_lookups=int(p.slots.size),  # always-hit at [Train] (§IV)
+            by_table=by_table,
             aux=aux,
         )
         self._stats.append(st)
@@ -228,7 +261,6 @@ class ScratchPipe:
             self._stage_collect(entry)
             self._stage_exchange(entry)
             self._stage_insert(entry)
-            entry._inserted = True
             out.append(self._stage_train(entry))
         return out
 
@@ -265,3 +297,17 @@ class ScratchPipe:
     @property
     def stats(self) -> List[StepStats]:
         return self._stats
+
+    def traffic(self) -> dict:
+        return {"host": self.host.traffic, "pcie": self.pcie, "hbm": self.hbm}
+
+
+@register_runtime("scratchpipe")
+def _make_scratchpipe(host_table, train_fn, *, num_slots, **kw) -> ScratchPipe:
+    return ScratchPipe(host_table, num_slots, train_fn, **kw)
+
+
+@register_runtime("strawman")
+def _make_strawman(host_table, train_fn, *, num_slots, **kw) -> ScratchPipe:
+    kw.pop("pipelined", None)
+    return ScratchPipe(host_table, num_slots, train_fn, pipelined=False, **kw)

@@ -23,7 +23,7 @@ in-flight batch's [Train] completing.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -40,9 +40,21 @@ class PlanResult:
     evict_ids: np.ndarray  # row ids written back to host ([Insert])
     n_unique: int = 0
     n_hits: int = 0
+    # per-table breakdowns (None for the 1-table degenerate case)
+    hits_by_table: Optional[np.ndarray] = None
+    misses_by_table: Optional[np.ndarray] = None
 
 
 class Planner:
+    """[Plan] controller over the fused row space of a TableGroup.
+
+    ``row_offsets``/``slot_ranges`` partition the row space and the slot
+    space per table: each table's misses allocate only from its own slot
+    budget, so one table's burst cannot evict another table's rows. Both
+    default to a single all-covering partition — the pre-TableGroup
+    single-table behavior, bit-for-bit.
+    """
+
     def __init__(
         self,
         num_rows: int,
@@ -52,6 +64,8 @@ class Planner:
         future_window: int = 2,
         policy: str = "lru",
         seed: int = 0,
+        row_offsets: Optional[Sequence[int]] = None,
+        slot_ranges: Optional[Sequence[Tuple[int, int]]] = None,
     ):
         if policy not in ("lru", "random", "lfu"):
             raise ValueError(f"unknown replacement policy {policy!r}")
@@ -62,15 +76,48 @@ class Planner:
         self.policy = policy
         self._rng = np.random.default_rng(seed)
 
+        # per-table partition of the row space and the slot space
+        self.row_offsets = (
+            np.asarray(row_offsets, dtype=np.int64)
+            if row_offsets is not None
+            else np.array([0, self.num_rows], dtype=np.int64)
+        )
+        self.slot_ranges = (
+            [(int(lo), int(hi)) for lo, hi in slot_ranges]
+            if slot_ranges is not None
+            else [(0, self.num_slots)]
+        )
+        self.num_tables = len(self.slot_ranges)
+        if len(self.row_offsets) != self.num_tables + 1:
+            raise ValueError(
+                f"row_offsets has {len(self.row_offsets) - 1} tables, "
+                f"slot_ranges has {self.num_tables}"
+            )
+        if int(self.row_offsets[-1]) != self.num_rows:
+            raise ValueError("row_offsets must end at num_rows")
+        for t in range(self.num_tables - 1):
+            if self.slot_ranges[t][1] != self.slot_ranges[t + 1][0]:
+                raise ValueError("slot_ranges must be contiguous and ordered")
+        if self.slot_ranges[-1][1] > self.num_slots:
+            raise ValueError("slot_ranges exceed num_slots")
+
         self.hitmap = np.full(self.num_rows, -1, dtype=np.int64)  # id -> slot
         self.slot_to_id = np.full(self.num_slots, -1, dtype=np.int64)
         self.hold = np.zeros(self.num_slots, dtype=np.uint32)  # shift register
         self.last_use = np.zeros(self.num_slots, dtype=np.int64)  # lru
         self.use_count = np.zeros(self.num_slots, dtype=np.int64)  # lfu
-        self._free_ptr = 0  # slots never allocated yet
+        # per-table pointer into slots never allocated yet
+        self._free_ptrs = np.array(
+            [lo for lo, _ in self.slot_ranges], dtype=np.int64
+        )
         self._cycle = 0
         # W-bit window: past mini-batches + the current one
         self._hold_bit = np.uint32(1 << self.past_window)
+
+    @property
+    def _free_ptr(self) -> int:
+        """Single-table free pointer (degenerate-case convenience)."""
+        return int(self._free_ptrs[0])
 
     # -- stats ---------------------------------------------------------------
     @property
@@ -85,7 +132,8 @@ class Planner:
             "hold": self.hold,
             "last_use": self.last_use,
             "use_count": self.use_count,
-            "scalars": np.array([self._free_ptr, self._cycle], np.int64),
+            "cycle": np.array([self._cycle], np.int64),
+            "free_ptrs": np.asarray(self._free_ptrs, np.int64),
         }
 
     def load_state_dict(self, st: dict) -> None:
@@ -94,7 +142,24 @@ class Planner:
         self.hold = np.asarray(st["hold"], np.uint32)
         self.last_use = np.asarray(st["last_use"], np.int64)
         self.use_count = np.asarray(st["use_count"], np.int64)
-        self._free_ptr, self._cycle = (int(x) for x in st["scalars"])
+        if "free_ptrs" not in st:
+            if "scalars" in st and self.num_tables == 1:
+                # pre-TableGroup checkpoint: scalars = [free_ptr, cycle]
+                fp, cyc = (int(x) for x in np.asarray(st["scalars"], np.int64))
+                self._cycle = cyc
+                self._free_ptrs = np.array([fp], np.int64)
+                return
+            raise ValueError(
+                "incompatible planner checkpoint: expected 'free_ptrs'/'cycle' "
+                "(or a legacy single-table 'scalars' entry)"
+            )
+        self._cycle = int(np.asarray(st["cycle"], np.int64)[0])
+        self._free_ptrs = np.asarray(st["free_ptrs"], np.int64).copy()
+        if len(self._free_ptrs) != self.num_tables:
+            raise ValueError(
+                f"checkpoint has {len(self._free_ptrs)} table free-pointers, "
+                f"planner has {self.num_tables} tables"
+            )
 
     def plan(
         self, ids: np.ndarray, future_batches: Optional[List[np.ndarray]] = None
@@ -128,35 +193,58 @@ class Planner:
         miss_ids = uniq[~hit_mask]
         n_miss = miss_ids.size
 
-        # Allocation: fresh slots first, then victims with hold==0.
-        n_fresh = min(n_miss, self.num_slots - self._free_ptr)
-        fresh = np.arange(self._free_ptr, self._free_ptr + n_fresh, dtype=np.int64)
-        self._free_ptr += n_fresh
-        n_evict = n_miss - n_fresh
-        if n_evict > 0:
-            eligible = (self.hold == 0) & ~future_held & (self.slot_to_id >= 0)
-            cand = np.flatnonzero(eligible)
-            if cand.size < n_evict:
-                raise RuntimeError(
-                    f"scratchpad too small: need {n_evict} victims, "
-                    f"only {cand.size} evictable (slots={self.num_slots}, "
-                    f"window={self.past_window}+1+{self.future_window}); "
-                    "size the Storage array for the worst-case window "
-                    "working set (paper §VI-D)."
-                )
-            if self.policy == "lru":
-                # stable sort: ties broken by slot index (matches plan_jax)
-                order = np.argsort(self.last_use[cand], kind="stable")[:n_evict]
-            elif self.policy == "lfu":
-                order = np.argsort(self.use_count[cand], kind="stable")[:n_evict]
-            else:  # random
-                order = self._rng.choice(cand.size, size=n_evict, replace=False)
-            victims = cand[order]
-        else:
-            victims = np.empty(0, dtype=np.int64)
-
+        # Per-table allocation: fresh slots first, then victims with hold==0,
+        # each table confined to its own slot budget. ``miss_ids`` is sorted
+        # and table row ranges never interleave, so each table's misses are
+        # one contiguous segment — per-table fill arrays concatenated in
+        # table order stay aligned with ``miss_ids``.
+        seg = np.searchsorted(miss_ids, self.row_offsets)
+        eligible = (self.hold == 0) & ~future_held & (self.slot_to_id >= 0)
+        fill_parts: List[np.ndarray] = []
+        victim_parts: List[np.ndarray] = []
+        for t in range(self.num_tables):
+            n_miss_t = int(seg[t + 1] - seg[t])
+            if n_miss_t == 0:
+                continue
+            lo, hi = self.slot_ranges[t]
+            n_fresh = min(n_miss_t, hi - int(self._free_ptrs[t]))
+            fresh = np.arange(
+                self._free_ptrs[t], self._free_ptrs[t] + n_fresh, dtype=np.int64
+            )
+            self._free_ptrs[t] += n_fresh
+            n_evict = n_miss_t - n_fresh
+            if n_evict > 0:
+                cand = np.flatnonzero(eligible[lo:hi]) + lo
+                if cand.size < n_evict:
+                    raise RuntimeError(
+                        f"scratchpad too small: need {n_evict} victims, "
+                        f"only {cand.size} evictable (table {t}: "
+                        f"slots={hi - lo} of {self.num_slots}, "
+                        f"window={self.past_window}+1+{self.future_window}); "
+                        "size the Storage array for the worst-case window "
+                        "working set (paper §VI-D)."
+                    )
+                if self.policy == "lru":
+                    # stable sort: ties broken by slot index (matches plan_jax)
+                    order = np.argsort(self.last_use[cand], kind="stable")[:n_evict]
+                elif self.policy == "lfu":
+                    order = np.argsort(self.use_count[cand], kind="stable")[:n_evict]
+                else:  # random
+                    order = self._rng.choice(cand.size, size=n_evict, replace=False)
+                victims_t = cand[order]
+                victim_parts.append(victims_t)
+                fill_parts.append(np.concatenate([fresh, victims_t]))
+            else:
+                fill_parts.append(fresh)
+        victims = (
+            np.concatenate(victim_parts)
+            if victim_parts
+            else np.empty(0, dtype=np.int64)
+        )
         evict_ids = self.slot_to_id[victims]
-        fill_slots = np.concatenate([fresh, victims]) if n_miss else fresh
+        fill_slots = (
+            np.concatenate(fill_parts) if fill_parts else np.empty(0, np.int64)
+        )
 
         # HitMap updated at [Plan] time (ahead of Storage — paper Fig. 11).
         if evict_ids.size:
@@ -170,6 +258,13 @@ class Planner:
 
         # Dense per-input slot mapping (what [Train] gathers with).
         slots = self.hitmap[flat].reshape(np.asarray(ids).shape)
+        hits_by_table = misses_by_table = None
+        if self.num_tables > 1:
+            misses_by_table = np.diff(seg).astype(np.int64)
+            hit_ids = uniq[hit_mask]
+            hits_by_table = np.diff(
+                np.searchsorted(hit_ids, self.row_offsets)
+            ).astype(np.int64)
         return PlanResult(
             step=self._cycle,
             slots=slots,
@@ -179,4 +274,6 @@ class Planner:
             evict_ids=evict_ids,
             n_unique=int(uniq.size),
             n_hits=int(hit_mask.sum()),
+            hits_by_table=hits_by_table,
+            misses_by_table=misses_by_table,
         )

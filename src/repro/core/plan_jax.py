@@ -19,7 +19,7 @@ step with unused allocations rolled back — the standard fixed-shape trick.
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Optional, Tuple
+from typing import List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -164,3 +164,64 @@ def plan_step(
         "ok": ok,
     }
     return new_state, outputs
+
+
+# ---------------------------------------------------------------------------
+# Multi-table (TableGroup) wrapper: per-table device planners over one fused
+# slot space. Each table's misses allocate only from its own slot budget —
+# the device analog of the host Planner's slot_ranges. States are a list (one
+# PlanState per table, jit-cached per shape); outputs are offset into GLOBAL
+# slot/row coordinates so [Collect]/[Insert]/[Train] address the fused
+# Storage array directly.
+# ---------------------------------------------------------------------------
+
+
+def init_group_states(group, budgets: Sequence[int]) -> List[PlanState]:
+    """One PlanState per table of a TableGroup, sized by its slot budget."""
+    assert len(budgets) == group.num_tables, (len(budgets), group.num_tables)
+    return [
+        init_state(spec.rows, int(b)) for spec, b in zip(group.tables, budgets)
+    ]
+
+
+def plan_group_step(
+    states: List[PlanState],
+    group,
+    per_table_ids: Sequence[jax.Array],  # local ids per table, -1 padded
+    per_table_future: Sequence[jax.Array],  # local look-ahead union per table
+    *,
+    past_window: int = 3,
+) -> Tuple[List[PlanState], List[dict]]:
+    """One fused [Plan] cycle over every table. Returns per-table outputs
+    with ``slots``/``fill_slots`` offset by the table's slot-range start and
+    ``miss_ids``/``evict_ids`` offset into the fused row space (-1 padding
+    preserved)."""
+    slot_lo = 0
+    new_states, outs = [], []
+    for t, state in enumerate(states):
+        st, out = plan_step(
+            state,
+            jnp.asarray(per_table_ids[t], jnp.int32),
+            jnp.asarray(per_table_future[t], jnp.int32),
+            past_window=past_window,
+        )
+        row_off = jnp.int32(group.offsets[t])
+        off = {
+            "slots": jnp.where(out["slots"] >= 0, out["slots"] + slot_lo, -1),
+            "fill_slots": jnp.where(
+                out["fill_slots"] >= 0, out["fill_slots"] + slot_lo, -1
+            ),
+            "miss_ids": jnp.where(
+                out["miss_ids"] >= 0, out["miss_ids"] + row_off, -1
+            ),
+            "evict_ids": jnp.where(
+                out["evict_ids"] >= 0, out["evict_ids"] + row_off, -1
+            ),
+            "n_hits": out["n_hits"],
+            "n_unique": out["n_unique"],
+            "ok": out["ok"],
+        }
+        new_states.append(st)
+        outs.append(off)
+        slot_lo += state.slot_to_id.shape[0]
+    return new_states, outs

@@ -12,36 +12,58 @@ device that owns each row — on a real mesh the shards live on different
 chips; here they are N independent buffers, which preserves all scheduling
 and correctness semantics (tests/test_sharded_pipeline.py: bit-tight vs the
 single-manager runtime).
+
+Partitioning is either uniform (``num_shards`` equal ranges — the original
+API) or follows a :class:`~repro.core.table_group.TableGroup`
+(``from_group``: one cache manager per embedding table, the paper's natural
+multi-table placement, with per-table scratchpad budgets).
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Iterator, List, Sequence, Tuple
+from typing import Any, Callable, Iterator, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from repro.core.host_table import HostEmbeddingTable
+from repro.core.host_table import HostEmbeddingTable, HostTraffic
 from repro.core.pipeline import ScratchPipe, StepStats
+from repro.core.runtime import register_runtime
+from repro.core.table_group import TableGroup
 
 
 class ShardedScratchPipe:
     def __init__(
         self,
         host_table: HostEmbeddingTable,
-        num_slots: int,
+        num_slots: Union[int, Sequence[int]],
         num_shards: int,
         train_fn: Callable[[Sequence, Sequence, Any], Tuple[Sequence, Any]],
         *,
         past_window: int = 3,
         future_window: int = 2,
         policy: str = "lru",
+        boundaries: Optional[Sequence[int]] = None,
     ):
         """``train_fn(storages, slots_per_shard, batch)`` ->
-        (new_storages, aux). ``num_slots`` is the per-shard scratchpad size.
-        The global table must shard evenly."""
+        (new_storages, aux). ``num_slots`` is the per-shard scratchpad size
+        (int: same for every shard; sequence: one per shard).
+        ``boundaries`` (len num_shards+1) range-partitions the global row
+        space; default: equal split (the table must then shard evenly)."""
         rows = host_table.rows
-        assert rows % num_shards == 0, (rows, num_shards)
-        self.rows_per_shard = rows // num_shards
+        if boundaries is None:
+            assert rows % num_shards == 0, (rows, num_shards)
+            step = rows // num_shards
+            boundaries = [i * step for i in range(num_shards + 1)]
+        assert len(boundaries) == num_shards + 1, (len(boundaries), num_shards)
+        assert boundaries[0] == 0 and boundaries[-1] == rows, boundaries
+        self.boundaries = np.asarray(boundaries, dtype=np.int64)
+        shard_rows = np.diff(self.boundaries)
+        self.rows_per_shard = (
+            int(shard_rows[0]) if len(set(shard_rows.tolist())) == 1 else None
+        )
         self.num_shards = num_shards
+        if isinstance(num_slots, int):
+            num_slots = [num_slots] * num_shards
+        assert len(num_slots) == num_shards, (num_slots, num_shards)
         self.train_fn = train_fn
         self._pending: dict = {}
 
@@ -65,16 +87,12 @@ class ShardedScratchPipe:
         # per-shard host table views (shared backing array: zero-copy slices)
         self.pipes: List[ScratchPipe] = []
         for i in range(num_shards):
-            sl = host_table.data[
-                i * self.rows_per_shard : (i + 1) * self.rows_per_shard
-            ]
-            ht = HostEmbeddingTable(
-                self.rows_per_shard, host_table.dim, data=sl
-            )
+            lo, hi = int(self.boundaries[i]), int(self.boundaries[i + 1])
+            ht = HostEmbeddingTable(hi - lo, host_table.dim, data=host_table.data[lo:hi])
             self.pipes.append(
                 ScratchPipe(
                     ht,
-                    num_slots,
+                    int(num_slots[i]),
                     shard_train_fn(i),
                     past_window=past_window,
                     future_window=future_window,
@@ -82,16 +100,38 @@ class ShardedScratchPipe:
                 )
             )
 
+    @classmethod
+    def from_group(
+        cls,
+        host_table: HostEmbeddingTable,
+        num_slots: int,
+        group: TableGroup,
+        train_fn,
+        **kw,
+    ) -> "ShardedScratchPipe":
+        """One cache manager per embedding table; ``num_slots`` total slots
+        split into per-table budgets by the group's hot-set weights."""
+        assert host_table.rows == group.total_rows, (
+            host_table.rows,
+            group.total_rows,
+        )
+        return cls(
+            host_table,
+            group.slot_budgets(num_slots),
+            group.num_tables,
+            train_fn,
+            boundaries=group.offsets.tolist(),
+            **kw,
+        )
+
     def _bucket(self, ids: np.ndarray) -> List[np.ndarray]:
-        """Row ids -> per-shard LOCAL ids (same shape; foreign entries are
-        duplicates of a local placeholder? No — ScratchPipe plans per table
+        """Row ids -> per-shard LOCAL ids. ScratchPipe plans per table
         partition, so each shard receives only ids in its range; shapes vary
-        per shard, which the per-shard [Train] slots reflect)."""
+        per shard, which the per-shard [Train] slots reflect."""
         out = []
+        flat = np.asarray(ids).ravel()
         for i in range(self.num_shards):
-            lo = i * self.rows_per_shard
-            hi = lo + self.rows_per_shard
-            flat = ids.ravel()
+            lo, hi = int(self.boundaries[i]), int(self.boundaries[i + 1])
             mine = flat[(flat >= lo) & (flat < hi)] - lo
             out.append(mine)
         return out
@@ -131,6 +171,82 @@ class ShardedScratchPipe:
                         outs[i].append(st)
         return outs[-1]
 
+    def run_one_cycle(self, ids, batch, lookahead_fn=None) -> Optional[StepStats]:
+        """Admit one mini-batch (global ids) to every shard and advance each
+        one cycle. ``lookahead_fn(k)`` yields upcoming GLOBAL id batches;
+        they are bucketed per shard. Returns the last shard's completed
+        StepStats (aux carries the global loss), or None while filling."""
+        buckets = self._bucket(np.asarray(ids))
+        fut_cache: dict = {}  # k -> per-batch bucket lists (bucket once,
+        # not once per shard: S shards would otherwise redo the S-way scan)
+
+        def look(i):
+            def fn(k):
+                if k not in fut_cache:
+                    fut_cache[k] = [
+                        self._bucket(np.asarray(b)) for b in lookahead_fn(k)
+                    ]
+                return [bb[i] for bb in fut_cache[k]]
+
+            return fn
+
+        st_last: Optional[StepStats] = None
+        for i, pipe in enumerate(self.pipes):
+            st = pipe.run_one_cycle(
+                buckets[i], batch, look(i) if lookahead_fn else None
+            )
+            if i == self.num_shards - 1:
+                st_last = st
+        return st_last
+
     def flush_to_host(self):
         for pipe in self.pipes:
             pipe.flush_to_host()
+
+    @property
+    def stats(self) -> List[StepStats]:
+        """Last shard's per-step stats (its aux carries the global loss)."""
+        return self.pipes[-1].stats
+
+    def traffic(self) -> dict:
+        """Aggregated byte counters across all shard managers."""
+        agg = {k: HostTraffic() for k in ("host", "pcie", "hbm")}
+        for pipe in self.pipes:
+            for k, t in pipe.traffic().items():
+                agg[k].read += t.read
+                agg[k].written += t.written
+        return agg
+
+
+@register_runtime("sharded")
+def _make_sharded(
+    host_table,
+    train_fn,
+    *,
+    num_slots,
+    table_group=None,
+    num_shards=None,
+    slot_budgets=None,
+    **kw,
+) -> ShardedScratchPipe:
+    """table_group: one shard per table (per-table budgets; explicit
+    ``slot_budgets`` override the proportional split); otherwise a uniform
+    ``num_shards`` range partition."""
+    if table_group is not None:
+        if slot_budgets is not None:
+            return ShardedScratchPipe(
+                host_table,
+                list(slot_budgets),
+                table_group.num_tables,
+                train_fn,
+                boundaries=table_group.offsets.tolist(),
+                **kw,
+            )
+        return ShardedScratchPipe.from_group(
+            host_table, num_slots, table_group, train_fn, **kw
+        )
+    if slot_budgets is not None:
+        raise TypeError("sharded: slot_budgets requires table_group")
+    return ShardedScratchPipe(
+        host_table, num_slots, num_shards or 1, train_fn, **kw
+    )

@@ -10,19 +10,22 @@
   memory — the cost ScratchPipe eliminates).
 
 Both run the SAME jitted [Train] computation as ScratchPipe so end-to-end
-training math is identical; only row placement differs.
+training math is identical; only row placement differs. Both satisfy the
+EmbeddingCacheRuntime protocol (run / run_one_cycle / flush_to_host /
+stats / traffic) — unpipelined designs complete a step per cycle. Multi-
+table awareness comes entirely from the fused row space: per-table hot-id
+budgets are provisioned by ``repro.data.synthetic.hot_ids_for_group``.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable, Iterator, List, Tuple
+from typing import List, Optional
 
 import jax
 import numpy as np
 
-from repro.core import scratchpad as sp
 from repro.core.host_table import HostEmbeddingTable, HostTraffic
 from repro.core.pipeline import StepStats
+from repro.core.runtime import register_runtime
 
 
 class NoCacheBaseline:
@@ -37,35 +40,48 @@ class NoCacheBaseline:
         self.host = host_table
         self.train_fn = train_fn
         self.pcie = HostTraffic()
+        self.hbm = HostTraffic()  # stays zero: device holds no embedding rows
         self._stats: List[StepStats] = []
 
+    def _step(self, step: int, ids, batch) -> StepStats:
+        ids = np.asarray(ids)
+        flat = ids.ravel()
+        uniq, inv = np.unique(flat, return_inverse=True)
+        rows = self.host.gather(uniq)  # host gather (memory-bound)
+        storage = jax.device_put(rows)
+        self.pcie.written += rows.nbytes
+        slots = inv.reshape(ids.shape)
+        storage, aux = self.train_fn(storage, jax.device_put(slots), batch)
+        new_rows = np.asarray(storage)
+        self.pcie.read += new_rows.nbytes
+        # host-side scatter of trained rows (gradient path on slow tier)
+        self.host.scatter(uniq, new_rows)
+        st = StepStats(
+            step=step,
+            n_lookups=int(flat.size),
+            n_unique=int(uniq.size),
+            n_hits=0,
+            n_miss=int(uniq.size),
+            n_evict=0,
+            aux=aux,
+        )
+        self._stats.append(st)
+        return st
+
     def run(self, stream, lookahead_fn=None) -> List[StepStats]:
-        out = []
-        for step, (ids, batch) in enumerate(stream, 1):
-            ids = np.asarray(ids)
-            flat = ids.ravel()
-            uniq, inv = np.unique(flat, return_inverse=True)
-            rows = self.host.gather(uniq)  # host gather (memory-bound)
-            storage = jax.device_put(rows)
-            self.pcie.written += rows.nbytes
-            slots = inv.reshape(ids.shape)
-            storage, aux = self.train_fn(storage, jax.device_put(slots), batch)
-            new_rows = np.asarray(storage)
-            self.pcie.read += new_rows.nbytes
-            # host-side scatter of trained rows (gradient path on slow tier)
-            self.host.scatter(uniq, new_rows)
-            st = StepStats(
-                step=step,
-                n_lookups=int(flat.size),
-                n_unique=int(uniq.size),
-                n_hits=0,
-                n_miss=int(uniq.size),
-                n_evict=0,
-                aux=aux,
-            )
-            self._stats.append(st)
-            out.append(st)
-        return out
+        return [
+            self._step(step, ids, batch)
+            for step, (ids, batch) in enumerate(stream, 1)
+        ]
+
+    def run_one_cycle(self, ids, batch, lookahead_fn=None) -> Optional[StepStats]:
+        return self._step(len(self._stats) + 1, ids, batch)
+
+    def flush_to_host(self):
+        pass  # nothing device-resident
+
+    def traffic(self) -> dict:
+        return {"host": self.host.traffic, "pcie": self.pcie, "hbm": self.hbm}
 
     @property
     def stats(self):
@@ -73,7 +89,11 @@ class NoCacheBaseline:
 
 
 class StaticCacheBaseline:
-    """Yin et al. static top-N cache. ``hot_ids`` are pinned on-device."""
+    """Yin et al. static top-N cache. ``hot_ids`` are pinned on-device.
+
+    ``hot_ids`` are GLOBAL row ids; for a TableGroup they come from per-table
+    top-N profiling (each table keeps its own pinned budget — see
+    ``repro.data.synthetic.hot_ids_for_group``)."""
 
     def __init__(
         self,
@@ -84,6 +104,7 @@ class StaticCacheBaseline:
         self.host = host_table
         self.train_fn = train_fn
         self.pcie = HostTraffic()
+        self.hbm = HostTraffic()  # pinned-region traffic ([Train] on hits)
         self.hot_ids = np.asarray(np.sort(hot_ids), dtype=np.int64)
         self.id_to_slot = np.full(host_table.rows, -1, dtype=np.int64)
         self.id_to_slot[self.hot_ids] = np.arange(self.hot_ids.size)
@@ -91,56 +112,92 @@ class StaticCacheBaseline:
         host_table.traffic.reset()  # preload is not steady-state traffic
         self._stats: List[StepStats] = []
 
+    def _step(self, step: int, ids, batch) -> StepStats:
+        ids = np.asarray(ids)
+        flat = ids.ravel()
+        uniq = np.unique(flat)
+        slots_u = self.id_to_slot[uniq]
+        miss_ids = uniq[slots_u < 0]
+        n_hit_lookups = int(np.sum(self.id_to_slot[flat] >= 0))
+        n_hits = int(uniq.size - miss_ids.size)
+
+        # Misses: gather from host, append to a transient device region
+        # behind the pinned area (fresh every step — no insertion).
+        miss_rows = self.host.gather(miss_ids)
+        self.pcie.written += miss_rows.nbytes
+        ext = jax.device_put(
+            np.concatenate([np.asarray(self.storage), miss_rows], axis=0)
+            if miss_ids.size
+            else np.asarray(self.storage)
+        )
+        tmp_map = self.id_to_slot.copy()
+        tmp_map[miss_ids] = self.hot_ids.size + np.arange(miss_ids.size)
+        slots = tmp_map[flat].reshape(ids.shape)
+
+        ext, aux = self.train_fn(ext, jax.device_put(slots), batch)
+        ext_np = np.asarray(ext)
+        # hit rows stay on device; missed rows' trained values scatter
+        # back to the host tier (the slow bwd path, Fig. 4(b) right).
+        self.storage = jax.device_put(ext_np[: self.hot_ids.size])
+        if miss_ids.size:
+            upd = ext_np[self.hot_ids.size :]
+            self.pcie.read += upd.nbytes
+            self.host.scatter(miss_ids, upd)
+        # device-tier bytes: bag gathers over all lookups + read-mod-write
+        # of the pinned hit rows
+        row_b = self.host.row_bytes
+        self.hbm.read += (2 * n_hits + int(flat.size)) * row_b
+        self.hbm.written += n_hits * row_b
+
+        st = StepStats(
+            step=step,
+            n_lookups=int(flat.size),
+            n_unique=int(uniq.size),
+            n_hits=n_hits,
+            n_miss=int(miss_ids.size),
+            n_evict=0,
+            hit_lookups=n_hit_lookups,
+            aux=aux,
+        )
+        self._stats.append(st)
+        return st
+
     def run(self, stream, lookahead_fn=None) -> List[StepStats]:
-        out = []
-        for step, (ids, batch) in enumerate(stream, 1):
-            ids = np.asarray(ids)
-            flat = ids.ravel()
-            uniq = np.unique(flat)
-            slots_u = self.id_to_slot[uniq]
-            miss_ids = uniq[slots_u < 0]
-            n_hit_lookups = int(np.sum(self.id_to_slot[flat] >= 0))
+        return [
+            self._step(step, ids, batch)
+            for step, (ids, batch) in enumerate(stream, 1)
+        ]
 
-            # Misses: gather from host, append to a transient device region
-            # behind the pinned area (fresh every step — no insertion).
-            miss_rows = self.host.gather(miss_ids)
-            self.pcie.written += miss_rows.nbytes
-            ext = jax.device_put(
-                np.concatenate([np.asarray(self.storage), miss_rows], axis=0)
-                if miss_ids.size
-                else np.asarray(self.storage)
-            )
-            tmp_map = self.id_to_slot.copy()
-            tmp_map[miss_ids] = self.hot_ids.size + np.arange(miss_ids.size)
-            slots = tmp_map[flat].reshape(ids.shape)
-
-            ext, aux = self.train_fn(ext, jax.device_put(slots), batch)
-            ext_np = np.asarray(ext)
-            # hit rows stay on device; missed rows' trained values scatter
-            # back to the host tier (the slow bwd path, Fig. 4(b) right).
-            self.storage = jax.device_put(ext_np[: self.hot_ids.size])
-            if miss_ids.size:
-                upd = ext_np[self.hot_ids.size :]
-                self.pcie.read += upd.nbytes
-                self.host.scatter(miss_ids, upd)
-
-            st = StepStats(
-                step=step,
-                n_lookups=int(flat.size),
-                n_unique=int(uniq.size),
-                n_hits=int(uniq.size - miss_ids.size),
-                n_miss=int(miss_ids.size),
-                n_evict=0,
-                aux=aux,
-            )
-            st.hit_lookups = n_hit_lookups  # lookup-level hit count
-            self._stats.append(st)
-            out.append(st)
-        return out
+    def run_one_cycle(self, ids, batch, lookahead_fn=None) -> Optional[StepStats]:
+        return self._step(len(self._stats) + 1, ids, batch)
 
     def flush_to_host(self):
         self.host.scatter(self.hot_ids, np.asarray(self.storage))
 
+    def traffic(self) -> dict:
+        return {"host": self.host.traffic, "pcie": self.pcie, "hbm": self.hbm}
+
     @property
     def stats(self):
         return self._stats
+
+
+def _reject_unsupported(name: str, kw: dict) -> None:
+    extra = {k: v for k, v in kw.items() if v is not None}
+    if extra:
+        raise TypeError(
+            f"runtime {name!r} does not support {sorted(extra)}; it has no "
+            "scratchpad to budget (slot kwargs apply to the dynamic caches)"
+        )
+
+
+@register_runtime("nocache")
+def _make_nocache(host_table, train_fn, **kw) -> NoCacheBaseline:
+    _reject_unsupported("nocache", kw)
+    return NoCacheBaseline(host_table, train_fn)
+
+
+@register_runtime("static")
+def _make_static(host_table, train_fn, *, hot_ids, **kw) -> StaticCacheBaseline:
+    _reject_unsupported("static", kw)
+    return StaticCacheBaseline(host_table, hot_ids, train_fn)

@@ -1,0 +1,206 @@
+"""TableGroup: a named collection of embedding tables behind one fused array.
+
+DLRMs have dozens of embedding tables with heterogeneous row counts and hot
+set sizes; the paper's cache managers treat each table's lookup stream as
+the unit of caching (per-table HitMap / Storage partition), while the host
+keeps every table in one arena. ``TableGroup`` is the single source of truth
+for that layout across the whole stack:
+
+  * the host tier stores one fused ``(total_rows, dim)`` array; table ``t``
+    owns rows ``[offset[t], offset[t+1])`` (ranges never interleave);
+  * global row id = ``offset[t] + local_id`` — the bijection every layer
+    (trace generator, planner, runtimes, model) shares;
+  * the scratchpad slot space is partitioned into per-table budgets
+    (proportional to each table's expected hot set), so one table's burst
+    can never evict another table's held rows.
+
+A single-table group is the exact degenerate case: one row range, one slot
+range — the planner and runtimes behave bit-identically to the ungrouped
+path (asserted in tests/test_table_group.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TableSpec:
+    """One embedding table: row count, embedding dim, expected hot fraction
+    (used only for slot budgeting; 0.05 matches the paper's cache sizing)."""
+
+    name: str
+    rows: int
+    dim: int
+    hot_fraction: float = 0.05
+
+    def __post_init__(self):
+        if self.rows <= 0:
+            raise ValueError(f"table {self.name!r}: rows must be > 0")
+        if not (0.0 < self.hot_fraction <= 1.0):
+            raise ValueError(f"table {self.name!r}: hot_fraction in (0, 1]")
+
+
+class TableGroup:
+    """Ordered collection of :class:`TableSpec` sharing one embedding dim,
+    fused into a single global row space."""
+
+    def __init__(self, tables: Sequence[TableSpec]):
+        if not tables:
+            raise ValueError("TableGroup needs at least one table")
+        dims = {t.dim for t in tables}
+        if len(dims) != 1:
+            raise ValueError(f"all tables must share one dim, got {sorted(dims)}")
+        names = [t.name for t in tables]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate table names: {names}")
+        self.tables: Tuple[TableSpec, ...] = tuple(tables)
+        self.offsets = np.concatenate(
+            [[0], np.cumsum([t.rows for t in self.tables], dtype=np.int64)]
+        )
+
+    # -- constructors --------------------------------------------------------
+    @classmethod
+    def uniform(
+        cls, num_tables: int, rows_per_table: int, dim: int, *,
+        hot_fraction: float = 0.05, prefix: str = "table",
+    ) -> "TableGroup":
+        return cls(
+            [
+                TableSpec(f"{prefix}{t}", rows_per_table, dim, hot_fraction)
+                for t in range(num_tables)
+            ]
+        )
+
+    @classmethod
+    def from_config(cls, cfg) -> "TableGroup":
+        """Build from a DLRMConfig (uses ``table_rows`` when set, else a
+        uniform ``num_tables x rows_per_table`` layout)."""
+        rows = getattr(cfg, "table_rows", None) or (
+            (cfg.rows_per_table,) * cfg.num_tables
+        )
+        frac = getattr(cfg, "cache_fraction", 0.05)
+        return cls(
+            [
+                TableSpec(f"table{t}", r, cfg.embed_dim, frac)
+                for t, r in enumerate(rows)
+            ]
+        )
+
+    # -- shape ----------------------------------------------------------------
+    @property
+    def num_tables(self) -> int:
+        return len(self.tables)
+
+    @property
+    def total_rows(self) -> int:
+        return int(self.offsets[-1])
+
+    @property
+    def dim(self) -> int:
+        return self.tables[0].dim
+
+    @property
+    def rows(self) -> Tuple[int, ...]:
+        return tuple(t.rows for t in self.tables)
+
+    def __len__(self) -> int:
+        return len(self.tables)
+
+    def __repr__(self) -> str:
+        rows = ",".join(str(t.rows) for t in self.tables)
+        return f"TableGroup({self.num_tables} tables, rows=[{rows}], dim={self.dim})"
+
+    # -- id mapping -----------------------------------------------------------
+    def to_global(self, table: int, local_ids: np.ndarray) -> np.ndarray:
+        """Local row ids of one table -> fused global row ids."""
+        return np.asarray(local_ids, dtype=np.int64) + self.offsets[table]
+
+    def table_of(self, global_ids: np.ndarray) -> np.ndarray:
+        """Fused global row ids -> owning table index."""
+        gid = np.asarray(global_ids, dtype=np.int64)
+        return np.searchsorted(self.offsets, gid, side="right") - 1
+
+    def to_local(self, global_ids: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Fused global row ids -> (table index, local row id)."""
+        gid = np.asarray(global_ids, dtype=np.int64)
+        t = self.table_of(gid)
+        return t, gid - self.offsets[t]
+
+    def globalize(self, per_table_ids: np.ndarray) -> np.ndarray:
+        """(B, T, L) per-table local ids -> (B, T, L) global ids."""
+        ids = np.asarray(per_table_ids, dtype=np.int64)
+        if ids.ndim != 3 or ids.shape[1] != self.num_tables:
+            raise ValueError(
+                f"expected (B, {self.num_tables}, L) ids, got {ids.shape}"
+            )
+        return ids + self.offsets[:-1][None, :, None]
+
+    def split(self, global_ids: np.ndarray) -> List[np.ndarray]:
+        """Flatten global ids and split into per-table LOCAL id arrays
+        (the per-table lookup streams; order within a table preserved)."""
+        flat = np.asarray(global_ids, dtype=np.int64).ravel()
+        t = self.table_of(flat)
+        return [flat[t == i] - self.offsets[i] for i in range(self.num_tables)]
+
+    def row_slice(self, table: int) -> slice:
+        """Fused-array row range owned by ``table`` (zero-copy view slice)."""
+        return slice(int(self.offsets[table]), int(self.offsets[table + 1]))
+
+    # -- scratchpad budgeting -------------------------------------------------
+    def slot_budgets(self, num_slots: int, min_per_table: int = 1) -> List[int]:
+        """Partition ``num_slots`` scratchpad slots into per-table budgets:
+        every table gets at least ``min_per_table`` slots (capped at its row
+        count — pass the table's worst-case 6-batch window working set for
+        the paper's §VI-D sizing rule), and the remaining slots are split
+        proportionally to each table's expected hot set
+        (rows * hot_fraction), largest-remainder rounded."""
+        mins = np.array(
+            [max(1, min(int(min_per_table), t.rows)) for t in self.tables],
+            dtype=np.int64,
+        )
+        if num_slots < int(mins.sum()):
+            raise ValueError(
+                f"{num_slots} slots cannot cover the per-table floors "
+                f"{mins.tolist()} (sum {int(mins.sum())})"
+            )
+        extra = num_slots - int(mins.sum())
+        weights = np.array(
+            [t.rows * t.hot_fraction for t in self.tables], dtype=np.float64
+        )
+        ideal = weights / weights.sum() * extra
+        caps = np.array([t.rows for t in self.tables], dtype=np.int64)
+        # a table can never occupy more slots than it has rows
+        budgets = np.minimum(mins + np.floor(ideal).astype(np.int64), caps)
+        # largest-remainder distribution of the leftover slots, respecting
+        # the row-count caps (surplus beyond sum(rows) stays unassigned)
+        rem = num_slots - int(budgets.sum())
+        order = np.argsort(-(ideal - np.floor(ideal)), kind="stable")
+        i = 0
+        while rem > 0 and np.any(budgets < caps):
+            t = order[i % self.num_tables]
+            if budgets[t] < caps[t]:
+                budgets[t] += 1
+                rem -= 1
+            i += 1
+        return [int(b) for b in budgets]
+
+    def window_floor(self, batch_lookups: int, window: int = 6) -> int:
+        """Paper §VI-D worst-case window working set per table: ``window``
+        in-flight mini-batches each touching at most ``batch_lookups``
+        distinct rows of the table."""
+        return int(window * batch_lookups)
+
+    def slot_ranges(self, budgets: Sequence[int]) -> List[Tuple[int, int]]:
+        """Per-table contiguous (lo, hi) slot ranges from budgets."""
+        bounds = np.concatenate([[0], np.cumsum(np.asarray(budgets, np.int64))])
+        return [
+            (int(bounds[t]), int(bounds[t + 1])) for t in range(self.num_tables)
+        ]
+
+
+def single_table(rows: int, dim: int, *, hot_fraction: float = 0.05) -> TableGroup:
+    """The degenerate 1-table group (the pre-TableGroup code path)."""
+    return TableGroup([TableSpec("table0", rows, dim, hot_fraction)])

@@ -40,6 +40,12 @@ class LookaheadStream:
                 break
         return [self._buf[i][0] for i in range(min(k, len(self._buf)))]
 
+    def peek_table_ids(self, k: int, group) -> List[List[np.ndarray]]:
+        """Per-table LOCAL id streams of the next k batches (one list of
+        ``group.num_tables`` arrays per upcoming batch) — the look-ahead view
+        a per-table cache manager plans against."""
+        return [group.split(ids) for ids in self.peek_ids(k)]
+
     @property
     def consumed(self) -> int:
         return self._consumed

@@ -21,9 +21,11 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, Iterator, Tuple
+from typing import Dict, Iterator, Optional, Tuple
 
 import numpy as np
+
+from repro.core.table_group import TableGroup
 
 LOCALITY_S: Dict[str, float] = {
     "random": 0.0,
@@ -92,6 +94,71 @@ def dlrm_batches(tc: TraceConfig, steps: int) -> Iterator[Tuple[np.ndarray, dict
             np.float32
         )
         yield gids, {"dense": dense, "label": label, "sparse_ids": ids}
+
+
+def dlrm_batches_group(
+    group: TableGroup,
+    steps: int,
+    *,
+    batch_size: int = 2048,
+    lookups_per_table: int = 20,
+    locality: str = "medium",
+    num_dense_features: int = 13,
+    seed: int = 0,
+) -> Iterator[Tuple[np.ndarray, dict]]:
+    """Multi-table trace over a TableGroup with HETEROGENEOUS row counts:
+    each table's lookup stream is sampled from its own Zipf over its own row
+    space (the per-table access streams BagPipe/Fang et al. cache against).
+    Yields (global_row_ids (B, T, L), payload); ``payload["sparse_ids"]``
+    keeps the per-table LOCAL ids (what the full-table model consumes)."""
+    rng = np.random.default_rng(seed)
+    T = group.num_tables
+    for _ in range(steps):
+        local = np.stack(
+            [
+                sample_ids(
+                    rng,
+                    group.tables[t].rows,
+                    (batch_size, lookups_per_table),
+                    locality,
+                )
+                for t in range(T)
+            ],
+            axis=1,
+        )  # (B, T, L)
+        gids = group.globalize(local)
+        dense = rng.standard_normal(
+            (batch_size, num_dense_features)
+        ).astype(np.float32)
+        logits = dense[:, 0] - 0.5 * dense[:, 1]
+        label = (rng.random(batch_size) < 1.0 / (1.0 + np.exp(-logits))).astype(
+            np.float32
+        )
+        yield gids, {"dense": dense, "label": label, "sparse_ids": local}
+
+
+def hot_ids_for_group(
+    group: TableGroup, fraction: float, *, locality: str = "medium",
+    draws_per_table: int = 200_000, seed: int = 99,
+) -> np.ndarray:
+    """Per-table top-N hottest GLOBAL row ids for the static-cache baseline:
+    every table gets its own pinned budget (``rows * fraction``), estimated
+    from an offline profiling pass over its own lookup stream. The profile
+    scales with the budget, and only rows actually observed are pinned
+    (never-accessed zero-count ties would waste cache capacity)."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for t, spec in enumerate(group.tables):
+        per_table = max(1, int(spec.rows * fraction))
+        draws = max(draws_per_table, 4 * per_table)
+        counts = np.zeros(spec.rows, dtype=np.int64)
+        ids = sample_ids(rng, spec.rows, draws, locality)
+        np.add.at(counts, ids, 1)
+        observed = int(np.count_nonzero(counts))
+        n_pin = min(per_table, observed)
+        top = np.argpartition(counts, -n_pin)[-n_pin:]
+        out.append(group.to_global(t, top))
+    return np.concatenate(out)
 
 
 def access_counts(tc: TraceConfig, steps: int) -> np.ndarray:

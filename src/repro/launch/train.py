@@ -75,50 +75,101 @@ def train_lm(args):
 
 
 def train_dlrm(args):
-    from repro.configs import get_entry
+    from repro.configs.dlrm_scratchpipe import (
+        multi_table_config,
+        multi_table_smoke_config,
+    )
     from repro.core.dlrm_runtime import DLRMTrainer
     from repro.core.host_table import HostEmbeddingTable
-    from repro.core.pipeline import ScratchPipe
+    from repro.core.runtime import make_runtime
+    from repro.core.table_group import TableGroup
     from repro.data.lookahead import LookaheadStream
-    from repro.data.synthetic import TraceConfig, dlrm_batches
+    from repro.data.synthetic import (
+        TraceConfig,
+        dlrm_batches,
+        dlrm_batches_group,
+        hot_ids_for_group,
+    )
 
-    cfg = (
-        get_smoke_config("dlrm-scratchpipe")
-        if args.smoke
-        else get_config("dlrm-scratchpipe")
-    )
-    tc = TraceConfig(
-        num_tables=cfg.num_tables,
-        rows_per_table=cfg.rows_per_table,
-        lookups_per_table=cfg.lookups_per_table,
-        batch_size=args.batch or cfg.batch_size,
-        locality=args.locality,
-        seed=args.seed,
-    )
-    rows = cfg.num_tables * cfg.rows_per_table
+    if args.tables:  # heterogeneous multi-table scenario
+        cfg = (
+            multi_table_smoke_config(args.tables)
+            if args.smoke
+            else multi_table_config(args.tables)
+        )
+    else:
+        cfg = (
+            get_smoke_config("dlrm-scratchpipe")
+            if args.smoke
+            else get_config("dlrm-scratchpipe")
+        )
+    group = TableGroup.from_config(cfg)
+    batch = args.batch or cfg.batch_size
+    rows = group.total_rows
     slots = max(2048, int(rows * cfg.cache_fraction))
     host = HostEmbeddingTable(rows, cfg.embed_dim, seed=args.seed)
     trainer = DLRMTrainer(cfg, jax.random.key(args.seed), lr=args.lr)
-    pipe = ScratchPipe(
-        host,
-        slots,
-        trainer.train_fn,
-        past_window=cfg.past_window,
-        future_window=cfg.future_window,
-    )
-    stream = LookaheadStream(dlrm_batches(tc, args.steps))
+
+    def batches(steps):
+        if args.tables:
+            return dlrm_batches_group(
+                group,
+                steps,
+                batch_size=batch,
+                lookups_per_table=cfg.lookups_per_table,
+                locality=args.locality,
+                num_dense_features=cfg.num_dense_features,
+                seed=args.seed,
+            )
+        tc = TraceConfig(
+            num_tables=cfg.num_tables,
+            rows_per_table=cfg.rows_per_table,
+            lookups_per_table=cfg.lookups_per_table,
+            batch_size=batch,
+            locality=args.locality,
+            seed=args.seed,
+        )
+        return dlrm_batches(tc, steps)
+
+    if args.tables:
+        # heterogeneous scenario: per-table budgets with the §VI-D window
+        # floor (worst-case 6-batch window working set per table)
+        floor = group.window_floor(batch * cfg.lookups_per_table)
+        slots = max(slots, sum(min(floor, r) for r in group.rows))
+        budgets = group.slot_budgets(slots, min_per_table=floor)
+        kw = {"num_slots": slots, "table_group": group, "slot_budgets": budgets}
+    else:
+        # uniform paper config: keep the seed-equivalent global slot pool
+        kw = {"num_slots": slots}
+    if args.runtime == "scratchpipe":
+        kw.update(past_window=cfg.past_window, future_window=cfg.future_window)
+    elif args.runtime == "static":
+        kw = {
+            "hot_ids": hot_ids_for_group(
+                group, cfg.cache_fraction, locality=args.locality
+            )
+        }
+    elif args.runtime == "nocache":
+        kw = {}
+    pipe = make_runtime(args.runtime, host, trainer.train_fn, **kw)
+    stream = LookaheadStream(batches(args.steps))
     t0 = time.time()
     stats = pipe.run(stream, lookahead_fn=stream.peek_ids)
     dt = time.time() - t0
-    losses = [float(s.aux["loss"]) for s in stats]
+    losses = [float(s.aux["loss"]) for s in stats if s.aux]
     hit = float(np.mean([s.hit_rate for s in stats[6:]])) if len(stats) > 6 else 0
+    print(
+        f"runtime={args.runtime} tables={group.num_tables} "
+        f"rows={list(group.rows)}"
+    )
     print(
         f"done: steps={len(stats)} loss {losses[0]:.4f}->{losses[-1]:.4f} "
         f"plan_hit={hit:.3f} {dt / max(len(stats), 1) * 1e3:.1f}ms/step"
     )
+    tr = pipe.traffic()
     print(
-        f"traffic: host {host.traffic.total / 1e6:.1f}MB "
-        f"pcie {pipe.pcie.total / 1e6:.1f}MB hbm {pipe.hbm.total / 1e6:.1f}MB"
+        f"traffic: host {tr['host'].total / 1e6:.1f}MB "
+        f"pcie {tr['pcie'].total / 1e6:.1f}MB hbm {tr['hbm'].total / 1e6:.1f}MB"
     )
 
 
@@ -132,9 +183,24 @@ def main():
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--locality", default="medium")
+    ap.add_argument(
+        "--runtime",
+        default="scratchpipe",
+        choices=("scratchpipe", "strawman", "nocache", "static"),
+        help="embedding-cache runtime (EmbeddingCacheRuntime registry)",
+    )
+    ap.add_argument(
+        "--tables",
+        type=int,
+        default=0,
+        help="N>0: heterogeneous N-table DLRM scenario (TableGroup); "
+        "0: the paper's uniform 8-table config",
+    )
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=50)
     args = ap.parse_args()
+    if args.tables < 0:
+        ap.error("--tables must be >= 0 (0 = uniform paper config)")
     if args.arch == "dlrm-scratchpipe":
         train_dlrm(args)
     else:

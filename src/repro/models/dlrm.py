@@ -108,28 +108,26 @@ def init_full(cfg, key):
     kt, km = jax.random.split(key)
     dt = jnp.dtype(cfg.param_dtype)
     tables = (
-        jax.random.normal(
-            kt, (cfg.num_tables * cfg.rows_per_table, cfg.embed_dim), dt
-        )
+        jax.random.normal(kt, (cfg.total_rows, cfg.embed_dim), dt)
         / math.sqrt(cfg.embed_dim)
     )
     return {"tables": tables, "mlps": init_mlps(cfg, key=km)}
 
 
 def full_specs(cfg, ax: MeshAxes):
-    rows = cfg.num_tables * cfg.rows_per_table
     return {
-        "tables": P(shard_dim(ax, rows, ax.model), None),
+        "tables": P(shard_dim(ax, cfg.total_rows, ax.model), None),
         "mlps": mlp_specs(cfg),
     }
 
 
 def gather_bags_full(tables, cfg, sparse_ids, mesh) -> jax.Array:
-    """sparse_ids: (B, T, Lk) per-table row ids. Flattens to global row ids
-    (t * rows + id) and does the shard-masked lookup + psum, then reduces the
-    Lk lookups per bag (sum — the paper's reduction)."""
+    """sparse_ids: (B, T, Lk) per-table LOCAL row ids. Flattens to global row
+    ids (cfg.table_offsets[t] + id — heterogeneous table sizes supported) and
+    does the shard-masked lookup + psum, then reduces the Lk lookups per bag
+    (sum — the paper's reduction)."""
     B, T, Lk = sparse_ids.shape
-    offs = (jnp.arange(T, dtype=jnp.int32) * cfg.rows_per_table)[None, :, None]
+    offs = jnp.asarray(cfg.table_offsets, dtype=sparse_ids.dtype)[None, :, None]
     flat = (sparse_ids + offs).reshape(B, T * Lk)
     if mesh is not None and "model" in mesh.axis_names and int(
         mesh.shape["model"]

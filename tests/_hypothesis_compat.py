@@ -1,0 +1,83 @@
+"""Guarded fallback for ``hypothesis``: deterministic fixed-example replay.
+
+The container image does not ship hypothesis; hard-importing it from a test
+module aborts the whole pytest collection. Test modules do
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_compat import given, settings, st
+
+and keep their property-test bodies unchanged. The fallback runs each
+property against a fixed number of deterministically seeded examples —
+weaker than real shrinking/search, but it keeps the properties exercised
+(and the suite collectable) everywhere.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+FALLBACK_EXAMPLES = 8
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self._sample = sample
+
+    def sample(self, rng: np.random.Generator):
+        return self._sample(rng)
+
+
+class _DrawData:
+    """Stands in for the object ``@given(st.data())`` passes to the test."""
+
+    def __init__(self, rng: np.random.Generator):
+        self._rng = rng
+
+    def draw(self, strategy: _Strategy):
+        return strategy.sample(self._rng)
+
+
+class _Strategies:
+    @staticmethod
+    def integers(lo, hi):
+        return _Strategy(lambda rng: int(rng.integers(lo, hi + 1)))
+
+    @staticmethod
+    def sampled_from(options):
+        seq = list(options)
+        return _Strategy(lambda rng: seq[int(rng.integers(0, len(seq)))])
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+    @staticmethod
+    def floats(lo, hi):
+        return _Strategy(lambda rng: float(rng.uniform(lo, hi)))
+
+    @staticmethod
+    def data():
+        return _Strategy(lambda rng: _DrawData(rng))
+
+
+st = _Strategies()
+
+
+def given(*strategies):
+    def deco(fn):
+        def runner(*args, **kwargs):
+            for example in range(FALLBACK_EXAMPLES):
+                rng = np.random.default_rng(0xC0FFEE + example)
+                drawn = [s.sample(rng) for s in strategies]
+                fn(*args, *drawn, **kwargs)
+
+        runner.__name__ = fn.__name__
+        runner.__doc__ = fn.__doc__
+        return runner
+
+    return deco
+
+
+def settings(**_kwargs):
+    return lambda fn: fn

@@ -16,7 +16,11 @@ tests/test_system.py.
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # fall back to deterministic fixed examples
+    from _hypothesis_compat import given, settings, st
 
 from repro.core.host_table import HostEmbeddingTable
 from repro.core.pipeline import ScratchPipe

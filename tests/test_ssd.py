@@ -3,7 +3,11 @@ decode, across hypothesis-generated shapes/chunks."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # fall back to deterministic fixed examples
+    from _hypothesis_compat import given, settings, st
 
 from repro.models import mamba2 as M
 

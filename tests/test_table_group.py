@@ -1,0 +1,395 @@
+"""TableGroup refactor equivalences:
+
+  E1  the 1-table TableGroup path is BIT-IDENTICAL (per-step stats, storage,
+      host table, planner state) to the ungrouped single-table runtime —
+      single-table is the degenerate case, not a separate code path.
+  E2  an N-table fused run (per-table slot budgets) matches N independent
+      single-table runs fed the per-table id streams: same per-table host
+      tables, same per-table storage regions, same per-step hit/miss/evict
+      totals.
+  E3  the device (plan_jax) group planner matches the host Planner running
+      over the same fused row space with the same per-table budgets.
+  E4  the EmbeddingCacheRuntime registry covers all four designs (+ the
+      straw-man) and every runtime trains the multi-table DLRM end-to-end.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import available_runtimes, make_runtime
+from repro.core.host_table import HostEmbeddingTable
+from repro.core.pipeline import ScratchPipe
+from repro.core.plan import Planner
+from repro.core.plan_jax import init_group_states, plan_group_step
+from repro.core.table_group import TableGroup, TableSpec, single_table
+from repro.data.lookahead import LookaheadStream
+from repro.data.synthetic import dlrm_batches_group, hot_ids_for_group
+
+
+class SlotCountingTrainer:
+    """[Train]: +1 to every unique touched slot (integer-exact equivalence)."""
+
+    def train_fn(self, storage, slots, batch):
+        uniq = jnp.unique(jnp.asarray(slots).ravel(), size=max(slots.size, 1), fill_value=-1)
+        ok = uniq >= 0
+        add = jnp.zeros_like(storage).at[jnp.where(ok, uniq, 0)].add(
+            jnp.where(ok, 1.0, 0.0)[:, None]
+        )
+        return storage + add, {}
+
+
+def _mk_group():
+    return TableGroup(
+        [
+            TableSpec("users", 90, 4, 0.2),
+            TableSpec("items", 60, 4, 0.3),
+            TableSpec("cats", 25, 4, 0.5),
+            TableSpec("geo", 40, 4, 0.25),
+        ]
+    )
+
+
+# --------------------------------------------------------------------------
+# TableGroup unit behaviour
+# --------------------------------------------------------------------------
+
+
+def test_id_mapping_roundtrip():
+    g = _mk_group()
+    assert g.total_rows == 215 and g.num_tables == 4 and g.dim == 4
+    rng = np.random.default_rng(0)
+    t = rng.integers(0, 4, size=50)
+    local = rng.integers(0, 20, size=50)
+    gids = np.array([g.to_global(int(ti), li) for ti, li in zip(t, local)])
+    tt, ll = g.to_local(gids)
+    np.testing.assert_array_equal(tt, t)
+    np.testing.assert_array_equal(ll, local)
+    # globalize/split roundtrip on a (B, T, L) batch
+    per = np.stack(
+        [rng.integers(0, g.tables[i].rows, size=(6, 3)) for i in range(4)], axis=1
+    )
+    gb = g.globalize(per)
+    back = g.split(gb)
+    for i in range(4):
+        np.testing.assert_array_equal(np.sort(back[i]), np.sort(per[:, i].ravel()))
+
+
+def test_peek_table_ids_matches_split_without_consuming():
+    g = _mk_group()
+    rng = np.random.default_rng(8)
+    batches = [
+        np.concatenate(
+            [g.to_global(t, rng.integers(0, g.tables[t].rows, size=3)) for t in range(4)]
+        )
+        for _ in range(6)
+    ]
+    stream = LookaheadStream(iter([(b, {}) for b in batches]))
+    peeked = stream.peek_table_ids(2, g)
+    assert len(peeked) == 2 and all(len(p) == g.num_tables for p in peeked)
+    for j in range(2):
+        for t, local in enumerate(peeked[j]):
+            np.testing.assert_array_equal(local, g.split(batches[j])[t])
+    # peeking consumed nothing: the stream still yields every batch
+    np.testing.assert_array_equal(next(stream)[0], batches[0])
+    assert stream.consumed == 1
+
+
+def test_slot_budgets_partition_exactly():
+    g = _mk_group()
+    for total in (17, 64, 101, 215):
+        b = g.slot_budgets(total)
+        assert sum(b) == total
+        assert all(x >= 1 for x in b)
+        ranges = g.slot_ranges(b)
+        assert ranges[0][0] == 0 and ranges[-1][1] == total
+    # budgets never exceed a table's row count; surplus stays unassigned
+    b = g.slot_budgets(500)
+    assert all(x <= r for x, r in zip(b, g.rows))
+    assert sum(b) == g.total_rows
+
+
+def test_from_config_uses_heterogeneous_rows():
+    from repro.configs.dlrm_scratchpipe import multi_table_smoke_config
+
+    cfg = multi_table_smoke_config(4)
+    g = TableGroup.from_config(cfg)
+    assert g.num_tables == 4
+    assert len(set(g.rows)) > 1  # heterogeneous sizes
+    assert g.total_rows == cfg.total_rows
+
+
+# --------------------------------------------------------------------------
+# E1: single-table degenerate case is bit-identical
+# --------------------------------------------------------------------------
+
+
+def test_single_table_group_bit_identical_to_ungrouped():
+    rows, slots, steps = 120, 64, 30
+    rng = np.random.default_rng(3)
+    batches = [rng.integers(0, rows, size=9) for _ in range(steps)]
+
+    def run(group):
+        host = HostEmbeddingTable(rows, 4, seed=1)
+        pipe = ScratchPipe(
+            host, slots, SlotCountingTrainer().train_fn, table_group=group
+        )
+        stream = LookaheadStream(iter([(b, {}) for b in batches]))
+        stats = pipe.run(stream, lookahead_fn=stream.peek_ids)
+        return host, pipe, stats
+
+    host_a, pipe_a, stats_a = run(None)
+    host_b, pipe_b, stats_b = run(single_table(rows, 4))
+
+    assert len(stats_a) == len(stats_b) == steps
+    for sa, sb in zip(stats_a, stats_b):
+        assert dataclasses.asdict(sa) == dataclasses.asdict(sb)
+    np.testing.assert_array_equal(
+        np.asarray(pipe_a.storage), np.asarray(pipe_b.storage)
+    )
+    np.testing.assert_array_equal(
+        pipe_a.planner.hitmap, pipe_b.planner.hitmap
+    )
+    np.testing.assert_array_equal(
+        pipe_a.planner.slot_to_id, pipe_b.planner.slot_to_id
+    )
+    pipe_a.flush_to_host()
+    pipe_b.flush_to_host()
+    np.testing.assert_array_equal(host_a.data, host_b.data)
+
+
+# --------------------------------------------------------------------------
+# E2: N-table fused run == N independent single-table runs
+# --------------------------------------------------------------------------
+
+
+def test_multi_table_run_matches_independent_runs():
+    g = _mk_group()
+    steps = 40
+    rng = np.random.default_rng(11)
+    # per-table id streams with heterogeneous intensities
+    sizes = (5, 4, 2, 3)
+    per_table = [
+        [rng.integers(0, g.tables[t].rows, size=sizes[t]) for _ in range(steps)]
+        for t in range(g.num_tables)
+    ]
+    fused = [
+        np.concatenate([g.to_global(t, per_table[t][s]) for t in range(4)])
+        for s in range(steps)
+    ]
+    # budgets sized for each table's worst-case 6-batch window (§VI-D)
+    budgets = [
+        min(
+            g.tables[t].rows,
+            max(6 * max(np.unique(b).size for b in per_table[t]) + 4, 8),
+        )
+        for t in range(4)
+    ]
+
+    # fused multi-table run
+    host = HostEmbeddingTable(g.total_rows, g.dim, seed=1)
+    host.data[:] = 0.0
+    pipe = ScratchPipe(
+        host,
+        sum(budgets),
+        SlotCountingTrainer().train_fn,
+        table_group=g,
+        slot_budgets=budgets,
+    )
+    stream = LookaheadStream(iter([(b, {}) for b in fused]))
+    stats = pipe.run(stream, lookahead_fn=stream.peek_ids)
+    pipe.flush_to_host()
+    storage = np.asarray(pipe.storage)
+
+    # N independent single-table runs on the per-table streams
+    lo = 0
+    for t in range(4):
+        host_t = HostEmbeddingTable(g.tables[t].rows, g.dim, seed=1)
+        host_t.data[:] = 0.0
+        pipe_t = ScratchPipe(
+            host_t, budgets[t], SlotCountingTrainer().train_fn
+        )
+        stream_t = LookaheadStream(iter([(b, {}) for b in per_table[t]]))
+        stats_t = pipe_t.run(stream_t, lookahead_fn=stream_t.peek_ids)
+        pipe_t.flush_to_host()
+
+        # per-table host region identical to the independent run
+        np.testing.assert_array_equal(host.data[g.row_slice(t)], host_t.data)
+        # per-table storage region identical (same slot-local layout)
+        np.testing.assert_array_equal(
+            storage[lo : lo + budgets[t]], np.asarray(pipe_t.storage)
+        )
+        # fused per-step per-table stats == independent per-step stats
+        for s in range(steps):
+            bt = stats[s].by_table
+            assert bt is not None
+            assert int(bt["hits"][t]) == stats_t[s].n_hits, (t, s)
+            assert int(bt["misses"][t]) == stats_t[s].n_miss, (t, s)
+        lo += budgets[t]
+
+    # aggregate identities
+    for s in range(steps):
+        assert stats[s].n_unique == sum(
+            int(x) for x in stats[s].by_table["hits"]
+        ) + sum(int(x) for x in stats[s].by_table["misses"])
+
+
+# --------------------------------------------------------------------------
+# E3: device group planner == host planner over the fused space
+# --------------------------------------------------------------------------
+
+
+def test_plan_jax_group_matches_host_planner():
+    g = TableGroup(
+        [TableSpec("a", 80, 4), TableSpec("b", 50, 4), TableSpec("c", 30, 4)]
+    )
+    budgets = [40, 30, 20]
+    steps, n_per = 30, (6, 4, 3)
+    rng = np.random.default_rng(5)
+    per_table = [
+        [rng.integers(0, g.tables[t].rows, size=n_per[t]) for _ in range(steps + 2)]
+        for t in range(3)
+    ]
+
+    host = Planner(
+        g.total_rows,
+        sum(budgets),
+        past_window=3,
+        future_window=2,
+        row_offsets=g.offsets,
+        slot_ranges=g.slot_ranges(budgets),
+    )
+    states = init_group_states(g, budgets)
+
+    for s in range(steps):
+        gids = np.concatenate(
+            [g.to_global(t, per_table[t][s]) for t in range(3)]
+        )
+        fut = [
+            np.concatenate([g.to_global(t, per_table[t][s + j]) for t in range(3)])
+            for j in (1, 2)
+        ]
+        r_host = host.plan(gids, fut)
+        states, outs = plan_group_step(
+            states,
+            g,
+            [per_table[t][s] for t in range(3)],
+            [
+                np.concatenate([per_table[t][s + 1], per_table[t][s + 2]])
+                for t in range(3)
+            ],
+        )
+        assert all(bool(o["ok"]) for o in outs)
+        assert sum(int(o["n_hits"]) for o in outs) == r_host.n_hits, s
+        assert sum(int(o["n_unique"]) for o in outs) == r_host.n_unique, s
+        # dense slot mapping: host slots are ordered [table0 ids, table1 ...]
+        dev_slots = np.concatenate(
+            [np.asarray(o["slots"])[: n_per[t]] for t, o in enumerate(outs)]
+        )
+        np.testing.assert_array_equal(dev_slots, r_host.slots, s)
+        # miss/evict sets agree (global row ids)
+        miss_dev = np.concatenate([np.asarray(o["miss_ids"]) for o in outs])
+        assert set(miss_dev[miss_dev >= 0]) == set(r_host.miss_ids), s
+        ev_dev = np.concatenate([np.asarray(o["evict_ids"]) for o in outs])
+        assert set(ev_dev[ev_dev >= 0]) == set(r_host.evict_ids), s
+
+
+# --------------------------------------------------------------------------
+# E4: registry coverage + multi-table DLRM end-to-end on every runtime
+# --------------------------------------------------------------------------
+
+
+def test_registry_covers_all_designs():
+    names = available_runtimes()
+    for want in ("nocache", "static", "scratchpipe", "strawman", "sharded"):
+        assert want in names, names
+    with pytest.raises(KeyError):
+        make_runtime("bogus", None, None)
+    # designs without a scratchpad reject (not ignore) slot kwargs
+    with pytest.raises(TypeError):
+        make_runtime("nocache", None, None, table_group=_mk_group())
+    with pytest.raises(TypeError):
+        make_runtime("static", None, None, hot_ids=[0], slot_budgets=[4])
+
+
+def _dlrm_setup():
+    from repro.configs.dlrm_scratchpipe import multi_table_smoke_config
+    from repro.core.dlrm_runtime import DLRMTrainer
+
+    cfg = multi_table_smoke_config(4)
+    g = TableGroup.from_config(cfg)
+    trainer = DLRMTrainer(cfg, jax.random.key(0), lr=0.05)
+    host = HostEmbeddingTable(g.total_rows, cfg.embed_dim, seed=1)
+    batches = lambda: dlrm_batches_group(  # noqa: E731
+        g,
+        12,
+        batch_size=8,
+        lookups_per_table=cfg.lookups_per_table,
+        locality="medium",
+        seed=7,
+    )
+    return cfg, g, trainer, host, batches
+
+
+@pytest.mark.parametrize("design", ["scratchpipe", "strawman", "nocache", "static"])
+def test_multi_table_dlrm_trains_on_every_runtime(design):
+    cfg, g, trainer, host, batches = _dlrm_setup()
+    assert g.num_tables >= 4 and len(set(g.rows)) > 1  # heterogeneous
+    kw = {}
+    if design in ("scratchpipe", "strawman"):
+        # §VI-D: every table's budget must cover its worst-case 6-batch
+        # window working set (<= 6 * batch 8 * 4 lookups = 192 uniques)
+        kw = {"num_slots": 800, "table_group": g, "slot_budgets": [200] * 4}
+    elif design == "static":
+        kw = {"hot_ids": hot_ids_for_group(g, 0.25, locality="medium")}
+    pipe = make_runtime(design, host, trainer.train_fn, **kw)
+    stream = LookaheadStream(batches())
+    stats = pipe.run(stream, lookahead_fn=stream.peek_ids)
+    pipe.flush_to_host()
+    assert len(stats) == 12
+    losses = [float(s.aux["loss"]) for s in stats]
+    assert all(np.isfinite(losses))
+    tr = pipe.traffic()
+    assert set(tr) == {"host", "pcie", "hbm"}
+
+
+def test_multi_table_dlrm_sharded_from_group():
+    """Per-table shard managers (§VI-G) over a heterogeneous TableGroup."""
+    g = _mk_group()
+    steps = 20
+    rng = np.random.default_rng(2)
+    batches = [
+        np.concatenate(
+            [g.to_global(t, rng.integers(0, g.tables[t].rows, size=4)) for t in range(4)]
+        )
+        for _ in range(steps)
+    ]
+
+    class CountingSharded:
+        def train_fn(self, storages, slots_all, batch):
+            out = []
+            for storage, slots in zip(storages, slots_all):
+                slots = np.asarray(slots)
+                if slots.size:
+                    storage = storage.at[jnp.asarray(np.unique(slots.ravel()))].add(1.0)
+                out.append(storage)
+            return out, {"ok": True}
+
+    host = HostEmbeddingTable(g.total_rows, g.dim, seed=1)
+    host.data[:] = 0.0
+    pipe = make_runtime(
+        "sharded",
+        host,
+        CountingSharded().train_fn,
+        num_slots=120,
+        table_group=g,
+    )
+    stats = pipe.run(iter([(b, {}) for b in batches]))
+    pipe.flush_to_host()
+    assert len(stats) == steps
+    want = np.zeros((g.total_rows, g.dim))
+    for b in batches:
+        want[np.unique(b)] += 1.0
+    np.testing.assert_array_equal(host.data, want)
