@@ -20,6 +20,7 @@ also given scaled to the paper's (batch 2048, 8 x 10M-row tables) config.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
 from typing import Dict, List, Optional
@@ -57,14 +58,23 @@ BENCH_ROWS_PER_TABLE = 100_000
 BENCH_BATCH = 64
 PAPER_BATCH = 2048
 
-_TABLE_CACHE: Dict[tuple, np.ndarray] = {}
+# LRU of the two most recent base tables: benchmark sweeps alternate two
+# configs (e.g. homo vs --hetero) back-to-back, and a 1-entry cache would
+# rebuild the host table on every flip.
+_TABLE_CACHE: "collections.OrderedDict[tuple, np.ndarray]" = (
+    collections.OrderedDict()
+)
+_TABLE_CACHE_KEEP = 2
 
 
 def _fresh_host(rows: int, dim: int, seed: int) -> HostEmbeddingTable:
     key = (rows, dim, seed)
-    if key not in _TABLE_CACHE:
-        _TABLE_CACHE.clear()  # keep at most one base table resident
+    if key in _TABLE_CACHE:
+        _TABLE_CACHE.move_to_end(key)
+    else:
         _TABLE_CACHE[key] = HostEmbeddingTable(rows, dim, seed=seed).data
+        while len(_TABLE_CACHE) > _TABLE_CACHE_KEEP:
+            _TABLE_CACHE.popitem(last=False)
     return HostEmbeddingTable(rows, dim, seed=seed, data=_TABLE_CACHE[key].copy())
 
 
@@ -114,6 +124,18 @@ class DesignResult:
     stage_ms: Dict[str, float]
     wall_ms: float  # actual wall-clock on this container (for reference)
     error: Optional[str] = None
+    source: str = "synthetic"  # synthetic | scenario:<name> | trace:<path>
+
+
+# Every run_design result lands here; benchmarks/run.py drains it into
+# BENCH_summary.json so the perf trajectory is machine-readable across PRs.
+RESULTS_LOG: List[DesignResult] = []
+
+
+def drain_results_log() -> List[DesignResult]:
+    out = list(RESULTS_LOG)
+    RESULTS_LOG.clear()
+    return out
 
 
 def _finalize(
@@ -167,13 +189,50 @@ def run_design(
     seed: int = 0,
     num_tables: int = 8,
     hetero: bool = False,
+    scenario: Optional[str] = None,
+    scenario_kw: Optional[dict] = None,
+    trace: Optional[str] = None,
 ) -> DesignResult:
     """design in {nocache, static, strawman, scratchpipe} — constructed
     through the EmbeddingCacheRuntime registry. ``num_tables``/``hetero``
     select the multi-table DLRM scenario (hetero = Criteo-style geometric
-    table sizes cached with per-table slot budgets)."""
-    cfg = bench_cfg(embed_dim, lookups, num_tables=num_tables, hetero=hetero)
-    group = TableGroup.from_config(cfg)
+    table sizes cached with per-table slot budgets).
+
+    Workload selection (mutually exclusive, next to the synthetic default):
+    ``trace`` replays a recorded trace directory through
+    ``TraceReplayStream`` (the model/table shapes come from its manifest);
+    ``scenario`` runs a named non-stationary generator from
+    ``repro.traces.scenarios``. For both, the static baseline is
+    provisioned by profiling the workload's own prefix — a drifting hot
+    set therefore decays it, which is the point."""
+    if trace is not None and scenario is not None:
+        raise ValueError("pass either trace or scenario, not both")
+    reader = None
+    if trace is not None:
+        from repro.traces import TraceReader
+
+        reader = TraceReader(trace)
+        group = reader.group
+        if reader.num_batches < 1:
+            raise ValueError(f"trace {trace} is empty (0 recorded batches)")
+        if reader.num_dense_features < 1:
+            raise ValueError(
+                "trace has no dense features; run_design needs a DLRM trace"
+            )
+        cfg = DLRMConfig(
+            name="dlrm-trace",
+            table_rows=tuple(group.rows),
+            embed_dim=group.dim,
+            lookups_per_table=reader.lookups_per_table,
+            num_dense_features=reader.num_dense_features,
+            batch_size=reader.batch_size,
+            bottom_mlp=(512, 256, group.dim),
+        )
+        steps = min(steps, reader.num_batches)
+        hetero = len(set(group.rows)) > 1  # per-table budgets for skew
+    else:
+        cfg = bench_cfg(embed_dim, lookups, num_tables=num_tables, hetero=hetero)
+        group = TableGroup.from_config(cfg)
     rows = group.total_rows
     tc = TraceConfig(
         num_tables=cfg.num_tables,
@@ -182,9 +241,34 @@ def run_design(
         batch_size=cfg.batch_size,
         locality=locality,
         seed=seed,
+    ) if reader is None else None
+    source = (
+        f"trace:{trace}"
+        if trace is not None
+        else f"scenario:{scenario}"
+        if scenario is not None
+        else "synthetic"
     )
 
     def batches():
+        if reader is not None:
+            from repro.traces import TraceReplayStream
+
+            return TraceReplayStream(reader, stop=steps)
+        if scenario is not None:
+            from repro.traces import scenario_batches
+
+            return scenario_batches(
+                scenario,
+                group,
+                steps,
+                batch_size=cfg.batch_size,
+                lookups_per_table=cfg.lookups_per_table,
+                locality=locality,
+                num_dense_features=cfg.num_dense_features,
+                seed=seed,
+                **(scenario_kw or {}),
+            )
         if hetero:
             return dlrm_batches_group(
                 group,
@@ -213,11 +297,27 @@ def run_design(
             dev_b = 0
             hit = 0.0
         elif design == "static":
-            hot = (
-                hot_ids_for_group(group, cache_frac, locality=locality)
-                if hetero
-                else hot_ids_global(tc, cache_frac, steps=20)
-            )
+            if reader is not None:
+                from repro.traces import hot_ids_from_trace
+
+                hot = hot_ids_from_trace(
+                    reader, cache_frac, profile_batches=max(1, steps // 5)
+                )
+            elif scenario is not None:
+                import itertools
+
+                from repro.traces import profile_hot_ids
+
+                # offline profiling pass over the workload's own prefix
+                hot = profile_hot_ids(
+                    itertools.islice(batches(), max(1, steps // 5)),
+                    group,
+                    cache_frac,
+                )
+            elif hetero:
+                hot = hot_ids_for_group(group, cache_frac, locality=locality)
+            else:
+                hot = hot_ids_global(tc, cache_frac, steps=20)
             runner = make_runtime("static", host, trainer.train_fn, hot_ids=hot)
             stats = runner.run(batches())
             tr = runner.traffic()
@@ -249,7 +349,10 @@ def run_design(
                 table_group=group if hetero else None,
                 slot_budgets=budgets,
             )
-            stream = LookaheadStream(batches())
+            src = batches()
+            # a replay stream is already a look-ahead source; everything
+            # else gains the peek window through LookaheadStream
+            stream = src if hasattr(src, "peek_ids") else LookaheadStream(src)
             stats = pipe.run(stream, lookahead_fn=stream.peek_ids)
             tr = pipe.traffic()
             pcie = tr["pcie"].total
@@ -262,12 +365,17 @@ def run_design(
             raise
         r = _finalize(design, locality, cache_frac, 0, 0, 0, 0, 0, cfg, 0)
         r.error = "infeasible: cache smaller than worst-case window working set (§VI-D)"
+        r.source = source
+        RESULTS_LOG.append(r)
         return r
     wall_ms = (time.time() - t0) / steps * 1e3
-    return _finalize(
+    r = _finalize(
         design, locality, cache_frac, steps, hit,
         host_b / steps, pcie / steps, dev_b / steps, cfg, wall_ms,
     )
+    r.source = source
+    RESULTS_LOG.append(r)
+    return r
 
 
 LOCALITIES = ("random", "low", "medium", "high")

@@ -7,6 +7,11 @@ and the paper-claim validation checklist for each figure. Roofline rows are
 read from benchmarks/results/roofline/ (produced by ``python -m
 benchmarks.roofline``, a separate process because it forces 512 host
 devices).
+
+Every cache-design run executed during the suite is also drained into
+``benchmarks/results/BENCH_summary.json`` — one machine-readable record per
+(design, locality) with hit_rate and iter_ms_paper, so the perf trajectory
+is tracked across PRs instead of living in scrollback.
 """
 from __future__ import annotations
 
@@ -37,6 +42,42 @@ def _checks(name, checks):
 def _csv_line(name, t0, derived):
     us = (time.time() - t0) * 1e6
     print(f"{name},{us:.0f},{derived}")
+
+
+SUMMARY_PATH = os.path.join(
+    os.path.dirname(__file__), "results", "BENCH_summary.json"
+)
+
+
+def write_summary(all_ok: bool, total_seconds: float, path: str = SUMMARY_PATH):
+    """Drain the run_design results log into a machine-readable summary."""
+    from benchmarks.common import drain_results_log
+
+    designs = [
+        {
+            "design": r.design,
+            "locality": r.locality,
+            "source": r.source,
+            "cache_frac": r.cache_frac,
+            "steps": r.steps,
+            "hit_rate": round(r.hit_rate, 4),
+            "iter_ms": round(r.iter_ms, 3),
+            "iter_ms_paper": round(r.iter_ms_paper, 3),
+            "error": r.error,
+        }
+        for r in drain_results_log()
+    ]
+    summary = {
+        "schema": "bench_summary/v1",
+        "all_claims_ok": bool(all_ok),
+        "total_bench_seconds": round(total_seconds, 1),
+        "designs": designs,
+    }
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(summary, f, indent=1)
+    print(f"bench_summary,{path},{len(designs)} design rows")
+    return summary
 
 
 def run_figures(steps: int, num_tables: int = 8):
@@ -158,6 +199,7 @@ def main():
     run_dryrun_summary()
     if not args.skip_roofline:
         run_roofline_summary()
+    write_summary(ok, time.time() - t0)
     print(f"\ntotal_bench_seconds,{time.time() - t0:.1f},all_claims={'OK' if ok else 'CHECK'}")
 
 

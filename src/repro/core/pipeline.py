@@ -191,21 +191,33 @@ class ScratchPipe:
         if not self.pipelined:
             return self._run_sequential(stream, lookahead_fn)
         out: List[StepStats] = []
-        stream = iter(stream)
-        exhausted = False
+        it = iter(stream)
+        draining = False
         while True:
-            if not exhausted:
-                try:
-                    ids, batch = next(stream)
-                    entry = _InFlight(np.asarray(ids), batch)
-                    la = lookahead_fn(self.future_window) if lookahead_fn else []
-                    self._stage_plan(entry, la)
-                    entry.stage = 1
-                    self._window.append(entry)
-                except StopIteration:
-                    exhausted = True
+            if not draining:
+                # Streams exposing ``exhausted`` (LookaheadStream,
+                # TraceReplayStream) are asked directly — a short look-ahead
+                # window near the end already told them, so the drain
+                # decision never rests on a sentinel next() probe.
+                if getattr(stream, "exhausted", False):
+                    draining = True
+                else:
+                    try:
+                        ids, batch = next(it)
+                    except StopIteration:
+                        draining = True
+                    else:
+                        entry = _InFlight(np.asarray(ids), batch)
+                        la = (
+                            lookahead_fn(self.future_window)
+                            if lookahead_fn
+                            else []
+                        )
+                        self._stage_plan(entry, la)
+                        entry.stage = 1
+                        self._window.append(entry)
             self._advance_cycle(out)
-            if exhausted and not self._window:
+            if draining and not self._window:
                 break
         return out
 

@@ -19,6 +19,7 @@ class LookaheadStream:
         self._it = iter(it)
         self._buf: collections.deque = collections.deque()
         self._consumed = 0
+        self._src_exhausted = False
 
     def __iter__(self):
         return self
@@ -27,7 +28,11 @@ class LookaheadStream:
         if self._buf:
             item = self._buf.popleft()
         else:
-            item = next(self._it)
+            try:
+                item = next(self._it)
+            except StopIteration:
+                self._src_exhausted = True
+                raise
         self._consumed += 1
         return item
 
@@ -37,8 +42,17 @@ class LookaheadStream:
             try:
                 self._buf.append(next(self._it))
             except StopIteration:
+                self._src_exhausted = True
                 break
         return [self._buf[i][0] for i in range(min(k, len(self._buf)))]
+
+    @property
+    def exhausted(self) -> bool:
+        """True iff the stream is drained: the source iterator has ended AND
+        no buffered batches remain. Disambiguates a short ``peek_ids``
+        window (look-ahead reached the end) from an empty stream — the
+        pipeline's drain path keys off this instead of a sentinel probe."""
+        return self._src_exhausted and not self._buf
 
     def peek_table_ids(self, k: int, group) -> List[List[np.ndarray]]:
         """Per-table LOCAL id streams of the next k batches (one list of

@@ -45,17 +45,39 @@ def _coprime_scatter(ranks: np.ndarray, n: int) -> np.ndarray:
     return (ranks.astype(np.int64) * p) % n
 
 
-def sample_ids(
-    rng: np.random.Generator, n_rows: int, size, locality: str
+# public alias: the non-stationary scenario generators (repro.traces.scenarios)
+# manipulate ranks directly (rotation, frontier growth) before scattering
+scatter_ranks = _coprime_scatter
+
+
+def zipf_ranks(
+    rng: np.random.Generator, n_rows: int, size, s: float
 ) -> np.ndarray:
-    s = LOCALITY_S[locality]
+    """Zipf(s) popularity ranks via the continuous inverse-CDF (rank 0 is
+    the hottest). ``s <= 0`` degenerates to uniform."""
     if s <= 0.0:
         return rng.integers(0, n_rows, size=size, dtype=np.int64)
     u = rng.random(size=size)
-    ranks = np.minimum(
+    return np.minimum(
         (n_rows * u ** (1.0 / (1.0 - s))).astype(np.int64), n_rows - 1
     )
+
+
+def sample_ids_s(
+    rng: np.random.Generator, n_rows: int, size, s: float
+) -> np.ndarray:
+    """Like :func:`sample_ids` but parameterized by the raw Zipf exponent —
+    the continuous knob the diurnal-oscillation scenario sweeps."""
+    ranks = zipf_ranks(rng, n_rows, size, s)
+    if s <= 0.0:
+        return ranks  # uniform ranks are already ids
     return _coprime_scatter(ranks, n_rows)
+
+
+def sample_ids(
+    rng: np.random.Generator, n_rows: int, size, locality: str
+) -> np.ndarray:
+    return sample_ids_s(rng, n_rows, size, LOCALITY_S[locality])
 
 
 @dataclasses.dataclass

@@ -75,6 +75,9 @@ def train_lm(args):
 
 
 def train_dlrm(args):
+    import dataclasses
+    import itertools
+
     from repro.configs.dlrm_scratchpipe import (
         multi_table_config,
         multi_table_smoke_config,
@@ -90,27 +93,80 @@ def train_dlrm(args):
         dlrm_batches_group,
         hot_ids_for_group,
     )
+    from repro.traces import (
+        TraceReader,
+        TraceRecorder,
+        TraceReplayStream,
+        hot_ids_from_trace,
+        profile_hot_ids,
+        scenario_batches,
+    )
 
-    if args.tables:  # heterogeneous multi-table scenario
-        cfg = (
-            multi_table_smoke_config(args.tables)
-            if args.smoke
-            else multi_table_config(args.tables)
-        )
-    else:
-        cfg = (
+    reader = None
+    if args.trace:  # replay a recorded workload trace
+        reader = TraceReader(args.trace)
+        if reader.num_batches < 1:
+            raise SystemExit(
+                f"--trace {args.trace}: empty trace (0 recorded batches)"
+            )
+        if reader.num_dense_features < 1:
+            raise SystemExit(
+                f"--trace {args.trace}: no dense features (not a DLRM trace)"
+            )
+        base = (
             get_smoke_config("dlrm-scratchpipe")
             if args.smoke
             else get_config("dlrm-scratchpipe")
         )
-    group = TableGroup.from_config(cfg)
-    batch = args.batch or cfg.batch_size
+        group = reader.group
+        # the trace manifest defines the workload shape; the MLP stack
+        # follows (bottom-MLP output must match the trace's embed dim)
+        cfg = dataclasses.replace(
+            base,
+            name="dlrm-trace",
+            table_rows=tuple(group.rows),
+            embed_dim=group.dim,
+            lookups_per_table=reader.lookups_per_table,
+            num_dense_features=reader.num_dense_features,
+            batch_size=reader.batch_size,
+            bottom_mlp=tuple(base.bottom_mlp[:-1]) + (group.dim,),
+        )
+        batch = reader.batch_size
+        args.steps = min(args.steps, reader.num_batches)
+    else:
+        if args.tables:  # heterogeneous multi-table scenario
+            cfg = (
+                multi_table_smoke_config(args.tables)
+                if args.smoke
+                else multi_table_config(args.tables)
+            )
+        else:
+            cfg = (
+                get_smoke_config("dlrm-scratchpipe")
+                if args.smoke
+                else get_config("dlrm-scratchpipe")
+            )
+        group = TableGroup.from_config(cfg)
+        batch = args.batch or cfg.batch_size
     rows = group.total_rows
     slots = max(2048, int(rows * cfg.cache_fraction))
     host = HostEmbeddingTable(rows, cfg.embed_dim, seed=args.seed)
     trainer = DLRMTrainer(cfg, jax.random.key(args.seed), lr=args.lr)
 
     def batches(steps):
+        if reader is not None:
+            return TraceReplayStream(reader, stop=steps)
+        if args.scenario:  # non-stationary generator (repro.traces)
+            return scenario_batches(
+                args.scenario,
+                group,
+                steps,
+                batch_size=batch,
+                lookups_per_table=cfg.lookups_per_table,
+                locality=args.locality,
+                num_dense_features=cfg.num_dense_features,
+                seed=args.seed,
+            )
         if args.tables:
             return dlrm_batches_group(
                 group,
@@ -131,7 +187,8 @@ def train_dlrm(args):
         )
         return dlrm_batches(tc, steps)
 
-    if args.tables:
+    hetero_rows_present = len(set(group.rows)) > 1
+    if args.tables or (reader is not None and hetero_rows_present):
         # heterogeneous scenario: per-table budgets with the §VI-D window
         # floor (worst-case 6-batch window working set per table)
         floor = group.window_floor(batch * cfg.lookups_per_table)
@@ -144,24 +201,55 @@ def train_dlrm(args):
     if args.runtime == "scratchpipe":
         kw.update(past_window=cfg.past_window, future_window=cfg.future_window)
     elif args.runtime == "static":
-        kw = {
-            "hot_ids": hot_ids_for_group(
+        if reader is not None:
+            hot = hot_ids_from_trace(
+                reader,
+                cfg.cache_fraction,
+                profile_batches=max(1, args.steps // 5),
+            )
+        elif args.scenario:
+            # offline profiling pass over the workload's own prefix
+            hot = profile_hot_ids(
+                itertools.islice(batches(args.steps), max(1, args.steps // 5)),
+                group,
+                cfg.cache_fraction,
+            )
+        else:
+            hot = hot_ids_for_group(
                 group, cfg.cache_fraction, locality=args.locality
             )
-        }
+        kw = {"hot_ids": hot}
     elif args.runtime == "nocache":
         kw = {}
     pipe = make_runtime(args.runtime, host, trainer.train_fn, **kw)
-    stream = LookaheadStream(batches(args.steps))
+    src = batches(args.steps)
+    if args.record_trace:
+        prov = {
+            "generator": args.scenario or "synthetic",
+            "locality": args.locality,
+            "seed": args.seed,
+        }
+        src = TraceRecorder(args.record_trace, group, provenance=prov).tee(src)
+    # a replay stream already is a look-ahead source
+    stream = src if hasattr(src, "peek_ids") else LookaheadStream(src)
     t0 = time.time()
     stats = pipe.run(stream, lookahead_fn=stream.peek_ids)
     dt = time.time() - t0
     losses = [float(s.aux["loss"]) for s in stats if s.aux]
     hit = float(np.mean([s.hit_rate for s in stats[6:]])) if len(stats) > 6 else 0
+    source = (
+        f"trace:{args.trace}"
+        if args.trace
+        else f"scenario:{args.scenario}"
+        if args.scenario
+        else "synthetic"
+    )
     print(
-        f"runtime={args.runtime} tables={group.num_tables} "
+        f"runtime={args.runtime} source={source} tables={group.num_tables} "
         f"rows={list(group.rows)}"
     )
+    if args.record_trace:
+        print(f"recorded trace -> {args.record_trace}")
     print(
         f"done: steps={len(stats)} loss {losses[0]:.4f}->{losses[-1]:.4f} "
         f"plan_hit={hit:.3f} {dt / max(len(stats), 1) * 1e3:.1f}ms/step"
@@ -196,11 +284,31 @@ def main():
         help="N>0: heterogeneous N-table DLRM scenario (TableGroup); "
         "0: the paper's uniform 8-table config",
     )
+    ap.add_argument(
+        "--trace",
+        default=None,
+        help="replay a recorded workload trace directory "
+        "(repro.traces format; overrides the synthetic generator)",
+    )
+    ap.add_argument(
+        "--scenario",
+        default=None,
+        help="non-stationary workload generator by name "
+        "(drift, flash_crowd, diurnal, cold_start)",
+    )
+    ap.add_argument(
+        "--record-trace",
+        default=None,
+        help="snapshot the training workload into this trace directory "
+        "while training (repro.traces.TraceRecorder.tee)",
+    )
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=50)
     args = ap.parse_args()
     if args.tables < 0:
         ap.error("--tables must be >= 0 (0 = uniform paper config)")
+    if args.trace and args.scenario:
+        ap.error("--trace and --scenario are mutually exclusive")
     if args.arch == "dlrm-scratchpipe":
         train_dlrm(args)
     else:

@@ -1,0 +1,36 @@
+"""Workload trace subsystem: recorded traces, non-stationary scenario
+generators, and a streaming prefetched lookahead source.
+
+The always-hit guarantee (paper §IV-A) rests on the dataset recording
+future sparse ids — this package makes workloads first-class artifacts:
+
+    format      sharded, mmap-able binary trace format (+ manifest header)
+    recorder    TraceRecorder: snapshot any (ids, batch) generator
+    replay      TraceReplayStream: lookahead replay w/ background prefetch
+    scenarios   drift / flash_crowd / diurnal / cold_start generators
+    profiling   static-cache provisioning from a trace prefix
+    criteo      Criteo-TSV ingestion into the trace format
+"""
+from repro.traces.format import TraceMeta, TraceReader, TraceWriter
+from repro.traces.profiling import hot_ids_from_trace, profile_hot_ids
+from repro.traces.recorder import TraceRecorder, record_trace
+from repro.traces.replay import TraceReplayStream
+from repro.traces.scenarios import (
+    SCENARIOS,
+    available_scenarios,
+    scenario_batches,
+)
+
+__all__ = [
+    "TraceMeta",
+    "TraceReader",
+    "TraceWriter",
+    "TraceRecorder",
+    "TraceReplayStream",
+    "record_trace",
+    "scenario_batches",
+    "available_scenarios",
+    "SCENARIOS",
+    "profile_hot_ids",
+    "hot_ids_from_trace",
+]

@@ -1,0 +1,58 @@
+"""Offline workload profiling: provision a static top-N cache from a trace
+prefix — exactly how a deployed static cache is built, and exactly why it
+decays under the non-stationary scenarios (the profile freezes a moment of
+a moving distribution).
+"""
+from __future__ import annotations
+
+from typing import Iterable, Union
+
+import numpy as np
+
+from repro.core.table_group import TableGroup
+from repro.traces.format import TraceReader
+
+
+def profile_hot_ids(
+    id_batches: Iterable[np.ndarray],
+    group: TableGroup,
+    fraction: float,
+) -> np.ndarray:
+    """Per-table top-N hottest GLOBAL row ids measured over ``id_batches``
+    (an iterable of global-id arrays or ``(ids, payload)`` items). Each
+    table gets its own pinned budget (``rows * fraction``); only rows
+    actually observed are pinned."""
+    counts = [np.zeros(spec.rows, dtype=np.int64) for spec in group.tables]
+    for item in id_batches:
+        ids = item[0] if isinstance(item, tuple) else item
+        for t, local in enumerate(group.split(np.asarray(ids))):
+            np.add.at(counts[t], local, 1)
+    out = []
+    for t, spec in enumerate(group.tables):
+        budget = max(1, int(spec.rows * fraction))
+        observed = int(np.count_nonzero(counts[t]))
+        n_pin = min(budget, observed)
+        if n_pin == 0:
+            continue
+        top = np.argpartition(counts[t], -n_pin)[-n_pin:]
+        out.append(group.to_global(t, top))
+    if not out:
+        raise ValueError("profiling window observed no lookups")
+    return np.concatenate(out)
+
+
+def hot_ids_from_trace(
+    trace: Union[str, TraceReader],
+    fraction: float,
+    *,
+    profile_batches: int,
+) -> np.ndarray:
+    """Provision static-cache hot ids from the first ``profile_batches``
+    batches of a recorded trace (the offline profiling pass)."""
+    reader = trace if isinstance(trace, TraceReader) else TraceReader(trace)
+    n = min(profile_batches, reader.num_batches)
+    if n <= 0:
+        raise ValueError("trace has no batches to profile")
+    return profile_hot_ids(
+        (reader.global_ids(i) for i in range(n)), reader.group, fraction
+    )

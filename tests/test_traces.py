@@ -1,0 +1,467 @@
+"""Workload trace subsystem: record -> replay bit-identity, mid-trace
+resume determinism, prefetch transparency, non-stationary scenario
+properties (hot set actually rotates; static decays while ScratchPipe's
+always-hit guarantee holds), Criteo ingestion, and the LookaheadStream
+end-of-stream disambiguation."""
+import numpy as np
+import pytest
+
+from repro.core.host_table import HostEmbeddingTable
+from repro.core.pipeline import ScratchPipe
+from repro.core.table_group import TableGroup, TableSpec
+from repro.data.lookahead import LookaheadStream
+from repro.data.synthetic import dlrm_batches_group, sample_ids
+from repro.traces import (
+    TraceReader,
+    TraceRecorder,
+    TraceReplayStream,
+    available_scenarios,
+    hot_ids_from_trace,
+    profile_hot_ids,
+    record_trace,
+    scenario_batches,
+)
+from repro.traces.criteo import hash_feature, ingest_criteo_tsv
+
+
+def small_group():
+    return TableGroup([TableSpec("a", 600, 8), TableSpec("b", 250, 8)])
+
+
+def gen(group, steps=14, seed=3):
+    return dlrm_batches_group(
+        group, steps, batch_size=4, lookups_per_table=3, seed=seed
+    )
+
+
+def assert_items_equal(a, b):
+    (g1, p1), (g2, p2) = a, b
+    np.testing.assert_array_equal(g1, g2)
+    np.testing.assert_array_equal(p1["sparse_ids"], p2["sparse_ids"])
+    np.testing.assert_array_equal(p1["dense"], p2["dense"])
+    np.testing.assert_array_equal(p1["label"], p2["label"])
+
+
+# --------------------------------------------------------------------- #
+# record -> replay
+# --------------------------------------------------------------------- #
+def test_record_replay_bit_identical(tmp_path):
+    group = small_group()
+    path = str(tmp_path / "t")
+    # small shard size so the trace actually spans multiple shards
+    n = record_trace(path, group, gen(group), batches_per_shard=5)
+    assert n == 14
+    ref = list(gen(group))
+    with TraceReplayStream(path, prefetch=4) as rs:
+        got = list(rs)
+    assert len(got) == len(ref)
+    for a, b in zip(ref, got):
+        assert_items_equal(a, b)
+
+
+def test_replay_prefetch_transparent(tmp_path):
+    """Prefetched and synchronous replay deliver the identical sequence."""
+    group = small_group()
+    path = str(tmp_path / "t")
+    record_trace(path, group, gen(group))
+    with TraceReplayStream(path, prefetch=0) as sync:
+        with TraceReplayStream(path, prefetch=6) as pre:
+            for a, b in zip(sync, pre):
+                assert_items_equal(a, b)
+
+
+def test_replay_resume_mid_trace(tmp_path):
+    """state_dict round-trip: a resumed stream continues the exact
+    schedule (elastic-restart path, no generator replay-and-skip)."""
+    group = small_group()
+    path = str(tmp_path / "t")
+    record_trace(path, group, gen(group))
+    full = list(TraceReplayStream(path, prefetch=0))
+    rs = TraceReplayStream(path, prefetch=3)
+    for _ in range(6):
+        next(rs)
+    state = rs.state_dict()
+    rs.close()
+    assert state["consumed"] == 6
+    resumed = TraceReplayStream.resume(path, state)
+    rest = list(resumed)
+    assert len(rest) == len(full) - 6
+    for a, b in zip(full[6:], rest):
+        assert_items_equal(a, b)
+    assert resumed.exhausted
+    resumed.close()
+    # a step-limited stream resumes with the SAME bound: the checkpointed
+    # schedule ends at stop, not at the end of the (longer) trace
+    limited = TraceReplayStream(path, stop=9, prefetch=0)
+    for _ in range(4):
+        next(limited)
+    resumed2 = TraceReplayStream.resume(path, limited.state_dict())
+    assert resumed2.num_batches == 9
+    rest2 = list(resumed2)
+    assert len(rest2) == 5 and resumed2.exhausted
+    for a, b in zip(full[4:9], rest2):
+        assert_items_equal(a, b)
+    limited.close(), resumed2.close()
+
+
+def test_replay_peek_does_not_consume(tmp_path):
+    group = small_group()
+    path = str(tmp_path / "t")
+    record_trace(path, group, gen(group))
+    rs = TraceReplayStream(path, prefetch=2)
+    peek = rs.peek_ids(3)
+    assert len(peek) == 3 and rs.consumed == 0
+    ref = list(gen(group))
+    for i in range(3):
+        np.testing.assert_array_equal(peek[i], ref[i][0])
+    np.testing.assert_array_equal(next(rs)[0], ref[0][0])
+    # short peek near the tail + exhausted disambiguation
+    rs.seek(12)
+    assert len(rs.peek_ids(5)) == 2 and not rs.exhausted
+    next(rs), next(rs)
+    assert rs.peek_ids(5) == [] and rs.exhausted
+    with pytest.raises(StopIteration):
+        next(rs)
+    rs.close()
+
+
+def test_replay_stop_limits_steps(tmp_path):
+    """``stop`` caps the replay window — run_design/train.py pass their
+    step budget through it, so a long recorded trace cannot silently
+    inflate a short run."""
+    group = small_group()
+    path = str(tmp_path / "t")
+    record_trace(path, group, gen(group))  # 14 batches
+    with TraceReplayStream(path, stop=5, prefetch=2) as rs:
+        assert rs.num_batches == 5
+        got = list(rs)
+        assert len(got) == 5 and rs.exhausted
+    ref = list(gen(group))
+    for a, b in zip(ref[:5], got):
+        assert_items_equal(a, b)
+    # stop beyond the trace clamps; stop also bounds peek windows
+    with TraceReplayStream(path, stop=99) as rs:
+        assert rs.num_batches == 14
+    with TraceReplayStream(path, start=2, stop=4, prefetch=0) as rs:
+        assert len(rs.peek_ids(10)) == 2
+
+
+def test_recorder_tee_records_while_training(tmp_path):
+    group = small_group()
+    path = str(tmp_path / "t")
+    rec = TraceRecorder(path, group)
+    seen = [ids.copy() for ids, _ in rec.tee(gen(group, steps=7))]
+    assert rec.num_batches == 7
+    reader = TraceReader(path)
+    assert reader.num_batches == 7
+    for i in range(7):
+        np.testing.assert_array_equal(reader.global_ids(i), seen[i])
+
+
+def test_trace_manifest_and_validation(tmp_path):
+    group = small_group()
+    path = str(tmp_path / "t")
+    record_trace(
+        path, group, gen(group, steps=4), provenance={"generator": "unit"}
+    )
+    reader = TraceReader(path)
+    m = reader.meta
+    assert m.provenance["generator"] == "unit"
+    assert [t.name for t in m.tables] == ["a", "b"]
+    assert (m.batch_size, m.lookups_per_table) == (4, 3)
+    assert reader.group.rows == group.rows
+    with pytest.raises(IndexError):
+        reader.batch(4)
+    with pytest.raises(FileNotFoundError):
+        TraceReader(str(tmp_path / "nope"))
+
+
+# --------------------------------------------------------------------- #
+# scenarios
+# --------------------------------------------------------------------- #
+def test_all_scenarios_emit_group_compatible_streams():
+    group = small_group()
+    for name in available_scenarios():
+        it = scenario_batches(
+            name, group, 6, batch_size=4, lookups_per_table=3, seed=2
+        )
+        for gids, payload in it:
+            assert gids.shape == (4, 2, 3)
+            local = payload["sparse_ids"]
+            assert local.min() >= 0
+            for t, spec in enumerate(group.tables):
+                assert local[:, t, :].max() < spec.rows
+            # global ids land in each table's fused range
+            t_of = group.table_of(gids.ravel())
+            assert set(np.unique(t_of)) <= {0, 1}
+
+
+def _top_ids(batches, group, table=0, n=50):
+    counts = np.zeros(group.tables[table].rows, dtype=np.int64)
+    for gids, _ in batches:
+        np.add.at(counts, group.split(gids)[table], 1)
+    return set(np.argsort(-counts)[:n].tolist())
+
+
+def test_drift_hot_set_rotates():
+    """The drift scenario's defining property: the hot set at the end of
+    the stream has largely rotated away from the hot set at the start,
+    while consecutive windows still overlap (gradual, not a step)."""
+    group = TableGroup([TableSpec("a", 5000, 8)])
+    steps = 60
+    batches = list(
+        scenario_batches(
+            "drift",
+            group,
+            steps,
+            batch_size=64,
+            lookups_per_table=8,
+            seed=4,
+            # 2 rows/step: a 10-step window shifts the rank head by ~20
+            # positions — neighbours share most of the top-50, the far
+            # window (~100 positions away) shares almost none of it
+            drift_rate=0.0004,
+        )
+    )
+    early = _top_ids(batches[:10], group)
+    mid = _top_ids(batches[10:20], group)
+    late = _top_ids(batches[-10:], group)
+    j_adjacent = len(early & mid) / len(early | mid)
+    j_far = len(early & late) / len(early | late)
+    assert j_adjacent > 0.25, f"adjacent windows should overlap ({j_adjacent})"
+    assert j_far < j_adjacent / 2, (
+        f"hot set did not rotate: far-overlap {j_far} vs adjacent {j_adjacent}"
+    )
+
+
+def test_static_decays_scratchpipe_always_hits(tmp_path):
+    """The core non-stationarity claim on a recorded drift trace: a
+    prefix-profiled static cache's hit rate degrades, ScratchPipe's
+    train-time hit rate stays exactly 100%."""
+    from repro.core.runtime import make_runtime
+
+    group = TableGroup([TableSpec("a", 4000, 8), TableSpec("b", 2000, 8)])
+    steps = 40
+    path = str(tmp_path / "drift")
+    record_trace(
+        path,
+        group,
+        scenario_batches(
+            "drift",
+            group,
+            steps,
+            batch_size=32,
+            lookups_per_table=4,
+            seed=7,
+            drift_rate=0.008,
+        ),
+    )
+
+    noop = lambda storage, slots, batch: (storage, None)  # noqa: E731
+    # static: profiled on the first 5 batches (the offline pass)
+    hot = hot_ids_from_trace(path, 0.10, profile_batches=5)
+    host = HostEmbeddingTable(group.total_rows, group.dim, seed=0)
+    static = make_runtime("static", host, noop, hot_ids=hot)
+    with TraceReplayStream(path) as stream:
+        stats = static.run(stream)
+    rate = [s.hit_lookups / max(s.n_lookups, 1) for s in stats]
+    early, late = np.mean(rate[:8]), np.mean(rate[-8:])
+    assert early - late > 0.15, f"static did not decay: {early} -> {late}"
+
+    # scratchpipe on the SAME trace: always-hit at [Train], every step
+    host2 = HostEmbeddingTable(group.total_rows, group.dim, seed=0)
+    floor = group.window_floor(32 * 4)
+    slots = max(int(group.total_rows * 0.10), sum(min(floor, r) for r in group.rows))
+    pipe = make_runtime(
+        "scratchpipe",
+        host2,
+        noop,
+        num_slots=slots,
+        table_group=group,
+        slot_budgets=group.slot_budgets(slots, min_per_table=floor),
+    )
+    with TraceReplayStream(path) as stream:
+        pstats = pipe.run(stream, lookahead_fn=stream.peek_ids)
+    assert len(pstats) == steps
+    assert all(s.hit_lookups == s.n_lookups for s in pstats)
+
+
+def test_profile_hot_ids_matches_distribution():
+    group = TableGroup([TableSpec("a", 1000, 8)])
+    rng = np.random.default_rng(0)
+    batches = [
+        sample_ids(rng, 1000, (16, 1, 4), "high") for _ in range(20)
+    ]
+    hot = profile_hot_ids(batches, group, 0.05)
+    assert 1 <= hot.size <= 50
+    # pinned rows must capture well above their share of a skewed stream
+    is_hot = np.zeros(1000, bool)
+    is_hot[hot] = True
+    test = sample_ids(np.random.default_rng(1), 1000, 50_000, "high")
+    assert is_hot[test].mean() > 0.3
+
+
+# --------------------------------------------------------------------- #
+# criteo ingestion
+# --------------------------------------------------------------------- #
+def _criteo_lines(n=40, seed=0, num_cat=26):
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n):
+        label = str(int(rng.integers(0, 2)))
+        dense = [
+            str(int(rng.integers(0, 500))) if rng.random() > 0.2 else ""
+            for _ in range(13)
+        ]
+        cats = [
+            f"{int(rng.integers(0, 2 ** 32)):08x}" if rng.random() > 0.1 else ""
+            for _ in range(num_cat)
+        ]
+        out.append("\t".join([label] + dense + cats) + "\n")
+    return out
+
+
+def test_criteo_ingest_deterministic_and_in_range(tmp_path):
+    lines = _criteo_lines()
+    lines.insert(2, "malformed\tline\n")  # real day files have a few
+    rows = [70, 40, 90]
+    p1, p2 = str(tmp_path / "a"), str(tmp_path / "b")
+    n1 = ingest_criteo_tsv(iter(lines), p1, table_rows=rows, batch_size=8)
+    n2 = ingest_criteo_tsv(iter(lines), p2, table_rows=rows, batch_size=8)
+    assert n1 == n2 == 5  # 40 valid lines // 8 (partial batch dropped)
+    r1, r2 = TraceReader(p1), TraceReader(p2)
+    assert r1.meta.lookups_per_table == 1
+    assert r1.group.num_tables == 3
+    for i in range(n1):
+        assert_items_equal(r1.batch(i), r2.batch(i))
+        local = r1.local_ids(i)
+        for t, nrows in enumerate(rows):
+            assert 0 <= local[:, t, 0].min() and local[:, t, 0].max() < nrows
+    # labels are 0/1, dense is log1p-transformed (non-negative)
+    _, payload = r1.batch(0)
+    assert set(np.unique(payload["label"])) <= {0.0, 1.0}
+    assert payload["dense"].min() >= 0.0
+
+
+def test_criteo_hash_stability():
+    assert hash_feature("0a1b2c3d", 1000) == hash_feature("0a1b2c3d", 1000)
+    assert hash_feature("", 1000) == hash_feature("", 1000)
+    # non-hex values take the FNV path, still deterministic and in range
+    for raw in ("", "0a1b2c3d", "not-hex!", "x" * 40):
+        h = hash_feature(raw, 37)
+        assert 0 <= h < 37
+
+
+def test_criteo_trace_replays_through_pipeline(tmp_path):
+    """A hashed real-log trace drives ScratchPipe end-to-end (lookups=1)."""
+    path = str(tmp_path / "c")
+    ingest_criteo_tsv(
+        iter(_criteo_lines(70, seed=5)),
+        path,
+        table_rows=[120, 60],
+        batch_size=8,
+    )
+    reader = TraceReader(path)
+    group = reader.group
+    host = HostEmbeddingTable(group.total_rows, group.dim, seed=0)
+    floor = group.window_floor(8 * 1)
+    slots = sum(min(floor, r) for r in group.rows)
+    pipe = ScratchPipe(
+        host,
+        slots,
+        lambda s, sl, b: (s, None),
+        table_group=group,
+        slot_budgets=group.slot_budgets(slots, min_per_table=floor),
+    )
+    with TraceReplayStream(reader) as stream:
+        stats = pipe.run(stream, lookahead_fn=stream.peek_ids)
+    assert len(stats) == reader.num_batches
+    assert all(s.hit_lookups == s.n_lookups for s in stats)
+
+
+# --------------------------------------------------------------------- #
+# satellites: LookaheadStream end-of-stream disambiguation
+# --------------------------------------------------------------------- #
+def test_lookahead_exhausted_property():
+    items = [(np.array([i]), {}) for i in range(3)]
+    s = LookaheadStream(iter(items))
+    assert not s.exhausted
+    # a short peek window means the SOURCE ended, but batches remain
+    assert len(s.peek_ids(10)) == 3
+    assert not s.exhausted, "buffered batches remain — not drained"
+    for _ in range(3):
+        next(s)
+    assert s.exhausted
+    assert s.peek_ids(2) == []
+    # an empty stream is exhausted as soon as a peek/next observes it
+    e = LookaheadStream(iter([]))
+    assert not e.exhausted  # nothing observed yet
+    assert e.peek_ids(1) == []
+    assert e.exhausted
+
+
+def test_pipeline_drains_via_exhausted_property():
+    """ScratchPipe.run keys the drain decision off stream.exhausted: after
+    the look-ahead window peeked past the end, no sentinel next() probe is
+    needed and every admitted batch still trains exactly once."""
+
+    class CountingStream(LookaheadStream):
+        def __init__(self, it):
+            super().__init__(it)
+            self.next_calls = 0
+
+        def __next__(self):
+            self.next_calls += 1
+            return super().__next__()
+
+    rng = np.random.default_rng(0)
+    items = [(rng.integers(0, 100, size=6), {}) for _ in range(9)]
+    host = HostEmbeddingTable(100, 4, seed=0)
+    pipe = ScratchPipe(host, 80, lambda s, sl, b: (s, None))
+    stream = CountingStream(iter(items))
+    stats = pipe.run(stream, lookahead_fn=stream.peek_ids)
+    assert len(stats) == 9
+    assert [s.step for s in stats] == list(range(1, 10))
+    # the final peek already exhausted the source: run() never needed a
+    # sentinel next() beyond the 9 real batches
+    assert stream.next_calls == 9
+
+
+# --------------------------------------------------------------------- #
+# satellite: benchmark table cache holds the two most recent tables
+# --------------------------------------------------------------------- #
+def test_bench_table_cache_holds_two_configs():
+    from benchmarks import common
+
+    common._TABLE_CACHE.clear()
+    common._fresh_host(64, 4, seed=1)
+    base_a = common._TABLE_CACHE[(64, 4, 1)]
+    common._fresh_host(96, 4, seed=1)  # e.g. the --hetero flip
+    # alternating the two configs must NOT rebuild either base table
+    common._fresh_host(64, 4, seed=1)
+    common._fresh_host(96, 4, seed=1)
+    assert common._TABLE_CACHE[(64, 4, 1)] is base_a
+    assert len(common._TABLE_CACHE) == 2
+    # a third config evicts only the least-recently-used entry
+    common._fresh_host(128, 4, seed=1)
+    assert (64, 4, 1) not in common._TABLE_CACHE
+    assert (96, 4, 1) in common._TABLE_CACHE
+    assert len(common._TABLE_CACHE) == 2
+    common._TABLE_CACHE.clear()
+
+
+def test_bench_summary_written(tmp_path):
+    from benchmarks import common, run as bench_run
+
+    common.RESULTS_LOG.clear()
+    common.run_design("scratchpipe", "medium", 0.10, steps=6, num_tables=1)
+    out = str(tmp_path / "BENCH_summary.json")
+    summary = bench_run.write_summary(True, 1.0, path=out)
+    assert summary["schema"] == "bench_summary/v1"
+    assert len(summary["designs"]) == 1
+    row = summary["designs"][0]
+    assert {"design", "locality", "hit_rate", "iter_ms_paper"} <= set(row)
+    import json
+
+    assert json.load(open(out))["designs"] == summary["designs"]
+    assert common.RESULTS_LOG == []  # drained
