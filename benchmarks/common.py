@@ -178,6 +178,23 @@ def _finalize(
     )
 
 
+def sync_runtime(runner, trainer=None) -> None:
+    """Quiesce a cache runtime before a timer edge: background
+    (overlapped-executor) work first, then device buffers. Without this,
+    wall-clock numbers would bracket un-synced JAX async dispatches."""
+    barrier = getattr(runner, "_barrier", None)
+    if barrier is not None:
+        barrier()
+    pipes = getattr(runner, "pipes", None)
+    if pipes:
+        jax.block_until_ready([p.storage for p in pipes])
+    storage = getattr(runner, "storage", None)
+    if storage is not None:
+        jax.block_until_ready(storage)
+    if trainer is not None:
+        jax.block_until_ready(trainer.mlps)
+
+
 def run_design(
     design: str,
     locality: str,
@@ -192,6 +209,8 @@ def run_design(
     scenario: Optional[str] = None,
     scenario_kw: Optional[dict] = None,
     trace: Optional[str] = None,
+    executor: str = "sync",
+    fused: bool = False,
 ) -> DesignResult:
     """design in {nocache, static, strawman, scratchpipe} — constructed
     through the EmbeddingCacheRuntime registry. ``num_tables``/``hetero``
@@ -338,6 +357,13 @@ def run_design(
                 need = sum(min(floor, r) for r in group.rows)
                 slots = max(slots, need)
                 budgets = group.slot_budgets(slots, min_per_table=floor)
+            kw = {}
+            if design in ("scratchpipe", "strawman"):
+                kw["executor"] = executor
+                if fused:
+                    kw["fused_train_fn"] = trainer.fused_train_fn
+            elif design == "sharded":
+                kw["executor"] = executor
             pipe = make_runtime(
                 design,
                 host,
@@ -348,6 +374,7 @@ def run_design(
                 # seed-equivalent global slot pool
                 table_group=group if hetero else None,
                 slot_budgets=budgets,
+                **kw,
             )
             src = batches()
             # a replay stream is already a look-ahead source; everything
@@ -368,6 +395,7 @@ def run_design(
         r.source = source
         RESULTS_LOG.append(r)
         return r
+    sync_runtime(runner if design in ("nocache", "static") else pipe, trainer)
     wall_ms = (time.time() - t0) / steps * 1e3
     r = _finalize(
         design, locality, cache_frac, steps, hit,

@@ -63,6 +63,11 @@ def write_summary(all_ok: bool, total_seconds: float, path: str = SUMMARY_PATH):
             "hit_rate": round(r.hit_rate, 4),
             "iter_ms": round(r.iter_ms, 3),
             "iter_ms_paper": round(r.iter_ms_paper, 3),
+            # measured wall-clock on THIS container — a different column
+            # from the model-derived iter_ms, never mixed (see
+            # benchmarks/wallclock.py for the dedicated measured bench)
+            "wall_ms": round(r.wall_ms, 3),
+            "wall_steps_per_s": round(1e3 / r.wall_ms, 3) if r.wall_ms > 0 else None,
             "error": r.error,
         }
         for r in drain_results_log()

@@ -36,6 +36,33 @@ def dlrm_train_step(storage, mlps, slots, dense, label, lr, use_pallas=False):
     return storage, mlps, loss
 
 
+@functools.partial(
+    jax.jit, donate_argnums=(0,), static_argnames=("use_pallas", "lr")
+)
+def dlrm_fill_train_step(
+    storage, mlps, fill_slots, fill_rows, slots, dense, label, lr,
+    use_pallas=False,
+):
+    """Fused [Insert]-fill + [Train]: one dispatch per pipeline cycle instead
+    of two. The fill lands before the gather — exactly the split engine's
+    intra-cycle order — so results are bit-identical to fill-then-train.
+    ``fill_slots`` may be pow-2 padded with out-of-bounds sentinels
+    (drop-mode scatter discards them)."""
+    storage = storage.at[fill_slots].set(
+        fill_rows.astype(storage.dtype), mode="drop"
+    )
+
+    def loss_fn(mlps_, bags):
+        logit = dlrm.forward_from_bags(mlps_, dense, bags)
+        return dlrm.bce_loss(logit, label)
+
+    bags = sp.gather_reduce(storage, slots, use_pallas=use_pallas)
+    loss, (g_mlps, g_bags) = jax.value_and_grad(loss_fn, argnums=(0, 1))(mlps, bags)
+    mlps = jax.tree.map(lambda p, g: p - lr * g, mlps, g_mlps)
+    storage = sp.coalesce_apply(storage, slots, g_bags, lr, use_pallas=use_pallas)
+    return storage, mlps, loss
+
+
 class DLRMTrainer:
     """Holds the dense (MLP) parameters; exposes train_fn(storage, slots,
     batch) for the cache runtimes."""
@@ -50,6 +77,24 @@ class DLRMTrainer:
         storage, self.mlps, loss = dlrm_train_step(
             storage,
             self.mlps,
+            slots,
+            batch["dense"],
+            batch["label"],
+            lr=self.lr,
+            use_pallas=self.use_pallas,
+        )
+        return storage, {"loss": loss}
+
+    def fused_train_fn(
+        self, storage, fill_slots, fill_rows, slots, batch
+    ) -> Tuple[jax.Array, Dict[str, Any]]:
+        """[Insert]-fill + [Train] in one dispatch (pass as
+        ``ScratchPipe(..., fused_train_fn=trainer.fused_train_fn)``)."""
+        storage, self.mlps, loss = dlrm_fill_train_step(
+            storage,
+            self.mlps,
+            fill_slots,
+            fill_rows,
             slots,
             batch["dense"],
             batch["label"],

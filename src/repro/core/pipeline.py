@@ -16,15 +16,45 @@ sequential training (tested bit-tight in tests/test_scratchpipe_properties).
 any jitted computation that gathers from the scratchpad with ``slots`` and
 updates those rows in place (DLRM step, LM embedding step, ...).
 
+Executors (wall-clock fast path — see DESIGN.md "Wall-clock path"):
+
+  * ``executor="sync"`` (default) — every stage of every in-flight batch
+    runs on the calling thread in the hazard-adversarial order above. This
+    is the engine the hazard property tests run against.
+  * ``executor="overlapped"`` — the host-side [Collect] gather and [Insert]
+    write-back run on a single background worker thread, and the [Exchange]
+    d2h read of victim rows runs on a d2h thread, so the blocking
+    device-sync leaves the critical path. Submission order equals the sync
+    engine's execution order, and host-table operations all run on ONE
+    worker, so every host read/write interleaving is identical to sync —
+    the two executors are bit-identical (asserted in tests/test_fastpath).
+    Completion is checked where the row is provably retired: a victim's
+    write-back is submitted at its batch's [Insert] cycle, and the earliest
+    batch that could re-gather that row from host [Collect]s one full cycle
+    later (its [Plan] sits outside the future window, else the slot could
+    not have been evicted) — by which point the ordered worker queue has
+    the write-back ahead of the gather.
+
+Dispatch discipline: empty-operand device calls are skipped outright
+(zero-miss / zero-evict cycles launch nothing), [Insert]-fill can fuse into
+the [Train] dispatch (``fused_train_fn``), and variable-length index
+operands are padded to power-of-two buckets (drop-mode scatters / sliced
+reads) so the number of distinct XLA executables stays O(log batch) instead
+of one per miss count.
+
 The runtime also keeps per-tier byte counters ([Collect]/[Insert] host bytes,
 [Exchange] PCIe bytes, [Train] HBM bytes) — these feed the calibrated
-bandwidth model reproducing the paper's latency figures.
+bandwidth model reproducing the paper's latency figures. Counters always
+track LOGICAL (unpadded) bytes and are updated unconditionally, so both
+executors and both dispatch paths report identical traffic.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Any, Callable, Deque, Iterator, List, Optional, Tuple
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Callable, Deque, Dict, Iterator, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -46,6 +76,7 @@ class StepStats:
     n_evict: int
     hit_lookups: int = 0  # lookup-level (non-unique) hit count
     by_table: Any = None  # per-table {hits, misses} (multi-table runs only)
+    stage_times: Optional[Dict[str, float]] = None  # main-thread s per stage
     aux: Any = None
 
     @property
@@ -59,10 +90,50 @@ class _InFlight:
     batch: Any
     plan: Optional[PlanResult] = None
     host_rows: Optional[np.ndarray] = None  # [Collect] host->staging
+    host_rows_f: Optional[Future] = None  # overlapped: pending host gather
     evicted_dev: Optional[jax.Array] = None  # [Collect] device victim read
     fetched_dev: Optional[jax.Array] = None  # [Exchange] h2d
     evicted_host: Optional[np.ndarray] = None  # [Exchange] d2h
+    evicted_host_f: Optional[Future] = None  # overlapped: pending d2h
     stage: int = 0  # stages completed: 1=planned .. 4=inserted
+    times: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+
+# Smallest padded operand length. Collapsing every small fill/evict into one
+# bucket matters more than the wasted lanes: each DISTINCT fused-train shape
+# costs a full XLA compile, and ramp-up/drain cycles otherwise produce a
+# trickle of one-off tiny sizes. 256 rows x 128 B = 32 KB of slack, dwarfed
+# by one avoided compile.
+_PAD_FLOOR = 256
+
+
+def _pad_len(n: int) -> int:
+    """Pow-2 bucket with a floor: bounds the set of device operand shapes
+    (and thus jit executables) to O(log batch) instead of one per miss
+    count."""
+    return max(_PAD_FLOOR, 1 << (n - 1).bit_length())
+
+
+def _pad_index(idx: np.ndarray, sentinel: int) -> np.ndarray:
+    """Pad an index vector to the pow-2 bucket with a positive out-of-bounds
+    sentinel (drop-mode scatters discard it; negative would WRAP in jax)."""
+    n = idx.size
+    p = _pad_len(n)
+    if p == n:
+        return idx
+    out = np.full(p, sentinel, dtype=idx.dtype)
+    out[:n] = idx
+    return out
+
+
+def _pad_rows(rows: np.ndarray) -> np.ndarray:
+    n = rows.shape[0]
+    p = _pad_len(n)
+    if p == n:
+        return rows
+    out = np.zeros((p,) + rows.shape[1:], dtype=rows.dtype)
+    out[:n] = rows
+    return out
 
 
 class ScratchPipe:
@@ -79,10 +150,19 @@ class ScratchPipe:
         storage_dtype=None,
         table_group: Optional[TableGroup] = None,
         slot_budgets=None,
+        executor: str = "sync",
+        fused_train_fn: Optional[Callable] = None,
+        memoize_plan: bool = True,
+        record_stage_times: bool = False,
     ):
+        if executor not in ("sync", "overlapped"):
+            raise ValueError(f"unknown executor {executor!r}")
         self.host = host_table
         self.train_fn = train_fn
+        self.fused_train_fn = fused_train_fn
+        self.record_stage_times = record_stage_times
         self.pipelined = pipelined
+        self.executor = executor
         self.table_group = table_group
         if not pipelined:  # straw-man (§IV-B): depth-1, no hazards possible
             past_window, future_window = 0, 0
@@ -113,51 +193,162 @@ class ScratchPipe:
             policy=policy,
             row_offsets=row_offsets,
             slot_ranges=slot_ranges,
+            memoize=memoize_plan,
         )
         import jax.numpy as jnp
 
         dt = storage_dtype or jnp.dtype(host_table.data.dtype.name)
         self.storage = sp.make_storage(num_slots, host_table.dim, dt)
+        self.num_slots = num_slots
         self.pcie = HostTraffic()  # read = d2h, written = h2d
         self.hbm = HostTraffic()  # device-side traffic ([Train] + fills)
         self._window: Deque[_InFlight] = collections.deque()
         self._stats: List[StepStats] = []
         self.future_window = future_window
+        # overlapped executor: ONE ordered host worker (gathers and
+        # write-backs interleave exactly as the sync engine executes them)
+        # plus a d2h thread that absorbs the blocking device sync.
+        self._host_pool: Optional[ThreadPoolExecutor] = None
+        self._d2h_pool: Optional[ThreadPoolExecutor] = None
+        self._pending: Deque[Future] = collections.deque()
+        if executor == "overlapped":
+            self._host_pool = ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="scratchpipe-host"
+            )
+            self._d2h_pool = ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="scratchpipe-d2h"
+            )
+
+    # ------------------------------------------------------------------ #
+    # overlapped-executor plumbing
+    # ------------------------------------------------------------------ #
+    def _submit_host(self, fn, *args) -> Future:
+        f = self._host_pool.submit(fn, *args)
+        self._pending.append(f)
+        # reap retired work each cycle: surfaces worker exceptions promptly
+        # and keeps the pending deque from growing with the run length
+        while self._pending and self._pending[0].done():
+            self._pending.popleft().result()
+        return f
+
+    def _barrier(self) -> None:
+        """Wait for every outstanding background operation (host gathers,
+        write-backs, d2h copies). Called at run/drain boundaries and before
+        anything reads host-table or traffic state from outside the
+        pipeline's own ordered schedule."""
+        while self._pending:
+            self._pending.popleft().result()
+
+    def _writeback(self, evict_ids: np.ndarray, d2h: Future) -> None:
+        """Host-worker task: wait for the victims' d2h, then scatter. Runs
+        strictly after every earlier-submitted gather (one ordered worker)."""
+        self.host.scatter(evict_ids, d2h.result())
+
+    def close(self) -> None:
+        """Quiesce and release the overlapped executor's worker threads.
+        Idempotent; a no-op for the sync executor. Long-lived processes that
+        build many runtimes should call this (the threads are non-daemon and
+        otherwise live until interpreter exit)."""
+        self._barrier()
+        for pool in (self._host_pool, self._d2h_pool):
+            if pool is not None:
+                pool.shutdown(wait=True)
+        self._host_pool = self._d2h_pool = None
 
     # ------------------------------------------------------------------ #
     # stages
     # ------------------------------------------------------------------ #
     def _stage_plan(self, entry: _InFlight, lookahead: List[np.ndarray]):
+        t0 = time.perf_counter()
         entry.plan = self.planner.plan(entry.ids, lookahead)
+        entry.times["plan"] = time.perf_counter() - t0
 
     def _stage_collect(self, entry: _InFlight):
+        t0 = time.perf_counter()
         p = entry.plan
-        entry.host_rows = self.host.gather(p.miss_ids)  # host-tier read
-        entry.evicted_dev = sp.read(self.storage, p.evict_slots)  # HBM read
+        if p.miss_ids.size:
+            if self._host_pool is not None:
+                entry.host_rows_f = self._submit_host(self.host.gather, p.miss_ids)
+            else:
+                entry.host_rows = self.host.gather(p.miss_ids)  # host-tier read
+        if p.evict_slots.size:
+            # pad victim reads to the pow-2 bucket (slot 0 is always safe to
+            # read); the d2h side slices the real rows back out
+            entry.evicted_dev = sp.read(
+                self.storage, _pad_index(p.evict_slots, 0)
+            )
         self.hbm.read += p.evict_slots.size * self.host.row_bytes
+        entry.times["collect"] = time.perf_counter() - t0
 
     def _stage_exchange(self, entry: _InFlight):
+        t0 = time.perf_counter()
         p = entry.plan
-        entry.fetched_dev = jax.device_put(entry.host_rows)  # h2d
-        entry.evicted_host = np.asarray(entry.evicted_dev)  # d2h
+        if p.miss_ids.size:
+            rows = (
+                entry.host_rows_f.result()
+                if entry.host_rows_f is not None
+                else entry.host_rows
+            )
+            entry.fetched_dev = jax.device_put(_pad_rows(rows))  # h2d
+        n_evict = int(p.evict_slots.size)
+        if n_evict:
+            if self._d2h_pool is not None:
+                entry.evicted_host_f = self._d2h_pool.submit(
+                    lambda arr, n: np.asarray(arr)[:n], entry.evicted_dev, n_evict
+                )
+            else:
+                entry.evicted_host = np.asarray(entry.evicted_dev)[:n_evict]  # d2h
         self.pcie.written += p.miss_ids.size * self.host.row_bytes
         self.pcie.read += p.evict_slots.size * self.host.row_bytes
+        entry.times["exchange"] = time.perf_counter() - t0
 
-    def _stage_insert(self, entry: _InFlight):
+    def _stage_insert_host(self, entry: _InFlight):
+        """[Insert], host half: write evicted (dirty, trained) rows back."""
+        t0 = time.perf_counter()
         p = entry.plan
         if p.evict_ids.size:
-            self.host.scatter(p.evict_ids, entry.evicted_host)  # host write
+            if self._host_pool is not None:
+                self._submit_host(self._writeback, p.evict_ids, entry.evicted_host_f)
+            else:
+                self.host.scatter(p.evict_ids, entry.evicted_host)  # host write
+        entry.times["insert"] = time.perf_counter() - t0
+
+    def _stage_insert_fill(self, entry: _InFlight):
+        """[Insert], device half: fill fetched rows into their slots."""
+        t0 = time.perf_counter()
+        p = entry.plan
         if p.fill_slots.size:
             self.storage = sp.fill(
-                self.storage, jax.device_put(p.fill_slots), entry.fetched_dev
+                self.storage,
+                _pad_index(p.fill_slots, self.num_slots),
+                entry.fetched_dev,
             )
-            self.hbm.written += p.fill_slots.size * self.host.row_bytes
-
-    def _stage_train(self, entry: _InFlight) -> StepStats:
-        p = entry.plan
-        self.storage, aux = self.train_fn(
-            self.storage, jax.device_put(p.slots), entry.batch
+        self.hbm.written += p.fill_slots.size * self.host.row_bytes
+        entry.times["insert"] = entry.times.get("insert", 0.0) + (
+            time.perf_counter() - t0
         )
+
+    def _stage_train(
+        self, entry: _InFlight, fused_entry: Optional[_InFlight] = None
+    ) -> StepStats:
+        t0 = time.perf_counter()
+        p = entry.plan
+        if fused_entry is not None:
+            # one dispatch: the younger batch's [Insert]-fill rides inside
+            # this batch's [Train] executable (order — fill, then train — is
+            # exactly the split engine's intra-cycle order)
+            fp = fused_entry.plan
+            self.storage, aux = self.fused_train_fn(
+                self.storage,
+                _pad_index(fp.fill_slots, self.num_slots),
+                fused_entry.fetched_dev,
+                p.slots,
+                entry.batch,
+            )
+            self.hbm.written += fp.fill_slots.size * self.host.row_bytes
+            fused_entry.times["insert"] = fused_entry.times.get("insert", 0.0)
+        else:
+            self.storage, aux = self.train_fn(self.storage, p.slots, entry.batch)
         # [Train] HBM traffic: gather reads + coalesced scatter read-mod-write
         self.hbm.read += p.slots.size * self.host.row_bytes
         self.hbm.read += p.n_unique * self.host.row_bytes
@@ -165,6 +356,7 @@ class ScratchPipe:
         by_table = None
         if p.hits_by_table is not None:
             by_table = {"hits": p.hits_by_table, "misses": p.misses_by_table}
+        entry.times["train"] = time.perf_counter() - t0
         st = StepStats(
             step=p.step,
             n_lookups=int(p.slots.size),
@@ -174,6 +366,7 @@ class ScratchPipe:
             n_evict=int(p.evict_slots.size),
             hit_lookups=int(p.slots.size),  # always-hit at [Train] (§IV)
             by_table=by_table,
+            stage_times=dict(entry.times) if self.record_stage_times else None,
             aux=aux,
         )
         self._stats.append(st)
@@ -219,6 +412,7 @@ class ScratchPipe:
             self._advance_cycle(out)
             if draining and not self._window:
                 break
+        self._barrier()
         return out
 
     def _advance_cycle(self, out: List[StepStats]):
@@ -235,19 +429,33 @@ class ScratchPipe:
             self._stage_collect(by_stage[1])
         if 2 in by_stage:
             self._stage_exchange(by_stage[2])
-        if 3 in by_stage:
-            self._stage_insert(by_stage[3])
-        if 4 in by_stage:
-            entry = by_stage[4]
-            out.append(self._stage_train(entry))
-            self._window.remove(entry)
+        e3 = by_stage.get(3)
+        e4 = by_stage.get(4)
+        if e3 is not None:
+            self._stage_insert_host(e3)
+        fuse = (
+            self.fused_train_fn is not None
+            and e4 is not None
+            and e3 is not None
+            and e3.plan.fill_slots.size > 0
+        )
+        if e3 is not None and not fuse:
+            self._stage_insert_fill(e3)
+        if e4 is not None:
+            out.append(self._stage_train(e4, fused_entry=e3 if fuse else None))
+            self._window.remove(e4)
         for s in (1, 2, 3):
             if s in by_stage:
                 by_stage[s].stage = s + 1
 
     # -- incremental driving (lockstep multi-shard execution, §VI-G) ------- #
     def run_one_cycle(self, ids, batch, lookahead_fn=None) -> Optional[StepStats]:
-        """Plan one new mini-batch and advance the pipeline one cycle."""
+        """Plan one new mini-batch and advance the pipeline one cycle. The
+        unpipelined straw-man completes the whole step immediately (the
+        EmbeddingCacheRuntime contract) — its zero-width hold windows are
+        only sound when stages never interleave across batches."""
+        if not self.pipelined:
+            return self._step_sequential(np.asarray(ids), batch)
         entry = _InFlight(np.asarray(ids), batch)
         la = lookahead_fn(self.future_window) if lookahead_fn else []
         self._stage_plan(entry, la)
@@ -261,24 +469,38 @@ class ScratchPipe:
         """Advance one cycle without a new batch (pipeline drain)."""
         out: List[StepStats] = []
         self._advance_cycle(out)
+        if not self._window:
+            self._barrier()
         return out[0] if out else None
+
+    def _step_sequential(self, ids: np.ndarray, batch) -> StepStats:
+        """One full straw-man step: Plan/Collect/Exchange/Insert/Train
+        back-to-back. The fused dispatch merges the batch's own
+        [Insert]-fill into its [Train] call."""
+        entry = _InFlight(ids, batch)
+        self._stage_plan(entry, [])
+        self._stage_collect(entry)
+        self._stage_exchange(entry)
+        self._stage_insert_host(entry)
+        if self.fused_train_fn is not None and entry.plan.fill_slots.size:
+            return self._stage_train(entry, fused_entry=entry)
+        self._stage_insert_fill(entry)
+        return self._stage_train(entry)
 
     def _run_sequential(self, stream, lookahead_fn) -> List[StepStats]:
         """Straw-man (§IV-B): dynamic cache, no pipelining — every batch runs
-        Plan/Collect/Exchange/Insert/Train back-to-back."""
-        out = []
-        for ids, batch in stream:
-            entry = _InFlight(np.asarray(ids), batch)
-            self._stage_plan(entry, [])
-            self._stage_collect(entry)
-            self._stage_exchange(entry)
-            self._stage_insert(entry)
-            out.append(self._stage_train(entry))
+        the five stages back-to-back."""
+        out = [
+            self._step_sequential(np.asarray(ids), batch)
+            for ids, batch in stream
+        ]
+        self._barrier()
         return out
 
     # ------------------------------------------------------------------ #
     def flush_to_host(self):
         """Write every cached (dirty) row back to the host table."""
+        self._barrier()
         live = np.flatnonzero(self.planner.slot_to_id >= 0)
         if live.size:
             ids = self.planner.slot_to_id[live]
@@ -292,6 +514,7 @@ class ScratchPipe:
         with the deterministic look-ahead stream position this resumes with
         an IDENTICAL schedule (tests/test_perf_flags_and_ft.py)."""
         assert not self._window, "checkpoint only at drain boundaries"
+        self._barrier()
         out = {"host_table": self.host.data, "storage": np.asarray(self.storage)}
         for k, v in self.planner.state_dict().items():
             out[f"planner_{k}"] = v
@@ -299,6 +522,7 @@ class ScratchPipe:
 
     def load_state_arrays(self, arrays: dict) -> None:
         assert not self._window
+        self._barrier()
         self.host.data = np.asarray(arrays["host_table"])
         self.storage = jax.device_put(np.asarray(arrays["storage"]))
         self.planner.load_state_dict(
@@ -311,6 +535,7 @@ class ScratchPipe:
         return self._stats
 
     def traffic(self) -> dict:
+        self._barrier()  # host counters settle with the worker queue
         return {"host": self.host.traffic, "pcie": self.pcie, "hbm": self.hbm}
 
 

@@ -19,13 +19,38 @@ Data structures (names follow the paper):
 The HitMap is updated at [Plan] time — deliberately *ahead* of the Storage
 array (paper Fig. 11): it always reflects the cache state as of the oldest
 in-flight batch's [Train] completing.
+
+Zero-redundancy fast path (wall-clock tentpole):
+  * **Plan digests.** A mini-batch travels through the look-ahead window
+    ``future_window + 1`` times (as look-ahead, then as the current batch),
+    and the naive controller re-runs ``np.unique`` on it each time. A digest
+    (flattened int32 ids + unique ids + the HitMap probe of those uniques)
+    is computed once per batch object and memoized; the probe carries the
+    HitMap version it was taken at, so it is reused bit-identically whenever
+    the HitMap has not changed (every zero-miss cycle) and recomputed — over
+    the cached uniques only — when it has. Memoization keys on the identity
+    of the ids array, which the cache pins; callers must not mutate a batch
+    array in place after passing it (the pipeline and every stream in
+    ``repro.data``/``repro.traces`` hand over fresh arrays).
+  * **Lazy eligibility.** Future holds and the evictable mask are only
+    needed when a table actually has to evict; on zero-miss / fresh-slot
+    cycles the whole O(num_slots) sweep is skipped. When needed, the mask is
+    built in preallocated scratch buffers (no fresh num_slots allocations
+    per cycle) and future holds are applied as index assignments.
+
+All index arrays (slots / fill / evict / ids) are int32 end-to-end — half
+the h2d bytes and planner memory traffic; ``num_rows``/``num_slots`` are
+guarded against int32 overflow at construction.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
+
+_INT32_MAX = np.iinfo(np.int32).max
 
 
 @dataclasses.dataclass
@@ -45,6 +70,41 @@ class PlanResult:
     misses_by_table: Optional[np.ndarray] = None
 
 
+def _select_victims(vals: np.ndarray, cand: np.ndarray, n_evict: int) -> np.ndarray:
+    """First ``n_evict`` candidates ordered by (priority value, slot index) —
+    bit-identical to ``cand[np.argsort(vals, kind="stable")[:n_evict]]`` but
+    O(cand) via argpartition instead of O(cand log cand): the full sort of
+    every evictable slot was the planner's hottest line at scale. Ties at
+    the cutoff value are resolved by slot index, exactly as the stable sort
+    does (``cand`` is ascending by construction)."""
+    if n_evict >= vals.size:
+        return cand[np.argsort(vals, kind="stable")]
+    kth = np.partition(vals, n_evict - 1)[n_evict - 1]
+    less = np.flatnonzero(vals < kth)
+    eq = np.flatnonzero(vals == kth)[: n_evict - less.size]
+    sel = np.concatenate([less, eq])
+    # order the small selected subset by (value, position); within-group
+    # position order is already ascending, so the stable sort reproduces
+    # the full stable argsort's prefix exactly
+    return cand[sel[np.argsort(vals[sel], kind="stable")]]
+
+
+class _BatchDigest:
+    """Memoized per-batch [Plan] inputs: int32 flat ids, their uniques, and
+    the HitMap probe of the uniques (tagged with the HitMap version it was
+    taken at). ``ref`` pins the source array so its id() cannot be reused
+    while the digest is cached."""
+
+    __slots__ = ("ref", "flat", "uniq", "probe", "probe_version")
+
+    def __init__(self, ref, flat, uniq):
+        self.ref = ref
+        self.flat = flat
+        self.uniq = uniq
+        self.probe = None
+        self.probe_version = -1
+
+
 class Planner:
     """[Plan] controller over the fused row space of a TableGroup.
 
@@ -53,6 +113,11 @@ class Planner:
     budget, so one table's burst cannot evict another table's rows. Both
     default to a single all-covering partition — the pre-TableGroup
     single-table behavior, bit-for-bit.
+
+    ``memoize=False`` disables the digest cache (every call recomputes
+    unique/probe from scratch — the pre-fast-path behavior, kept for the
+    identity tests and as an escape hatch for callers that mutate batch
+    arrays in place).
     """
 
     def __init__(
@@ -66,14 +131,22 @@ class Planner:
         seed: int = 0,
         row_offsets: Optional[Sequence[int]] = None,
         slot_ranges: Optional[Sequence[Tuple[int, int]]] = None,
+        memoize: bool = True,
     ):
         if policy not in ("lru", "random", "lfu"):
             raise ValueError(f"unknown replacement policy {policy!r}")
+        if int(num_rows) > _INT32_MAX or int(num_slots) > _INT32_MAX:
+            raise ValueError(
+                f"int32 index path: num_rows={num_rows} / num_slots="
+                f"{num_slots} must fit in int32 (< 2**31); shard the row "
+                "space (ShardedScratchPipe) before growing past that"
+            )
         self.num_rows = int(num_rows)
         self.num_slots = int(num_slots)
         self.past_window = int(past_window)
         self.future_window = int(future_window)
         self.policy = policy
+        self.memoize = bool(memoize)
         self._rng = np.random.default_rng(seed)
 
         # per-table partition of the row space and the slot space
@@ -101,8 +174,8 @@ class Planner:
         if self.slot_ranges[-1][1] > self.num_slots:
             raise ValueError("slot_ranges exceed num_slots")
 
-        self.hitmap = np.full(self.num_rows, -1, dtype=np.int64)  # id -> slot
-        self.slot_to_id = np.full(self.num_slots, -1, dtype=np.int64)
+        self.hitmap = np.full(self.num_rows, -1, dtype=np.int32)  # id -> slot
+        self.slot_to_id = np.full(self.num_slots, -1, dtype=np.int32)
         self.hold = np.zeros(self.num_slots, dtype=np.uint32)  # shift register
         self.last_use = np.zeros(self.num_slots, dtype=np.int64)  # lru
         self.use_count = np.zeros(self.num_slots, dtype=np.int64)  # lfu
@@ -113,6 +186,15 @@ class Planner:
         self._cycle = 0
         # W-bit window: past mini-batches + the current one
         self._hold_bit = np.uint32(1 << self.past_window)
+
+        # zero-redundancy machinery: digest cache + preallocated scratch
+        self._hitmap_version = 0
+        self._digests: "collections.OrderedDict[int, _BatchDigest]" = (
+            collections.OrderedDict()
+        )
+        self._digest_keep = 4 * (self.future_window + 2)
+        self._eligible_buf = np.empty(self.num_slots, dtype=bool)
+        self._occupied_buf = np.empty(self.num_slots, dtype=bool)
 
     @property
     def _free_ptr(self) -> int:
@@ -137,11 +219,13 @@ class Planner:
         }
 
     def load_state_dict(self, st: dict) -> None:
-        self.hitmap = np.asarray(st["hitmap"], np.int64)
-        self.slot_to_id = np.asarray(st["slot_to_id"], np.int64)
+        self.hitmap = np.asarray(st["hitmap"], np.int32)
+        self.slot_to_id = np.asarray(st["slot_to_id"], np.int32)
         self.hold = np.asarray(st["hold"], np.uint32)
         self.last_use = np.asarray(st["last_use"], np.int64)
         self.use_count = np.asarray(st["use_count"], np.int64)
+        self._digests.clear()
+        self._hitmap_version += 1
         if "free_ptrs" not in st:
             if "scalars" in st and self.num_tables == 1:
                 # pre-TableGroup checkpoint: scalars = [free_ptr, cycle]
@@ -161,6 +245,29 @@ class Planner:
                 f"planner has {self.num_tables} tables"
             )
 
+    # -- plan digests --------------------------------------------------------
+    def _digest(self, ids) -> _BatchDigest:
+        """Digest of one batch object, memoized on array identity."""
+        key = id(ids)
+        d = self._digests.get(key)
+        if d is not None and d.ref is ids:
+            self._digests.move_to_end(key)
+            return d
+        flat = np.asarray(ids, dtype=np.int32).ravel()
+        d = _BatchDigest(ids, flat, np.unique(flat))
+        self._digests[key] = d
+        while len(self._digests) > self._digest_keep:
+            self._digests.popitem(last=False)
+        return d
+
+    def _probe(self, d: _BatchDigest) -> np.ndarray:
+        """HitMap lookup of a digest's uniques, reused while the HitMap is
+        unchanged (bit-identical by construction: same map, same keys)."""
+        if d.probe_version != self._hitmap_version:
+            d.probe = self.hitmap[d.uniq]
+            d.probe_version = self._hitmap_version
+        return d.probe
+
     def plan(
         self, ids: np.ndarray, future_batches: Optional[List[np.ndarray]] = None
     ) -> PlanResult:
@@ -168,22 +275,19 @@ class Planner:
         ids. ``future_batches``: look-ahead ids of the next `future_window`
         mini-batches (RAW-4 exclusion)."""
         self._cycle += 1
-        flat = np.asarray(ids, dtype=np.int64).ravel()
-        uniq = np.unique(flat)
+        if self.memoize:
+            d = self._digest(ids)
+            flat, uniq = d.flat, d.uniq
+            slots_u = self._probe(d)
+        else:
+            flat = np.asarray(ids, dtype=np.int32).ravel()
+            uniq = np.unique(flat)
+            slots_u = self.hitmap[uniq]
 
         # Step B (Algorithm 1): advance the hold shift register by one cycle.
         self.hold >>= 1
 
-        # Future-window holds, recomputed fresh every cycle.
-        future_held = np.zeros(self.num_slots, dtype=bool)
-        if self.future_window and future_batches:
-            for fb in future_batches[: self.future_window]:
-                fslots = self.hitmap[np.unique(np.asarray(fb, np.int64).ravel())]
-                fslots = fslots[fslots >= 0]
-                future_held[fslots] = True
-
         # Step C: batched hit/miss resolution.
-        slots_u = self.hitmap[uniq]
         hit_mask = slots_u >= 0
         hit_slots = slots_u[hit_mask]
         self.hold[hit_slots] |= self._hold_bit
@@ -193,13 +297,43 @@ class Planner:
         miss_ids = uniq[~hit_mask]
         n_miss = miss_ids.size
 
+        # Lazy eligibility: future holds + the evictable mask cost O(slots)
+        # and are only needed when some table must evict — zero-miss and
+        # fresh-slot cycles skip the sweep entirely. Computed at most once
+        # per plan() call, into preallocated buffers; values are identical
+        # to the eager path (the HitMap/hold state they read is not mutated
+        # until after the allocation loop).
+        future_list = (
+            future_batches[: self.future_window]
+            if self.future_window and future_batches
+            else ()
+        )
+        eligible: Optional[np.ndarray] = None
+
+        def get_eligible() -> np.ndarray:
+            nonlocal eligible
+            if eligible is None:
+                eligible = self._eligible_buf
+                np.equal(self.hold, 0, out=eligible)
+                np.greater_equal(self.slot_to_id, 0, out=self._occupied_buf)
+                eligible &= self._occupied_buf
+                for fb in future_list:
+                    if self.memoize:
+                        fslots = self._probe(self._digest(fb))
+                    else:
+                        fslots = self.hitmap[
+                            np.unique(np.asarray(fb, np.int32).ravel())
+                        ]
+                    fslots = fslots[fslots >= 0]
+                    eligible[fslots] = False  # future holds (RAW-4)
+            return eligible
+
         # Per-table allocation: fresh slots first, then victims with hold==0,
         # each table confined to its own slot budget. ``miss_ids`` is sorted
         # and table row ranges never interleave, so each table's misses are
         # one contiguous segment — per-table fill arrays concatenated in
         # table order stay aligned with ``miss_ids``.
         seg = np.searchsorted(miss_ids, self.row_offsets)
-        eligible = (self.hold == 0) & ~future_held & (self.slot_to_id >= 0)
         fill_parts: List[np.ndarray] = []
         victim_parts: List[np.ndarray] = []
         for t in range(self.num_tables):
@@ -209,12 +343,12 @@ class Planner:
             lo, hi = self.slot_ranges[t]
             n_fresh = min(n_miss_t, hi - int(self._free_ptrs[t]))
             fresh = np.arange(
-                self._free_ptrs[t], self._free_ptrs[t] + n_fresh, dtype=np.int64
+                self._free_ptrs[t], self._free_ptrs[t] + n_fresh, dtype=np.int32
             )
             self._free_ptrs[t] += n_fresh
             n_evict = n_miss_t - n_fresh
             if n_evict > 0:
-                cand = np.flatnonzero(eligible[lo:hi]) + lo
+                cand = np.flatnonzero(get_eligible()[lo:hi]).astype(np.int32) + lo
                 if cand.size < n_evict:
                     raise RuntimeError(
                         f"scratchpad too small: need {n_evict} victims, "
@@ -225,13 +359,16 @@ class Planner:
                         "working set (paper §VI-D)."
                     )
                 if self.policy == "lru":
-                    # stable sort: ties broken by slot index (matches plan_jax)
-                    order = np.argsort(self.last_use[cand], kind="stable")[:n_evict]
+                    victims_t = _select_victims(
+                        self.last_use[cand], cand, n_evict
+                    )
                 elif self.policy == "lfu":
-                    order = np.argsort(self.use_count[cand], kind="stable")[:n_evict]
+                    victims_t = _select_victims(
+                        self.use_count[cand], cand, n_evict
+                    )
                 else:  # random
                     order = self._rng.choice(cand.size, size=n_evict, replace=False)
-                victims_t = cand[order]
+                    victims_t = cand[order]
                 victim_parts.append(victims_t)
                 fill_parts.append(np.concatenate([fresh, victims_t]))
             else:
@@ -239,11 +376,11 @@ class Planner:
         victims = (
             np.concatenate(victim_parts)
             if victim_parts
-            else np.empty(0, dtype=np.int64)
+            else np.empty(0, dtype=np.int32)
         )
         evict_ids = self.slot_to_id[victims]
         fill_slots = (
-            np.concatenate(fill_parts) if fill_parts else np.empty(0, np.int64)
+            np.concatenate(fill_parts) if fill_parts else np.empty(0, np.int32)
         )
 
         # HitMap updated at [Plan] time (ahead of Storage — paper Fig. 11).
@@ -255,6 +392,7 @@ class Planner:
             self.hold[fill_slots] |= self._hold_bit
             self.last_use[fill_slots] = self._cycle
             self.use_count[fill_slots] = 1
+            self._hitmap_version += 1  # cached probes are now stale
 
         # Dense per-input slot mapping (what [Train] gathers with).
         slots = self.hitmap[flat].reshape(np.asarray(ids).shape)

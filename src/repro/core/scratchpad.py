@@ -19,8 +19,11 @@ import numpy as np
 
 @functools.partial(jax.jit, donate_argnums=0)
 def fill(storage: jax.Array, slots: jax.Array, rows: jax.Array) -> jax.Array:
-    """[Insert]: write fetched rows into their allocated slots."""
-    return storage.at[slots].set(rows.astype(storage.dtype))
+    """[Insert]: write fetched rows into their allocated slots. ``slots``
+    may be pow-2 padded with positive out-of-bounds sentinels (the pipeline
+    bounds its set of dispatch shapes that way); drop-mode discards them.
+    Negative indices would WRAP in jax — pad with num_slots, never -1."""
+    return storage.at[slots].set(rows.astype(storage.dtype), mode="drop")
 
 
 @jax.jit

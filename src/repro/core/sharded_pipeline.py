@@ -42,6 +42,8 @@ class ShardedScratchPipe:
         future_window: int = 2,
         policy: str = "lru",
         boundaries: Optional[Sequence[int]] = None,
+        executor: str = "sync",
+        record_stage_times: bool = False,
     ):
         """``train_fn(storages, slots_per_shard, batch)`` ->
         (new_storages, aux). ``num_slots`` is the per-shard scratchpad size
@@ -97,6 +99,8 @@ class ShardedScratchPipe:
                     past_window=past_window,
                     future_window=future_window,
                     policy=policy,
+                    executor=executor,
+                    record_stage_times=record_stage_times,
                 )
             )
 
@@ -169,7 +173,18 @@ class ShardedScratchPipe:
                     st = pipe.drain_one_cycle()
                     if st is not None:
                         outs[i].append(st)
+        self._barrier()
         return outs[-1]
+
+    def _barrier(self) -> None:
+        """Quiesce every shard's background (overlapped-executor) work."""
+        for pipe in self.pipes:
+            pipe._barrier()
+
+    def close(self) -> None:
+        """Release every shard's overlapped-executor worker threads."""
+        for pipe in self.pipes:
+            pipe.close()
 
     def run_one_cycle(self, ids, batch, lookahead_fn=None) -> Optional[StepStats]:
         """Admit one mini-batch (global ids) to every shard and advance each

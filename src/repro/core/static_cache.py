@@ -21,10 +21,11 @@ from __future__ import annotations
 from typing import List, Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.host_table import HostEmbeddingTable, HostTraffic
-from repro.core.pipeline import StepStats
+from repro.core.pipeline import StepStats, _pad_rows
 from repro.core.runtime import register_runtime
 
 
@@ -48,11 +49,14 @@ class NoCacheBaseline:
         flat = ids.ravel()
         uniq, inv = np.unique(flat, return_inverse=True)
         rows = self.host.gather(uniq)  # host gather (memory-bound)
-        storage = jax.device_put(rows)
+        # pow-2 padded transient region: bounded set of [Train] executables
+        # instead of one compile per distinct unique count (zero rows past
+        # ``uniq.size`` are never addressed by ``slots``)
+        storage = jax.device_put(_pad_rows(rows))
         self.pcie.written += rows.nbytes
         slots = inv.reshape(ids.shape)
-        storage, aux = self.train_fn(storage, jax.device_put(slots), batch)
-        new_rows = np.asarray(storage)
+        storage, aux = self.train_fn(storage, slots, batch)
+        new_rows = np.asarray(storage)[: uniq.size]
         self.pcie.read += new_rows.nbytes
         # host-side scatter of trained rows (gradient path on slow tier)
         self.host.scatter(uniq, new_rows)
@@ -122,25 +126,36 @@ class StaticCacheBaseline:
         n_hits = int(uniq.size - miss_ids.size)
 
         # Misses: gather from host, append to a transient device region
-        # behind the pinned area (fresh every step — no insertion).
+        # behind the pinned area (fresh every step — no insertion). The
+        # pinned region never leaves the device; the transient tail is
+        # pow-2 padded so the set of [Train] executables stays bounded.
         miss_rows = self.host.gather(miss_ids)
         self.pcie.written += miss_rows.nbytes
-        ext = jax.device_put(
-            np.concatenate([np.asarray(self.storage), miss_rows], axis=0)
-            if miss_ids.size
-            else np.asarray(self.storage)
-        )
-        tmp_map = self.id_to_slot.copy()
-        tmp_map[miss_ids] = self.hot_ids.size + np.arange(miss_ids.size)
-        slots = tmp_map[flat].reshape(ids.shape)
+        if miss_ids.size:
+            ext = jnp.concatenate(
+                [self.storage, jax.device_put(_pad_rows(miss_rows))], axis=0
+            )
+        else:
+            ext = self.storage
+        # temporarily map misses into the transient tail (reverted in the
+        # finally — cheaper than copying the O(rows) id->slot map per step,
+        # and an exception in train_fn must not leave tail slots mapped)
+        try:
+            self.id_to_slot[miss_ids] = self.hot_ids.size + np.arange(
+                miss_ids.size
+            )
+            slots = self.id_to_slot[flat].reshape(ids.shape)
+        finally:
+            self.id_to_slot[miss_ids] = -1
 
-        ext, aux = self.train_fn(ext, jax.device_put(slots), batch)
-        ext_np = np.asarray(ext)
+        ext, aux = self.train_fn(ext, slots, batch)
         # hit rows stay on device; missed rows' trained values scatter
         # back to the host tier (the slow bwd path, Fig. 4(b) right).
-        self.storage = jax.device_put(ext_np[: self.hot_ids.size])
+        self.storage = ext[: self.hot_ids.size]
         if miss_ids.size:
-            upd = ext_np[self.hot_ids.size :]
+            upd = np.asarray(
+                ext[self.hot_ids.size : self.hot_ids.size + miss_ids.size]
+            )
             self.pcie.read += upd.nbytes
             self.host.scatter(miss_ids, upd)
         # device-tier bytes: bag gathers over all lookups + read-mod-write

@@ -200,7 +200,11 @@ def train_dlrm(args):
         kw = {"num_slots": slots}
     if args.runtime == "scratchpipe":
         kw.update(past_window=cfg.past_window, future_window=cfg.future_window)
-    elif args.runtime == "static":
+    if args.runtime in ("scratchpipe", "strawman", "sharded"):
+        kw["executor"] = args.executor
+    if args.runtime in ("scratchpipe", "strawman") and args.fused:
+        kw["fused_train_fn"] = trainer.fused_train_fn
+    if args.runtime == "static":
         if reader is not None:
             hot = hot_ids_from_trace(
                 reader,
@@ -271,6 +275,19 @@ def main():
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--locality", default="medium")
+    ap.add_argument(
+        "--executor",
+        choices=("sync", "overlapped"),
+        default="sync",
+        help="pipeline executor: 'overlapped' moves host gathers/write-backs "
+        "and the victim d2h off the critical path (bit-identical to sync)",
+    )
+    ap.add_argument(
+        "--fused",
+        action="store_true",
+        help="fuse [Insert]-fill into the [Train] dispatch (one jitted call "
+        "per cycle; bit-identical to the split path)",
+    )
     ap.add_argument(
         "--runtime",
         default="scratchpipe",

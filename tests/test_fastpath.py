@@ -1,0 +1,268 @@
+"""Wall-clock fast path correctness (PR: overlapped executor / zero-
+redundancy planner / fused dispatch):
+
+  F1  executor="overlapped" is bit-identical to executor="sync" — storage,
+      flushed host table, per-step stats, and per-tier byte counters — on a
+      RECORDED drift trace through scratchpipe, strawman, and sharded.
+  F2  planner digest memoization is an identity: memoize=True and
+      memoize=False produce identical PlanResults and identical final state
+      over hypothesis-generated traces driven the way the pipeline drives
+      them (each batch seen as look-ahead before it becomes current).
+  F3  fused [Insert]-fill + [Train] (one dispatch) is bit-identical to the
+      split fill-then-train path, for the pipelined engine and the straw-man.
+  F4  int32 index path: planner outputs are int32 end-to-end and
+      constructing a planner past int32 range raises a clear error.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # fall back to deterministic fixed examples
+    from _hypothesis_compat import given, settings, st
+
+import jax
+
+from repro.core.host_table import HostEmbeddingTable
+from repro.core.plan import Planner
+from repro.core.runtime import make_runtime
+from repro.core.table_group import TableGroup, TableSpec
+from repro.traces import TraceReplayStream, record_trace, scenario_batches
+
+
+def small_group():
+    return TableGroup([TableSpec("a", 400, 8), TableSpec("b", 200, 8)])
+
+
+@pytest.fixture(scope="module")
+def drift_trace(tmp_path_factory):
+    """One recorded drift trace shared by the parity tests."""
+    group = small_group()
+    path = str(tmp_path_factory.mktemp("fastpath") / "drift")
+    n = record_trace(
+        path,
+        group,
+        scenario_batches(
+            "drift", group, 30, batch_size=4, lookups_per_table=3, seed=11
+        ),
+    )
+    assert n == 30
+    return path, group
+
+
+def _dlrm_trainer(group):
+    from repro.configs.base import DLRMConfig
+    from repro.core.dlrm_runtime import DLRMTrainer
+
+    cfg = DLRMConfig(
+        name="dlrm-fastpath",
+        table_rows=tuple(group.rows),
+        embed_dim=group.dim,
+        lookups_per_table=3,
+        batch_size=4,
+        bottom_mlp=(16, group.dim),
+        top_mlp=(16, 1),
+    )
+    return DLRMTrainer(cfg, jax.random.key(0), lr=0.05)
+
+
+class CountingSharded:
+    """Per-shard [Train]: +1 to every touched slot (global lockstep stage)."""
+
+    def train_fn(self, storages, slots_all, batch):
+        out = []
+        for storage, slots in zip(storages, slots_all):
+            slots = np.asarray(slots)
+            if slots.size:
+                u = np.unique(slots.ravel())
+                storage = storage.at[u].add(1.0)
+            out.append(storage)
+        return out, None
+
+
+def _run_design(design, trace_path, group, *, executor, fused=False):
+    host = HostEmbeddingTable(group.total_rows, group.dim, seed=1)
+    if design == "sharded":
+        runtime = make_runtime(
+            design,
+            host,
+            CountingSharded().train_fn,
+            num_slots=240,
+            table_group=group,
+            executor=executor,
+        )
+    else:
+        trainer = _dlrm_trainer(group)
+        kw = dict(num_slots=240, executor=executor)
+        if fused:
+            kw["fused_train_fn"] = trainer.fused_train_fn
+        runtime = make_runtime(design, host, trainer.train_fn, **kw)
+    with TraceReplayStream(trace_path, prefetch=0) as stream:
+        stats = runtime.run(stream, lookahead_fn=stream.peek_ids)
+    runtime.flush_to_host()
+    traffic = {
+        k: (t.read, t.written) for k, t in runtime.traffic().items()
+    }
+    storages = (
+        [np.asarray(p.storage) for p in runtime.pipes]
+        if hasattr(runtime, "pipes")
+        else [np.asarray(runtime.storage)]
+    )
+    return host.data.copy(), storages, stats, traffic
+
+
+def _assert_bit_identical(a, b, label):
+    host_a, stor_a, stats_a, traffic_a = a
+    host_b, stor_b, stats_b, traffic_b = b
+    np.testing.assert_array_equal(host_a, host_b, err_msg=f"{label}: host table")
+    assert len(stor_a) == len(stor_b)
+    for sa, sb in zip(stor_a, stor_b):
+        np.testing.assert_array_equal(sa, sb, err_msg=f"{label}: storage")
+    assert traffic_a == traffic_b, f"{label}: byte counters diverge"
+    assert len(stats_a) == len(stats_b), label
+    for sa, sb in zip(stats_a, stats_b):
+        assert (
+            sa.step, sa.n_lookups, sa.n_unique, sa.n_hits, sa.n_miss,
+            sa.n_evict, sa.hit_lookups,
+        ) == (
+            sb.step, sb.n_lookups, sb.n_unique, sb.n_hits, sb.n_miss,
+            sb.n_evict, sb.hit_lookups,
+        ), f"{label}: stats at step {sa.step}"
+        if isinstance(sa.aux, dict) and "loss" in sa.aux:
+            assert float(sa.aux["loss"]) == float(sb.aux["loss"]), (
+                f"{label}: loss at step {sa.step}"
+            )
+
+
+# --------------------------------------------------------------------- #
+# F1: sync vs overlapped, per design, on the recorded drift trace
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("design", ["scratchpipe", "strawman", "sharded"])
+def test_overlapped_executor_bit_identical(drift_trace, design):
+    path, group = drift_trace
+    sync = _run_design(design, path, group, executor="sync")
+    over = _run_design(design, path, group, executor="overlapped")
+    _assert_bit_identical(sync, over, f"{design} sync-vs-overlapped")
+
+
+# --------------------------------------------------------------------- #
+# F3: fused insert+train vs split, both engines, both executors
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("design", ["scratchpipe", "strawman"])
+def test_fused_dispatch_bit_identical(drift_trace, design):
+    path, group = drift_trace
+    split = _run_design(design, path, group, executor="sync")
+    fused = _run_design(design, path, group, executor="sync", fused=True)
+    _assert_bit_identical(split, fused, f"{design} split-vs-fused")
+    both = _run_design(design, path, group, executor="overlapped", fused=True)
+    _assert_bit_identical(split, both, f"{design} split-vs-overlapped+fused")
+
+
+def test_strawman_run_one_cycle_is_sequential(drift_trace):
+    """EmbeddingCacheRuntime contract: unpipelined designs complete the step
+    immediately. Driving the straw-man through run_one_cycle must return a
+    StepStats on EVERY call and produce bit-identical results to .run() —
+    its zero-width hold windows are only sound without cross-batch stage
+    interleaving (the wallclock bench drives this path)."""
+    path, group = drift_trace
+    via_run = _run_design("strawman", path, group, executor="sync")
+
+    host = HostEmbeddingTable(group.total_rows, group.dim, seed=1)
+    trainer = _dlrm_trainer(group)
+    runtime = make_runtime(
+        "strawman", host, trainer.train_fn, num_slots=240, executor="sync"
+    )
+    with TraceReplayStream(path, prefetch=0) as stream:
+        stats = []
+        for ids, batch in stream:
+            st = runtime.run_one_cycle(ids, batch, stream.peek_ids)
+            assert st is not None, "straw-man must complete each step"
+            stats.append(st)
+    runtime.flush_to_host()
+    traffic = {k: (t.read, t.written) for k, t in runtime.traffic().items()}
+    incremental = (
+        host.data.copy(), [np.asarray(runtime.storage)], stats, traffic
+    )
+    _assert_bit_identical(via_run, incremental, "strawman run-vs-one_cycle")
+
+
+# --------------------------------------------------------------------- #
+# F2: digest memoization is an identity (hypothesis)
+# --------------------------------------------------------------------- #
+def _drive_planners(batches, rows, slots, future=2):
+    """Drive memoized and unmemoized planners exactly like the pipeline:
+    every batch appears as look-ahead ``future`` times, then as current —
+    the SAME array objects each time (what the memoizer keys on)."""
+    a = Planner(rows, slots, future_window=future, memoize=True)
+    b = Planner(rows, slots, future_window=future, memoize=False)
+    for i, ids in enumerate(batches):
+        look = batches[i + 1 : i + 1 + future]
+        ra = a.plan(ids, look)
+        rb = b.plan(ids, look)
+        for field in ("slots", "miss_ids", "fill_slots", "evict_slots", "evict_ids"):
+            va, vb = getattr(ra, field), getattr(rb, field)
+            np.testing.assert_array_equal(va, vb, err_msg=f"{field} @ step {i}")
+            assert va.dtype == np.int32, f"{field} must be int32 (got {va.dtype})"
+        assert (ra.n_unique, ra.n_hits) == (rb.n_unique, rb.n_hits), i
+    assert a._digests, "memoized planner never populated its digest cache"
+    sa, sb = a.state_dict(), b.state_dict()
+    for k in sa:
+        np.testing.assert_array_equal(sa[k], sb[k], err_msg=f"state {k}")
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.data())
+def test_memoized_planner_identical_to_unmemoized(data):
+    rows = data.draw(st.integers(30, 150))
+    n_batches = data.draw(st.integers(4, 20))
+    seed = data.draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    batches = [
+        rng.integers(0, rows, size=rng.integers(1, 10)) for _ in range(n_batches)
+    ]
+    worst = max(
+        sum(len(np.unique(b)) for b in batches[i : i + 6])
+        for i in range(len(batches))
+    )
+    _drive_planners(batches, rows, min(rows, worst + 4))
+
+
+def test_memoized_probe_reused_across_cycles():
+    """A zero-miss cycle leaves the HitMap untouched, so the cached probe is
+    reused verbatim (the zero-redundancy claim, observable via versioning)."""
+    p = Planner(100, 50, future_window=2, memoize=True)
+    warm = np.arange(10)
+    p.plan(warm, [])
+    v = p._hitmap_version
+    hot = np.array([1, 2, 3])
+    p.plan(hot, [])  # all hits: no fills, no version bump
+    assert p._hitmap_version == v
+    d = p._digest(hot)
+    assert d.probe_version == v  # probe taken once, still valid
+
+
+# --------------------------------------------------------------------- #
+# F4: int32 guard rails
+# --------------------------------------------------------------------- #
+def test_int32_overflow_guard():
+    with pytest.raises(ValueError, match="int32"):
+        Planner(2**31 + 1, 16)
+    with pytest.raises(ValueError, match="int32"):
+        Planner(100, 2**31 + 1)
+
+
+def test_planner_state_roundtrips_int32():
+    p = Planner(50, 20)
+    p.plan(np.array([1, 2, 3]))
+    st_ = p.state_dict()
+    q = Planner(50, 20)
+    q.load_state_dict(st_)
+    assert q.hitmap.dtype == np.int32 and q.slot_to_id.dtype == np.int32
+    r1, r2 = p.plan(np.array([2, 4])), q.plan(np.array([2, 4]))
+    np.testing.assert_array_equal(r1.slots, r2.slots)
+    # legacy (int64) checkpoints load fine
+    legacy = {k: np.asarray(v, np.int64) if v.dtype != np.uint32 else v
+              for k, v in st_.items()}
+    q2 = Planner(50, 20)
+    q2.load_state_dict(legacy)
+    assert q2.hitmap.dtype == np.int32
