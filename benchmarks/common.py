@@ -125,6 +125,7 @@ class DesignResult:
     wall_ms: float  # actual wall-clock on this container (for reference)
     error: Optional[str] = None
     source: str = "synthetic"  # synthetic | scenario:<name> | trace:<path>
+    planner: str = "host"  # [Plan] placement: host | device
 
 
 # Every run_design result lands here; benchmarks/run.py drains it into
@@ -211,6 +212,7 @@ def run_design(
     trace: Optional[str] = None,
     executor: str = "sync",
     fused: bool = False,
+    planner: str = "host",
 ) -> DesignResult:
     """design in {nocache, static, strawman, scratchpipe} — constructed
     through the EmbeddingCacheRuntime registry. ``num_tables``/``hetero``
@@ -360,10 +362,12 @@ def run_design(
             kw = {}
             if design in ("scratchpipe", "strawman"):
                 kw["executor"] = executor
+                kw["planner"] = planner
                 if fused:
                     kw["fused_train_fn"] = trainer.fused_train_fn
             elif design == "sharded":
                 kw["executor"] = executor
+                kw["planner"] = planner
             pipe = make_runtime(
                 design,
                 host,
@@ -393,6 +397,7 @@ def run_design(
         r = _finalize(design, locality, cache_frac, 0, 0, 0, 0, 0, cfg, 0)
         r.error = "infeasible: cache smaller than worst-case window working set (§VI-D)"
         r.source = source
+        r.planner = planner
         RESULTS_LOG.append(r)
         return r
     sync_runtime(runner if design in ("nocache", "static") else pipe, trainer)
@@ -402,6 +407,7 @@ def run_design(
         host_b / steps, pcie / steps, dev_b / steps, cfg, wall_ms,
     )
     r.source = source
+    r.planner = planner
     RESULTS_LOG.append(r)
     return r
 

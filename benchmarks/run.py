@@ -58,6 +58,8 @@ def write_summary(all_ok: bool, total_seconds: float, path: str = SUMMARY_PATH):
             "design": r.design,
             "locality": r.locality,
             "source": r.source,
+            # [Plan] placement the run executed with (host | device)
+            "planner": r.planner,
             "cache_frac": r.cache_frac,
             "steps": r.steps,
             "hit_rate": round(r.hit_rate, 4),

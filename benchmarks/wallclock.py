@@ -23,14 +23,23 @@ container (``--baseline before.json`` merges a previous run in). Every cell
 runs in its OWN subprocess: cells must not share the in-process XLA compile
 cache, or a cell's number would depend on which cells ran before it.
 
-Scratchpipe modes: ``sync`` (sync executor, split dispatch — the fast-path
-planner/padding/empty-skip still apply) and ``fast`` (overlapped executor +
-fused insert+train). On this 2-core container the overlapped worker threads
-contend with XLA's spinning pool, so the two modes land close; on real
-two-tier hardware ``fast`` is the intended production mode (DESIGN.md).
+Measured modes: ``sync`` (sync executor, split dispatch — the fast-path
+planner/padding/empty-skip still apply), ``fast`` (overlapped executor +
+fused insert+train, host planner) and ``device`` (fast + the device-resident
+planner: PlanState on-accelerator, raw ids h2d instead of translated slots).
+On this 2-core container the overlapped worker threads contend with XLA's
+spinning pool, so the modes land close; on real two-tier hardware
+``device`` is the intended production mode (DESIGN.md). The planner section
+carries the [Plan] controller µs/batch per placement (host naive/memoized,
+device per-step, device lax.scan window).
+
+The checked-in json also stores a gate-sized ``smoke`` section
+(``--with-smoke``); CI replays that sizing and fails on regressions beyond
+a generous noise threshold (``--gate BENCH_wallclock.json``).
 
     PYTHONPATH=src python -m benchmarks.wallclock [--tiny] [--check]
         [--out BENCH_wallclock.json] [--baseline before.json]
+        [--with-smoke] [--gate BENCH_wallclock.json]
 """
 from __future__ import annotations
 
@@ -97,7 +106,24 @@ def _features() -> Dict[str, bool]:
         "fused": "fused_train_fn" in pipe_params,
         "memoize": "memoize" in plan_params,
         "stage_times": "record_stage_times" in pipe_params,
+        "planner": "planner" in pipe_params,
     }
+
+
+def _modes_for(design: str) -> tuple:
+    """Measured mode axis per design. ``device`` = overlapped executor +
+    fused dispatch + planner="device" — the all-in fast path; it only runs
+    when the code base has the device planner (feature detection keeps the
+    harness able to measure older checkouts)."""
+    if design == "scratchpipe":
+        modes = ("sync", "fast", "device")
+    elif design in ("strawman", "sharded"):
+        modes = ("fast", "device")
+    else:
+        modes = ("fast",)
+    if not _features()["planner"]:
+        modes = tuple(m for m in modes if m != "device")
+    return modes
 
 
 # ---- workloads -------------------------------------------------------------
@@ -158,18 +184,22 @@ def build_runtime(design: str, mode: str, group: TableGroup, host, trainer,
     if design in ("scratchpipe", "strawman"):
         kw = {"num_slots": slots}
         if feats["executor"]:
-            kw["executor"] = "overlapped" if mode == "fast" else "sync"
-        if feats["fused"] and mode == "fast":
+            kw["executor"] = "sync" if mode == "sync" else "overlapped"
+        if feats["fused"] and mode in ("fast", "device"):
             kw["fused_train_fn"] = trainer.fused_train_fn
         if feats["stage_times"]:
             kw["record_stage_times"] = True
+        if feats["planner"] and mode == "device":
+            kw["planner"] = "device"
         return make_runtime(design, host, trainer.train_fn, **kw)
     if design == "sharded":
         kw = {"num_slots": slots, "table_group": group}
         if feats["executor"]:
-            kw["executor"] = "overlapped" if mode == "fast" else "sync"
+            kw["executor"] = "sync" if mode == "sync" else "overlapped"
         if feats["stage_times"]:
             kw["record_stage_times"] = True
+        if feats["planner"] and mode == "device":
+            kw["planner"] = "device"
         return make_runtime(
             design, host, _sharded_train_fn(group.num_tables), **kw
         )
@@ -290,7 +320,67 @@ def measure_planner(scenario: str, steps: int, memoize: bool) -> dict:
     elapsed = time.perf_counter() - t0
     return {
         "scenario": scenario,
+        "placement": "host",
         "memoize": memo_effective,
+        "steps": steps,
+        "us_per_batch": round(elapsed / steps * 1e6, 1),
+    }
+
+
+def measure_planner_device(scenario: str, steps: int, scan: bool) -> dict:
+    """Device-resident [Plan] µs/batch. ``scan=False`` drives DevicePlanner
+    exactly like the pipeline does — one plan() per cycle including the
+    host-facing miss/evict sync. ``scan=True`` plans the whole window in ONE
+    ``plan_window`` (lax.scan) dispatch — the amortized cost when the
+    controller batches the look-ahead window on-device. Steady-state cost:
+    the first (compiling) pass runs outside the timed window."""
+    import jax as _jax
+    import jax.numpy as jnp
+
+    from repro.core.plan_jax import DevicePlanner, init_state, plan_window
+
+    cfg = bench_cfg()
+    group = TableGroup.from_config(cfg)
+    items = make_batches(scenario, group, steps + 2)
+    ids_list = [np.asarray(ids) for ids, _ in items]
+    rows = group.total_rows
+    slots = max(1024, int(rows * CACHE_FRAC))
+    if scan:
+        flat = np.stack(
+            [ids_list[i].ravel().astype(np.int32) for i in range(steps)]
+        )
+        fut = np.stack(
+            [
+                np.concatenate(
+                    [ids_list[i + 1].ravel(), ids_list[i + 2].ravel()]
+                ).astype(np.int32)
+                for i in range(steps)
+            ]
+        )
+        def run_once():
+            st, outs = plan_window(
+                init_state(rows, slots), jnp.asarray(flat), jnp.asarray(fut),
+                past_window=3,
+            )
+            _jax.block_until_ready(outs["miss_ids"])
+        run_once()  # compile
+        t0 = time.perf_counter()
+        run_once()
+        elapsed = time.perf_counter() - t0
+    else:
+        def run_once():
+            planner = DevicePlanner(rows, slots, past_window=3, future_window=2)
+            for i in range(steps):
+                r = planner.plan(ids_list[i], [ids_list[i + 1], ids_list[i + 2]])
+                r.miss_ids  # the host-facing sync the pipeline pays
+        run_once()  # compile
+        t0 = time.perf_counter()
+        run_once()
+        elapsed = time.perf_counter() - t0
+    return {
+        "scenario": scenario,
+        "placement": "device",
+        "mode": "scan" if scan else "step",
         "steps": steps,
         "us_per_batch": round(elapsed / steps * 1e6, 1),
     }
@@ -321,12 +411,11 @@ def run_suite(warmup: int, steps: int, planner_steps: int) -> dict:
     runs: List[dict] = []
     for scenario in SCENARIOS:
         for design in DESIGNS:
-            modes = ("sync", "fast") if design == "scratchpipe" else ("fast",)
-            for mode in modes:
+            for mode in _modes_for(design):
                 cell = _measure_cell_isolated(design, scenario, mode, warmup, steps)
                 runs.append(cell)
                 print(
-                    f"{design:<12} {scenario:<12} {mode:<5} "
+                    f"{design:<12} {scenario:<12} {mode:<6} "
                     f"{cell['steps_per_s']:>8.2f} steps/s  "
                     f"{cell['ms_per_step']:>8.2f} ms/step  "
                     f"hit={cell['hit_rate']:.3f}",
@@ -338,10 +427,20 @@ def run_suite(warmup: int, steps: int, planner_steps: int) -> dict:
             cell = measure_planner(scenario, planner_steps, memoize)
             planner.append(cell)
             print(
-                f"planner      {scenario:<12} memoize={str(cell['memoize']):<5} "
+                f"planner      {scenario:<12} host  memoize="
+                f"{str(cell['memoize']):<5} "
                 f"{cell['us_per_batch']:>8.1f} us/batch",
                 flush=True,
             )
+        if _features()["planner"]:
+            for scan in (False, True):
+                cell = measure_planner_device(scenario, planner_steps, scan)
+                planner.append(cell)
+                print(
+                    f"planner      {scenario:<12} device {cell['mode']:<5} "
+                    f"{cell['us_per_batch']:>8.1f} us/batch",
+                    flush=True,
+                )
     return {
         "schema": "bench_wallclock/v1",
         "config": {
@@ -383,17 +482,87 @@ def attach_baseline(result: dict, baseline: dict) -> dict:
             )
     planner_speed = {}
     b_planner = {
-        p["scenario"]: p for p in baseline.get("planner", []) if not p["memoize"]
+        p["scenario"]: p
+        for p in baseline.get("planner", [])
+        if not p.get("memoize", False) and p.get("placement", "host") == "host"
     }
     for p in result["planner"]:
         b = b_planner.get(p["scenario"])
-        if p["memoize"] and b and p["us_per_batch"] > 0:
+        if b is None or p["us_per_batch"] <= 0:
+            continue
+        if p.get("placement", "host") == "host" and p.get("memoize"):
             planner_speed[p["scenario"]] = round(
+                b["us_per_batch"] / p["us_per_batch"], 3
+            )
+        elif p.get("placement") == "device":
+            planner_speed[f"{p['scenario']}/device_{p['mode']}"] = round(
                 b["us_per_batch"] / p["us_per_batch"], 3
             )
     result["speedup_steps_per_s"] = speedups
     result["speedup_planner"] = planner_speed
     return result
+
+
+# ---- CI perf-regression gate ------------------------------------------------
+# The checked-in BENCH_wallclock.json carries a "smoke" section recorded at
+# the gate sizing below; CI re-runs the same sizing and fails on collapses
+# beyond the noise band. Thresholds are deliberately loose — CI runners are
+# not the recording machine — so the gate catches order-of-magnitude
+# regressions (a new per-cycle sync, a per-step recompile), not single-%
+# noise.
+GATE_WARMUP, GATE_STEPS, GATE_PLANNER_STEPS = 8, 10, 20
+
+
+def _planner_key(p: dict) -> tuple:
+    return (
+        p["scenario"],
+        p.get("placement", "host"),
+        p.get("mode", "memoize" if p.get("memoize") else "naive"),
+    )
+
+
+def regression_gate(
+    result: dict, baseline: dict, min_ratio: float, planner_ratio: float = 3.0
+) -> List[str]:
+    """Compare a fresh gate-sized run against the baseline's smoke section.
+    Returns a list of regression descriptions (empty = pass)."""
+    problems: List[str] = []
+    smoke = baseline.get("smoke")
+    if not smoke:
+        return [
+            "baseline has no 'smoke' section — regenerate BENCH_wallclock.json "
+            "with --with-smoke"
+        ]
+    fresh = result
+    cfg = result.get("config", {})
+    if (cfg.get("warmup"), cfg.get("steps")) != (GATE_WARMUP, GATE_STEPS):
+        fresh = result.get("smoke")
+        if not fresh:
+            return ["gate needs a run at gate sizing (--tiny or --with-smoke)"]
+    before = {_cell_key(c): c for c in smoke.get("runs", [])}
+    for c in fresh.get("runs", []):
+        b = before.get(_cell_key(c))
+        if not b or b["steps_per_s"] <= 0:
+            continue
+        ratio = c["steps_per_s"] / b["steps_per_s"]
+        if ratio < min_ratio:
+            problems.append(
+                f"{'/'.join(_cell_key(c))}: {c['steps_per_s']:.2f} steps/s vs "
+                f"baseline {b['steps_per_s']:.2f} (x{ratio:.2f} < {min_ratio})"
+            )
+    b_planner = {_planner_key(p): p for p in smoke.get("planner", [])}
+    for p in fresh.get("planner", []):
+        b = b_planner.get(_planner_key(p))
+        if not b or b["us_per_batch"] <= 0:
+            continue
+        ratio = p["us_per_batch"] / b["us_per_batch"]
+        if ratio > planner_ratio:
+            problems.append(
+                f"planner {'/'.join(str(x) for x in _planner_key(p))}: "
+                f"{p['us_per_batch']:.1f} us/batch vs baseline "
+                f"{b['us_per_batch']:.1f} (x{ratio:.2f} > {planner_ratio})"
+            )
+    return problems
 
 
 def check(result: dict) -> List[str]:
@@ -443,11 +612,36 @@ def main():
         help="previous BENCH_wallclock.json to merge as the 'before' column",
     )
     ap.add_argument("--check", action="store_true")
+    ap.add_argument(
+        "--with-smoke",
+        action="store_true",
+        help="also run the gate-sized smoke suite and store it under "
+        "'smoke' (the section --gate compares CI runs against)",
+    )
+    ap.add_argument(
+        "--gate",
+        default=None,
+        metavar="BASELINE.json",
+        help="CI perf-regression gate: compare this run (at gate sizing) "
+        "against the baseline's 'smoke' section and fail on regressions "
+        "beyond the noise threshold",
+    )
+    ap.add_argument(
+        "--gate-ratio",
+        type=float,
+        default=0.35,
+        help="minimum fresh/baseline steps_per_s ratio before the gate "
+        "fails (loose: CI machines differ from the recording machine)",
+    )
     args = ap.parse_args()
-    warmup = args.warmup if args.warmup is not None else (8 if args.tiny else 40)
-    steps = args.steps if args.steps is not None else (10 if args.tiny else 80)
+    warmup = args.warmup if args.warmup is not None else (
+        GATE_WARMUP if args.tiny else 40
+    )
+    steps = args.steps if args.steps is not None else (
+        GATE_STEPS if args.tiny else 80
+    )
     planner_steps = args.planner_steps if args.planner_steps is not None else (
-        20 if args.tiny else 200
+        GATE_PLANNER_STEPS if args.tiny else 200
     )
     if args.cell is not None:
         design, scenario, mode = args.cell
@@ -455,19 +649,42 @@ def main():
         print("CELL_RESULT " + json.dumps(cell))
         return
     result = run_suite(warmup, steps, planner_steps)
+    if args.with_smoke:
+        if (warmup, steps) == (GATE_WARMUP, GATE_STEPS):
+            # already at gate sizing: the run IS the smoke section
+            result["smoke"] = {
+                k: result[k] for k in ("config", "runs", "planner")
+            }
+        else:
+            print("--- smoke section (gate sizing) ---", flush=True)
+            result["smoke"] = run_suite(
+                GATE_WARMUP, GATE_STEPS, GATE_PLANNER_STEPS
+            )
     if args.baseline:
         with open(args.baseline) as f:
             result = attach_baseline(result, json.load(f))
     with open(args.out, "w") as f:
         json.dump(result, f, indent=1)
     print(f"wallclock,{args.out},{len(result['runs'])} cells")
+    failures = []
     if args.check:
         problems = check(result)
         for p in problems:
             print(f"  [FAIL] {p}")
-        if problems:
-            raise SystemExit(1)
-        print("  [PASS] wallclock sanity")
+        failures += problems
+        if not problems:
+            print("  [PASS] wallclock sanity")
+    if args.gate:
+        with open(args.gate) as f:
+            gate_baseline = json.load(f)
+        problems = regression_gate(result, gate_baseline, args.gate_ratio)
+        for p in problems:
+            print(f"  [FAIL][gate] {p}")
+        failures += problems
+        if not problems:
+            print(f"  [PASS] perf gate vs {args.gate}")
+    if failures:
+        raise SystemExit(1)
 
 
 if __name__ == "__main__":

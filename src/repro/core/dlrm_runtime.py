@@ -46,11 +46,16 @@ def dlrm_fill_train_step(
     """Fused [Insert]-fill + [Train]: one dispatch per pipeline cycle instead
     of two. The fill lands before the gather — exactly the split engine's
     intra-cycle order — so results are bit-identical to fill-then-train.
-    ``fill_slots`` may be pow-2 padded with out-of-bounds sentinels
-    (drop-mode scatter discards them)."""
-    storage = storage.at[fill_slots].set(
-        fill_rows.astype(storage.dtype), mode="drop"
-    )
+    ``fill_slots`` may be bucket-padded with out-of-bounds sentinels
+    (drop-mode scatter discards them).
+
+    With the device planner (``ScratchPipe(planner="device")``) ``slots`` is
+    the DEVICE-resident output of ``plan_jax.plan_step`` — the id->slot
+    translate fused into this same dispatch chain on-accelerator, so raw ids
+    (not pre-translated slots) are all that crossed the h2d link this cycle.
+    The executable is identical either way: a host-planner run feeds the
+    same-shape int32 operand from host memory."""
+    storage = sp.fill_inline(storage, fill_slots, fill_rows)
 
     def loss_fn(mlps_, bags):
         logit = dlrm.forward_from_bags(mlps_, dense, bags)

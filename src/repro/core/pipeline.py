@@ -38,9 +38,19 @@ Executors (wall-clock fast path — see DESIGN.md "Wall-clock path"):
 Dispatch discipline: empty-operand device calls are skipped outright
 (zero-miss / zero-evict cycles launch nothing), [Insert]-fill can fuse into
 the [Train] dispatch (``fused_train_fn``), and variable-length index
-operands are padded to power-of-two buckets (drop-mode scatters / sliced
-reads) so the number of distinct XLA executables stays O(log batch) instead
-of one per miss count.
+operands are padded to power-of-two buckets — or a trace-derived adaptive
+bucket set (``pad_buckets=``, see repro.traces.profiling.derive_pad_buckets)
+— via drop-mode scatters / sliced reads, so the number of distinct XLA
+executables stays O(log batch) instead of one per miss count.
+
+Planner placement (``planner=``): ``"host"`` (default) runs the numpy
+Planner on CPU; ``"device"`` keeps PlanState on-accelerator
+(repro.core.plan_jax.DevicePlanner) — raw ids are all that cross h2d each
+cycle, the dense id->slot translate feeds [Train] without ever visiting the
+host, and only the small miss/evict vectors sync back for the
+[Exchange]/host-table stages (overlapped with [Train] on the d2h worker
+under ``executor="overlapped"``). Bit-identical to the host planner
+(tests/test_device_planner.py).
 
 The runtime also keeps per-tier byte counters ([Collect]/[Insert] host bytes,
 [Exchange] PCIe bytes, [Train] HBM bytes) — these feed the calibrated
@@ -54,14 +64,16 @@ import collections
 import dataclasses
 import time
 from concurrent.futures import Future, ThreadPoolExecutor
-from typing import Any, Callable, Deque, Dict, Iterator, List, Optional, Tuple
+from typing import (
+    Any, Callable, Deque, Dict, Iterator, List, Optional, Sequence, Tuple,
+)
 
 import jax
 import numpy as np
 
 from repro.core import scratchpad as sp
 from repro.core.host_table import HostEmbeddingTable, HostTraffic
-from repro.core.plan import Planner, PlanResult
+from repro.core.plan import Planner, PlanResult, pad_index, pad_len, pad_rows
 from repro.core.runtime import register_runtime
 from repro.core.table_group import TableGroup
 
@@ -99,41 +111,12 @@ class _InFlight:
     times: Dict[str, float] = dataclasses.field(default_factory=dict)
 
 
-# Smallest padded operand length. Collapsing every small fill/evict into one
-# bucket matters more than the wasted lanes: each DISTINCT fused-train shape
-# costs a full XLA compile, and ramp-up/drain cycles otherwise produce a
-# trickle of one-off tiny sizes. 256 rows x 128 B = 32 KB of slack, dwarfed
-# by one avoided compile.
-_PAD_FLOOR = 256
-
-
-def _pad_len(n: int) -> int:
-    """Pow-2 bucket with a floor: bounds the set of device operand shapes
-    (and thus jit executables) to O(log batch) instead of one per miss
-    count."""
-    return max(_PAD_FLOOR, 1 << (n - 1).bit_length())
-
-
-def _pad_index(idx: np.ndarray, sentinel: int) -> np.ndarray:
-    """Pad an index vector to the pow-2 bucket with a positive out-of-bounds
-    sentinel (drop-mode scatters discard it; negative would WRAP in jax)."""
-    n = idx.size
-    p = _pad_len(n)
-    if p == n:
-        return idx
-    out = np.full(p, sentinel, dtype=idx.dtype)
-    out[:n] = idx
-    return out
-
-
-def _pad_rows(rows: np.ndarray) -> np.ndarray:
-    n = rows.shape[0]
-    p = _pad_len(n)
-    if p == n:
-        return rows
-    out = np.zeros((p,) + rows.shape[1:], dtype=rows.dtype)
-    out[:n] = rows
-    return out
+# Operand padding now lives in repro.core.plan (shared by the pipeline, the
+# device planner, and the static cache); these module-level aliases keep the
+# pre-refactor import surface working.
+_pad_len = pad_len
+_pad_index = pad_index
+_pad_rows = pad_rows
 
 
 class ScratchPipe:
@@ -154,15 +137,21 @@ class ScratchPipe:
         fused_train_fn: Optional[Callable] = None,
         memoize_plan: bool = True,
         record_stage_times: bool = False,
+        planner: str = "host",
+        pad_buckets: Optional[Sequence[int]] = None,
     ):
         if executor not in ("sync", "overlapped"):
             raise ValueError(f"unknown executor {executor!r}")
+        if planner not in ("host", "device"):
+            raise ValueError(f"unknown planner placement {planner!r}")
         self.host = host_table
         self.train_fn = train_fn
         self.fused_train_fn = fused_train_fn
         self.record_stage_times = record_stage_times
         self.pipelined = pipelined
         self.executor = executor
+        self.planner_placement = planner
+        self.pad_buckets = tuple(sorted(pad_buckets)) if pad_buckets else None
         self.table_group = table_group
         if not pipelined:  # straw-man (§IV-B): depth-1, no hazards possible
             past_window, future_window = 0, 0
@@ -185,16 +174,32 @@ class ScratchPipe:
             slot_ranges = table_group.slot_ranges(budgets)
         else:
             row_offsets = slot_ranges = None
-        self.planner = Planner(
-            host_table.rows,
-            num_slots,
-            past_window=past_window,
-            future_window=future_window,
-            policy=policy,
-            row_offsets=row_offsets,
-            slot_ranges=slot_ranges,
-            memoize=memoize_plan,
-        )
+        if planner == "device":
+            # [Plan] state lives on-accelerator; raw ids are what cross h2d
+            # each cycle, and the dense id->slot translate never runs on host
+            from repro.core.plan_jax import DevicePlanner
+
+            self.planner = DevicePlanner(
+                host_table.rows,
+                num_slots,
+                past_window=past_window,
+                future_window=future_window,
+                policy=policy,
+                row_offsets=row_offsets,
+                slot_ranges=slot_ranges,
+                pad_buckets=self.pad_buckets,
+            )
+        else:
+            self.planner = Planner(
+                host_table.rows,
+                num_slots,
+                past_window=past_window,
+                future_window=future_window,
+                policy=policy,
+                row_offsets=row_offsets,
+                slot_ranges=slot_ranges,
+                memoize=memoize_plan,
+            )
         import jax.numpy as jnp
 
         dt = storage_dtype or jnp.dtype(host_table.data.dtype.name)
@@ -261,6 +266,10 @@ class ScratchPipe:
     def _stage_plan(self, entry: _InFlight, lookahead: List[np.ndarray]):
         t0 = time.perf_counter()
         entry.plan = self.planner.plan(entry.ids, lookahead)
+        if self._d2h_pool is not None and hasattr(entry.plan, "start_materialize"):
+            # device planner + overlapped executor: pull the miss/evict ids
+            # back on the d2h worker so the sync overlaps [Train] dispatches
+            entry.plan.start_materialize(self._d2h_pool)
         entry.times["plan"] = time.perf_counter() - t0
 
     def _stage_collect(self, entry: _InFlight):
@@ -275,7 +284,7 @@ class ScratchPipe:
             # pad victim reads to the pow-2 bucket (slot 0 is always safe to
             # read); the d2h side slices the real rows back out
             entry.evicted_dev = sp.read(
-                self.storage, _pad_index(p.evict_slots, 0)
+                self.storage, pad_index(p.evict_slots, 0, self.pad_buckets)
             )
         self.hbm.read += p.evict_slots.size * self.host.row_bytes
         entry.times["collect"] = time.perf_counter() - t0
@@ -289,7 +298,9 @@ class ScratchPipe:
                 if entry.host_rows_f is not None
                 else entry.host_rows
             )
-            entry.fetched_dev = jax.device_put(_pad_rows(rows))  # h2d
+            entry.fetched_dev = jax.device_put(
+                pad_rows(rows, self.pad_buckets)
+            )  # h2d
         n_evict = int(p.evict_slots.size)
         if n_evict:
             if self._d2h_pool is not None:
@@ -320,7 +331,7 @@ class ScratchPipe:
         if p.fill_slots.size:
             self.storage = sp.fill(
                 self.storage,
-                _pad_index(p.fill_slots, self.num_slots),
+                pad_index(p.fill_slots, self.num_slots, self.pad_buckets),
                 entry.fetched_dev,
             )
         self.hbm.written += p.fill_slots.size * self.host.row_bytes
@@ -340,7 +351,7 @@ class ScratchPipe:
             fp = fused_entry.plan
             self.storage, aux = self.fused_train_fn(
                 self.storage,
-                _pad_index(fp.fill_slots, self.num_slots),
+                pad_index(fp.fill_slots, self.num_slots, self.pad_buckets),
                 fused_entry.fetched_dev,
                 p.slots,
                 entry.batch,
@@ -501,11 +512,13 @@ class ScratchPipe:
     def flush_to_host(self):
         """Write every cached (dirty) row back to the host table."""
         self._barrier()
-        live = np.flatnonzero(self.planner.slot_to_id >= 0)
+        # bind once: the device planner's slot_to_id is a property that
+        # performs a full per-table d2h snapshot per access
+        slot_to_id = self.planner.slot_to_id
+        live = np.flatnonzero(slot_to_id >= 0)
         if live.size:
-            ids = self.planner.slot_to_id[live]
             vals = np.asarray(sp.read(self.storage, live))
-            self.host.scatter(ids, vals)
+            self.host.scatter(slot_to_id[live], vals)
 
     # -- checkpoint/restart (paper-system fault tolerance) ----------------- #
     def state_arrays(self) -> dict:

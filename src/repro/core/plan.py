@@ -46,11 +46,104 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import Any, Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 _INT32_MAX = np.iinfo(np.int32).max
+
+# ---------------------------------------------------------------------------
+# Shared operand-padding helpers (host planner, device planner, pipeline,
+# static cache). Variable-length device operands (fill/evict indices, fetched
+# rows) are padded to a bounded set of lengths so the number of distinct XLA
+# executables stays O(log batch) instead of one per miss count. The default
+# scheme is pow-2 buckets with a floor; callers may pass an explicit
+# ``buckets`` set (see repro.traces.profiling.derive_pad_buckets — the
+# trace-derived adaptive bucket set) which is tried first, falling back to
+# pow-2 beyond its largest entry.
+# ---------------------------------------------------------------------------
+
+# Smallest padded operand length. Collapsing every small fill/evict into one
+# bucket matters more than the wasted lanes: each DISTINCT device operand
+# shape costs a full XLA compile, and ramp-up/drain cycles otherwise produce
+# a trickle of one-off tiny sizes. 256 rows x 128 B = 32 KB of slack, dwarfed
+# by one avoided compile.
+PAD_FLOOR = 256
+
+
+def pad_len(n: int, buckets: Optional[Sequence[int]] = None) -> int:
+    """Padded length for an ``n``-element device operand: the smallest
+    adaptive bucket that fits (when ``buckets`` is given), else the pow-2
+    bucket with the :data:`PAD_FLOOR` floor."""
+    if buckets:
+        for b in buckets:
+            if n <= b:
+                return int(b)
+    return max(PAD_FLOOR, 1 << max(n - 1, 0).bit_length())
+
+
+def pad_index(
+    idx: np.ndarray, sentinel: int, buckets: Optional[Sequence[int]] = None
+) -> np.ndarray:
+    """Pad an index vector to its bucket with a positive out-of-bounds
+    sentinel (drop-mode scatters discard it; negative would WRAP in jax)."""
+    n = idx.size
+    p = pad_len(n, buckets)
+    if p == n:
+        return idx
+    out = np.full(p, sentinel, dtype=idx.dtype)
+    out[:n] = idx
+    return out
+
+
+def pad_rows(rows: np.ndarray, buckets: Optional[Sequence[int]] = None) -> np.ndarray:
+    """Pad a (n, dim) row block to its bucket with zero rows."""
+    n = rows.shape[0]
+    p = pad_len(n, buckets)
+    if p == n:
+        return rows
+    out = np.zeros((p,) + rows.shape[1:], dtype=rows.dtype)
+    out[:n] = rows
+    return out
+
+
+class PinnedCache:
+    """Small LRU cache keyed on *array identity*: ``get(ref, build)`` returns
+    the cached value for the exact object ``ref``, building (and pinning
+    ``ref`` so its id() cannot be recycled) on first sight. This is the
+    memoization substrate both [Plan] controllers share — the host planner's
+    batch digests and the device planner's per-batch prepped id blocks: a
+    mini-batch travels through the look-ahead window ``future_window + 1``
+    times, and the per-batch preprocessing should run once, not once per
+    sighting. Callers must not mutate a batch array in place after passing
+    it (every stream in ``repro.data``/``repro.traces`` hands over fresh
+    arrays)."""
+
+    __slots__ = ("_keep", "_entries")
+
+    def __init__(self, keep: int):
+        self._keep = int(keep)
+        self._entries: "collections.OrderedDict[int, Tuple[Any, Any]]" = (
+            collections.OrderedDict()
+        )
+
+    def get(self, ref: Any, build: Callable[[Any], Any]) -> Any:
+        key = id(ref)
+        hit = self._entries.get(key)
+        if hit is not None and hit[0] is ref:
+            self._entries.move_to_end(key)
+            return hit[1]
+        val = build(ref)
+        self._entries[key] = (ref, val)
+        while len(self._entries) > self._keep:
+            self._entries.popitem(last=False)
+        return val
+
+    def clear(self) -> None:
+        self._entries.clear()
+
+    def __len__(self) -> int:
+        return len(self._entries)
 
 
 @dataclasses.dataclass
@@ -92,13 +185,12 @@ def _select_victims(vals: np.ndarray, cand: np.ndarray, n_evict: int) -> np.ndar
 class _BatchDigest:
     """Memoized per-batch [Plan] inputs: int32 flat ids, their uniques, and
     the HitMap probe of the uniques (tagged with the HitMap version it was
-    taken at). ``ref`` pins the source array so its id() cannot be reused
-    while the digest is cached."""
+    taken at). Cached in a :class:`PinnedCache`, which pins the source array
+    so its id() cannot be reused while the digest is live."""
 
-    __slots__ = ("ref", "flat", "uniq", "probe", "probe_version")
+    __slots__ = ("flat", "uniq", "probe", "probe_version")
 
-    def __init__(self, ref, flat, uniq):
-        self.ref = ref
+    def __init__(self, flat, uniq):
         self.flat = flat
         self.uniq = uniq
         self.probe = None
@@ -189,10 +281,7 @@ class Planner:
 
         # zero-redundancy machinery: digest cache + preallocated scratch
         self._hitmap_version = 0
-        self._digests: "collections.OrderedDict[int, _BatchDigest]" = (
-            collections.OrderedDict()
-        )
-        self._digest_keep = 4 * (self.future_window + 2)
+        self._digests = PinnedCache(4 * (self.future_window + 2))
         self._eligible_buf = np.empty(self.num_slots, dtype=bool)
         self._occupied_buf = np.empty(self.num_slots, dtype=bool)
 
@@ -246,19 +335,14 @@ class Planner:
             )
 
     # -- plan digests --------------------------------------------------------
+    @staticmethod
+    def _build_digest(ids) -> _BatchDigest:
+        flat = np.asarray(ids, dtype=np.int32).ravel()
+        return _BatchDigest(flat, np.unique(flat))
+
     def _digest(self, ids) -> _BatchDigest:
         """Digest of one batch object, memoized on array identity."""
-        key = id(ids)
-        d = self._digests.get(key)
-        if d is not None and d.ref is ids:
-            self._digests.move_to_end(key)
-            return d
-        flat = np.asarray(ids, dtype=np.int32).ravel()
-        d = _BatchDigest(ids, flat, np.unique(flat))
-        self._digests[key] = d
-        while len(self._digests) > self._digest_keep:
-            self._digests.popitem(last=False)
-        return d
+        return self._digests.get(ids, self._build_digest)
 
     def _probe(self, d: _BatchDigest) -> np.ndarray:
         """HitMap lookup of a digest's uniques, reused while the HitMap is

@@ -19,10 +19,13 @@ step with unused allocations rolled back — the standard fixed-shape trick.
 from __future__ import annotations
 
 import functools
-from typing import List, NamedTuple, Optional, Sequence, Tuple
+from typing import Any, Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+from repro.core.plan import PAD_FLOOR, PinnedCache, pad_len
 
 
 class PlanState(NamedTuple):
@@ -106,7 +109,9 @@ def plan_step(
     n_fresh = jnp.minimum(n_miss, n_fresh_avail)
     occupied = state.slot_to_id >= 0
     eligible = (hold == 0) & ~future_held & occupied
-    # LRU priority: eligible sorted by last_use; ineligible at +inf
+    # LRU priority: eligible sorted by last_use; ineligible at +inf.
+    # jnp.argsort is stable, so ties in last_use resolve by slot index —
+    # exactly the host planner's stable-argsort victim order.
     prio = jnp.where(eligible, last_use, jnp.iinfo(jnp.int32).max)
     victim_order = jnp.argsort(prio)  # (slots,)
     n_evict = n_miss - n_fresh
@@ -162,8 +167,35 @@ def plan_step(
         "n_hits": jnp.sum(hit.astype(jnp.int32)),
         "n_unique": jnp.sum(uniq_valid.astype(jnp.int32)),
         "ok": ok,
+        # overflow diagnostics (host side surfaces these in the same error
+        # the host Planner raises when a cycle cannot find enough victims)
+        "n_evict": jnp.maximum(n_evict, 0),
+        "n_eligible": n_eligible,
     }
     return new_state, outputs
+
+
+@functools.partial(jax.jit, static_argnames=("past_window",))
+def plan_window(
+    state: PlanState,
+    ids_steps: jax.Array,  # (W, n) int32, -1 padded per step
+    future_steps: jax.Array,  # (W, m) int32, -1 padded per step
+    *,
+    past_window: int = 3,
+) -> Tuple[PlanState, dict]:
+    """Batched multi-step [Plan]: run ``W`` consecutive cycles in ONE device
+    dispatch via ``lax.scan`` — the look-ahead window (or a whole trace
+    prefix) planned without returning to the host between cycles. Outputs
+    are the per-step :func:`plan_step` dicts stacked on a leading ``W`` axis;
+    equivalence with ``W`` sequential ``plan_step`` calls is asserted in
+    tests/test_plan_jax.py."""
+
+    def body(st, xs):
+        ids, fut = xs
+        st, out = plan_step(st, ids, fut, past_window=past_window)
+        return st, out
+
+    return jax.lax.scan(body, state, (ids_steps, future_steps))
 
 
 # ---------------------------------------------------------------------------
@@ -192,10 +224,12 @@ def plan_group_step(
     *,
     past_window: int = 3,
 ) -> Tuple[List[PlanState], List[dict]]:
-    """One fused [Plan] cycle over every table. Returns per-table outputs
-    with ``slots``/``fill_slots`` offset by the table's slot-range start and
-    ``miss_ids``/``evict_ids`` offset into the fused row space (-1 padding
-    preserved)."""
+    """One fused [Plan] cycle over every table. ``group`` is a TableGroup or
+    any sequence of fused row offsets (len num_tables + 1). Returns
+    per-table outputs with ``slots``/``fill_slots`` offset by the table's
+    slot-range start and ``miss_ids``/``evict_ids`` offset into the fused
+    row space (-1 padding preserved)."""
+    offsets = getattr(group, "offsets", group)
     slot_lo = 0
     new_states, outs = [], []
     for t, state in enumerate(states):
@@ -205,7 +239,7 @@ def plan_group_step(
             jnp.asarray(per_table_future[t], jnp.int32),
             past_window=past_window,
         )
-        row_off = jnp.int32(group.offsets[t])
+        row_off = jnp.int32(offsets[t])
         off = {
             "slots": jnp.where(out["slots"] >= 0, out["slots"] + slot_lo, -1),
             "fill_slots": jnp.where(
@@ -220,8 +254,380 @@ def plan_group_step(
             "n_hits": out["n_hits"],
             "n_unique": out["n_unique"],
             "ok": out["ok"],
+            "n_evict": out["n_evict"],
+            "n_eligible": out["n_eligible"],
         }
         new_states.append(st)
         outs.append(off)
         slot_lo += state.slot_to_id.shape[0]
     return new_states, outs
+
+
+# ---------------------------------------------------------------------------
+# Device-resident [Plan] runtime wrapper: the drop-in Planner replacement the
+# pipeline selects with ``planner="device"``. PlanState lives on-accelerator;
+# each plan() uploads RAW ids (h2d) and runs plan_step / plan_group_step on
+# device — the dense id->slot translate never touches the host and the
+# translated ``slots`` operand never crosses the PCIe link. Only the small
+# miss/evict/fill vectors sync back (lazily, overlappable with [Train]) for
+# the [Collect]/[Insert] host-table halves.
+# ---------------------------------------------------------------------------
+
+
+_STATE_FIELDS = ("hitmap", "slot_to_id", "hold", "last_use", "free_ptr", "cycle")
+
+
+def state_to_host(state: PlanState) -> Dict[str, np.ndarray]:
+    """One d2h snapshot of a PlanState (checkpointing)."""
+    host = jax.device_get(state)
+    return {f: np.asarray(getattr(host, f)) for f in _STATE_FIELDS}
+
+
+def state_from_host(arrays: Dict[str, np.ndarray]) -> PlanState:
+    """Rebuild a device-resident PlanState from a host snapshot."""
+    dtypes = dict(
+        hitmap=jnp.int32, slot_to_id=jnp.int32, hold=jnp.uint32,
+        last_use=jnp.int32, free_ptr=jnp.int32, cycle=jnp.int32,
+    )
+    return PlanState(
+        **{
+            f: jax.device_put(jnp.asarray(arrays[f], dtypes[f]))
+            for f in _STATE_FIELDS
+        }
+    )
+
+
+class DevicePlanResult:
+    """[Plan] outputs of one cycle from the device planner.
+
+    ``slots`` is the DEVICE-resident dense id->slot translation (same shape
+    as the input ids) — the [Train]/fused dispatch consumes it directly, so
+    no slot operand is ever h2d'd. The host-facing fields (``miss_ids``,
+    ``fill_slots``, ``evict_slots``, ``evict_ids``, counts) materialize
+    lazily on first access via ONE d2h of the fixed-shape outputs —
+    ``start_materialize`` moves that sync onto a background worker so it
+    overlaps the [Train] dispatch (the PR-4 executor pattern). Field order
+    and dtypes are element-for-element identical to the host
+    :class:`~repro.core.plan.PlanResult`."""
+
+    __slots__ = (
+        "step", "slots", "_payload", "_slot_sizes", "_num_slots",
+        "_window_desc", "_future", "_host", "hits_by_table",
+        "misses_by_table", "miss_ids", "fill_slots", "evict_slots",
+        "evict_ids", "n_unique", "n_hits",
+    )
+
+    def __init__(self, step, slots, payload, slot_sizes, num_slots, window_desc):
+        self.step = step
+        self.slots = slots  # device array, input-ids shape
+        self._payload = payload  # per-table device dicts (no dense slots)
+        self._slot_sizes = slot_sizes  # per-table budget (error messages)
+        self._num_slots = num_slots
+        self._window_desc = window_desc  # "past+1+future" (error messages)
+        self._future = None
+        self._host = False
+
+    def start_materialize(self, pool) -> None:
+        """Kick the d2h of the host-facing outputs onto ``pool`` (the
+        pipeline's d2h worker) so it overlaps [Train]."""
+        if not self._host and self._future is None:
+            self._future = pool.submit(jax.device_get, self._payload)
+
+    def _materialize(self):
+        if self._host:
+            return
+        outs = (
+            self._future.result()
+            if self._future is not None
+            else jax.device_get(self._payload)
+        )
+        self._future = None
+        miss_p, fill_p, ev_slot_p, ev_id_p = [], [], [], []
+        hits_t, uniq_t = [], []
+        for t, o in enumerate(outs):
+            if not bool(o["ok"]):
+                # same failure, same words as the host Planner's raise
+                raise RuntimeError(
+                    f"scratchpad too small: need {int(o['n_evict'])} victims, "
+                    f"only {int(o['n_eligible'])} evictable (table {t}: "
+                    f"slots={self._slot_sizes[t]} of {self._num_slots}, "
+                    f"window={self._window_desc}); size the Storage array "
+                    "for the worst-case window working set (paper §VI-D)."
+                )
+            miss = np.asarray(o["miss_ids"])
+            fill = np.asarray(o["fill_slots"])
+            ev = np.asarray(o["evict_ids"])
+            m = miss >= 0
+            miss_p.append(miss[m])
+            fill_p.append(fill[m])
+            vm = ev >= 0
+            ev_id_p.append(ev[vm])
+            ev_slot_p.append(fill[vm])  # a victim's fill slot IS its slot
+            hits_t.append(int(o["n_hits"]))
+            uniq_t.append(int(o["n_unique"]))
+        self.miss_ids = np.concatenate(miss_p) if miss_p else np.empty(0, np.int32)
+        self.fill_slots = np.concatenate(fill_p) if fill_p else np.empty(0, np.int32)
+        self.evict_slots = (
+            np.concatenate(ev_slot_p) if ev_slot_p else np.empty(0, np.int32)
+        )
+        self.evict_ids = (
+            np.concatenate(ev_id_p) if ev_id_p else np.empty(0, np.int32)
+        )
+        self.n_hits = sum(hits_t)
+        self.n_unique = sum(uniq_t)
+        if len(outs) > 1:
+            self.hits_by_table = np.asarray(hits_t, np.int64)
+            self.misses_by_table = np.asarray(
+                [u - h for u, h in zip(uniq_t, hits_t)], np.int64
+            )
+        else:
+            self.hits_by_table = self.misses_by_table = None
+        self._host = True
+
+    def __getattr__(self, name):
+        # first touch of any host-facing field triggers the one d2h sync
+        if name in (
+            "miss_ids", "fill_slots", "evict_slots", "evict_ids",
+            "n_unique", "n_hits", "hits_by_table", "misses_by_table",
+        ):
+            self._materialize()
+            return object.__getattribute__(self, name)
+        raise AttributeError(name)
+
+
+class DevicePlanner:
+    """Device-resident [Plan] controller with the host Planner's interface.
+
+    Bit-identical to ``Planner(policy="lru")`` on every output (asserted in
+    tests/test_device_planner.py); restrictions vs the host controller:
+
+    * LRU only (the jittable transition has no RNG / use-count path);
+    * fixed-shape dispatches: ids are padded to a monotone per-planner
+      bucket, so a stream of varying batch sizes compiles O(1) executables;
+    * multi-table (``slot_ranges``) planning requires the standard
+      ``(B, num_tables, L)`` id layout where ``ids[:, t, :]`` holds table
+      t's global ids — every generator/trace in this repo emits it (checked
+      on the first batch).
+    """
+
+    def __init__(
+        self,
+        num_rows: int,
+        num_slots: int,
+        *,
+        past_window: int = 3,
+        future_window: int = 2,
+        policy: str = "lru",
+        row_offsets: Optional[Sequence[int]] = None,
+        slot_ranges: Optional[Sequence[Tuple[int, int]]] = None,
+        pad_buckets: Optional[Sequence[int]] = None,
+    ):
+        if policy != "lru":
+            raise ValueError(
+                f"device planner supports policy='lru' only (got {policy!r}); "
+                "use planner='host' for random/lfu replacement"
+            )
+        if int(num_rows) > np.iinfo(np.int32).max or int(num_slots) > np.iinfo(
+            np.int32
+        ).max:
+            raise ValueError(
+                f"int32 index path: num_rows={num_rows} / num_slots="
+                f"{num_slots} must fit in int32 (< 2**31)"
+            )
+        self.num_rows = int(num_rows)
+        self.num_slots = int(num_slots)
+        self.past_window = int(past_window)
+        self.future_window = int(future_window)
+        self.policy = policy
+        self.row_offsets = (
+            np.asarray(row_offsets, dtype=np.int64)
+            if row_offsets is not None
+            else np.array([0, self.num_rows], dtype=np.int64)
+        )
+        self.slot_ranges = (
+            [(int(lo), int(hi)) for lo, hi in slot_ranges]
+            if slot_ranges is not None
+            else [(0, self.num_slots)]
+        )
+        self.num_tables = len(self.slot_ranges)
+        if len(self.row_offsets) != self.num_tables + 1:
+            raise ValueError(
+                f"row_offsets has {len(self.row_offsets) - 1} tables, "
+                f"slot_ranges has {self.num_tables}"
+            )
+        self._budgets = [hi - lo for lo, hi in self.slot_ranges]
+        self._table_rows = np.diff(self.row_offsets)
+        self._states: List[PlanState] = [
+            init_state(int(r), int(b))
+            for r, b in zip(self._table_rows, self._budgets)
+        ]
+        self._cycle = 0  # host-side mirror of the device cycle counters
+        self._pad_buckets = tuple(sorted(pad_buckets)) if pad_buckets else None
+        # monotone pad lengths: one warm executable per planner even when
+        # the stream's batch sizes vary (sharded bucketing, drain cycles)
+        self._ids_pad = 0
+        self._fut_pad = 0
+        self._validated = False
+        self._prep = PinnedCache(4 * (self.future_window + 2))
+        self._empty_future = jnp.full((PAD_FLOOR,), -1, jnp.int32)
+
+    # -- per-batch host prep (id()-memoized across look-ahead sightings) ----
+    def _prep_single(self, ids) -> np.ndarray:
+        flat = np.asarray(ids, dtype=np.int32).ravel()
+        if not self._validated and flat.size:
+            if int(flat.min()) < 0 or int(flat.max()) >= self.num_rows:
+                raise ValueError(
+                    f"ids outside [0, {self.num_rows}) — the device planner "
+                    "gathers with clamped indices and would diverge silently"
+                )
+        return flat
+
+    def _prep_tables(self, ids) -> np.ndarray:
+        arr = np.asarray(ids, dtype=np.int64)
+        T = self.num_tables
+        if arr.ndim != 3 or arr.shape[1] != T:
+            raise ValueError(
+                f"device planner with {T} tables needs (B, {T}, L) ids "
+                f"(got shape {arr.shape}); use planner='host' for "
+                "non-standard id layouts"
+            )
+        loc = (arr - self.row_offsets[:-1][None, :, None]).transpose(1, 0, 2)
+        loc = np.ascontiguousarray(loc.reshape(T, -1)).astype(np.int32)
+        if not self._validated:
+            for t in range(T):
+                if loc[t].size and (
+                    int(loc[t].min()) < 0
+                    or int(loc[t].max()) >= int(self._table_rows[t])
+                ):
+                    raise ValueError(
+                        f"ids[:, {t}, :] outside table {t}'s row range — the "
+                        "device planner requires the standard (B, T, L) "
+                        "layout; use planner='host' otherwise"
+                    )
+        return loc
+
+    def _pad_to(self, n: int, attr: str) -> int:
+        p = pad_len(n, self._pad_buckets)
+        p = max(p, getattr(self, attr))
+        setattr(self, attr, p)
+        return p
+
+    # -- the [Plan] cycle ----------------------------------------------------
+    def plan(self, ids, future_batches=None) -> DevicePlanResult:
+        self._cycle += 1
+        window_desc = f"{self.past_window}+1+{self.future_window}"
+        futures = (
+            list(future_batches[: self.future_window])
+            if self.future_window and future_batches
+            else []
+        )
+        if self.num_tables == 1:
+            flat = self._prep.get(ids, self._prep_single)
+            self._validated = True
+            n = flat.size
+            p = self._pad_to(n, "_ids_pad")
+            up = np.full(p, -1, np.int32)
+            up[:n] = flat
+            dev_ids = jax.device_put(up)  # raw ids h2d — the only operand
+            if futures:
+                parts = [self._prep.get(fb, self._prep_single) for fb in futures]
+                total = sum(x.size for x in parts)
+                fp = self._pad_to(total, "_fut_pad")
+                fut = np.full(fp, -1, np.int32)
+                o = 0
+                for x in parts:
+                    fut[o : o + x.size] = x
+                    o += x.size
+                dev_fut = jax.device_put(fut)
+            else:
+                dev_fut = self._empty_future
+            self._states[0], out = plan_step(
+                self._states[0], dev_ids, dev_fut, past_window=self.past_window
+            )
+            shape = np.asarray(ids).shape
+            slots = out["slots"][:n].reshape(shape)
+            payload = [{k: out[k] for k in out if k != "slots"}]
+        else:
+            blk = self._prep.get(ids, self._prep_tables)
+            self._validated = True
+            T, width = blk.shape
+            p = self._pad_to(width, "_ids_pad")
+            if p != width:  # monotone bucket: O(1) executables per table
+                up = np.full((T, p), -1, np.int32)
+                up[:, :width] = blk
+            else:
+                up = blk
+            dev_blk = jax.device_put(up)
+            if futures:
+                fparts = [self._prep.get(fb, self._prep_tables) for fb in futures]
+                total = sum(f.shape[1] for f in fparts)
+                fp = self._pad_to(total, "_fut_pad")
+                fut = np.full((T, fp), -1, np.int32)
+                o = 0
+                for f in fparts:
+                    fut[:, o : o + f.shape[1]] = f
+                    o += f.shape[1]
+                dev_fut_blk = jax.device_put(fut)
+                per_fut = [dev_fut_blk[t] for t in range(T)]
+            else:
+                per_fut = [self._empty_future] * T
+            self._states, outs = plan_group_step(
+                self._states,
+                self.row_offsets,
+                [dev_blk[t] for t in range(T)],
+                per_fut,
+                past_window=self.past_window,
+            )
+            B, _, L = np.asarray(ids).shape
+            slots = jnp.stack(
+                [o["slots"][:width].reshape(B, L) for o in outs], axis=1
+            )  # (B, T, L) global slots, device-resident
+            payload = [{k: o[k] for k in o if k != "slots"} for o in outs]
+        return DevicePlanResult(
+            self._cycle, slots, payload, self._budgets, self.num_slots,
+            window_desc,
+        )
+
+    # -- stats / state the runtimes read ------------------------------------
+    @property
+    def occupancy(self) -> int:
+        return int(sum(int(jnp.sum(s.slot_to_id >= 0)) for s in self._states))
+
+    @property
+    def slot_to_id(self) -> np.ndarray:
+        """Fused-coordinate slot->row map (one d2h per call): slot indices
+        global, row ids global — what ``flush_to_host`` walks."""
+        out = np.full(self.num_slots, -1, np.int32)
+        for t, st in enumerate(self._states):
+            lo, hi = self.slot_ranges[t]
+            s2i = np.asarray(st.slot_to_id)
+            m = s2i >= 0
+            seg = out[lo:hi]
+            seg[m] = (s2i[m].astype(np.int64) + self.row_offsets[t]).astype(
+                np.int32
+            )
+        return out
+
+    # -- checkpoint / resume -------------------------------------------------
+    def state_dict(self) -> Dict[str, np.ndarray]:
+        out: Dict[str, np.ndarray] = {}
+        for t, st in enumerate(self._states):
+            for k, v in state_to_host(st).items():
+                out[f"t{t}_{k}"] = v
+        return out
+
+    def load_state_dict(self, st: Dict[str, np.ndarray]) -> None:
+        states = []
+        for t in range(self.num_tables):
+            try:
+                arrays = {f: st[f"t{t}_{f}"] for f in _STATE_FIELDS}
+            except KeyError as e:
+                raise ValueError(
+                    "incompatible device-planner checkpoint: missing "
+                    f"{e.args[0]!r} (host-planner checkpoints do not load "
+                    "into planner='device' runs and vice versa)"
+                ) from None
+            states.append(state_from_host(arrays))
+        self._states = states
+        self._cycle = int(np.asarray(st["t0_cycle"]))
+        self._prep.clear()

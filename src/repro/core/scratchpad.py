@@ -17,13 +17,20 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def fill_inline(storage: jax.Array, slots: jax.Array, rows: jax.Array) -> jax.Array:
+    """[Insert]-fill body, for use INSIDE a larger jitted program (the fused
+    fill+train dispatch traces this directly instead of nesting a jit call).
+    ``slots`` may be bucket-padded with positive out-of-bounds sentinels
+    (drop-mode discards them). Negative indices would WRAP in jax — pad with
+    num_slots, never -1."""
+    return storage.at[slots].set(rows.astype(storage.dtype), mode="drop")
+
+
 @functools.partial(jax.jit, donate_argnums=0)
 def fill(storage: jax.Array, slots: jax.Array, rows: jax.Array) -> jax.Array:
-    """[Insert]: write fetched rows into their allocated slots. ``slots``
-    may be pow-2 padded with positive out-of-bounds sentinels (the pipeline
-    bounds its set of dispatch shapes that way); drop-mode discards them.
-    Negative indices would WRAP in jax — pad with num_slots, never -1."""
-    return storage.at[slots].set(rows.astype(storage.dtype), mode="drop")
+    """[Insert]: write fetched rows into their allocated slots (standalone
+    donated dispatch; see :func:`fill_inline` for the padding contract)."""
+    return fill_inline(storage, slots, rows)
 
 
 @jax.jit

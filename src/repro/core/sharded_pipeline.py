@@ -44,6 +44,8 @@ class ShardedScratchPipe:
         boundaries: Optional[Sequence[int]] = None,
         executor: str = "sync",
         record_stage_times: bool = False,
+        planner: str = "host",
+        pad_buckets: Optional[Sequence[int]] = None,
     ):
         """``train_fn(storages, slots_per_shard, batch)`` ->
         (new_storages, aux). ``num_slots`` is the per-shard scratchpad size
@@ -101,6 +103,12 @@ class ShardedScratchPipe:
                     policy=policy,
                     executor=executor,
                     record_stage_times=record_stage_times,
+                    # planner="device": one device-resident PlanState per
+                    # shard manager — per-shard id streams are variable
+                    # length, which the device planner absorbs via its
+                    # monotone pad buckets
+                    planner=planner,
+                    pad_buckets=pad_buckets,
                 )
             )
 

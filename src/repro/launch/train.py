@@ -97,6 +97,7 @@ def train_dlrm(args):
         TraceReader,
         TraceRecorder,
         TraceReplayStream,
+        derive_pad_buckets,
         hot_ids_from_trace,
         profile_hot_ids,
         scenario_batches,
@@ -202,6 +203,19 @@ def train_dlrm(args):
         kw.update(past_window=cfg.past_window, future_window=cfg.future_window)
     if args.runtime in ("scratchpipe", "strawman", "sharded"):
         kw["executor"] = args.executor
+        kw["planner"] = args.planner
+        if args.adaptive_pad:
+            # trace-derived fill/evict pad buckets (vs the pow-2/256 default)
+            pw, fw = (
+                (cfg.past_window, cfg.future_window)
+                if args.runtime == "scratchpipe"
+                else (0, 0)
+            )
+            kw["pad_buckets"] = derive_pad_buckets(
+                reader, slots, past_window=pw, future_window=fw,
+                profile_batches=min(args.steps, 512),
+            )
+            print(f"adaptive pad buckets: {kw['pad_buckets']}")
     if args.runtime in ("scratchpipe", "strawman") and args.fused:
         kw["fused_train_fn"] = trainer.fused_train_fn
     if args.runtime == "static":
@@ -289,6 +303,19 @@ def main():
         "per cycle; bit-identical to the split path)",
     )
     ap.add_argument(
+        "--planner",
+        choices=("host", "device"),
+        default="host",
+        help="[Plan] placement: 'device' keeps PlanState on-accelerator and "
+        "ships raw ids instead of pre-translated slots (bit-identical)",
+    )
+    ap.add_argument(
+        "--adaptive-pad",
+        action="store_true",
+        help="derive the fill/evict pad-bucket set from the --trace's "
+        "miss-count distribution instead of the pow-2/256 default",
+    )
+    ap.add_argument(
         "--runtime",
         default="scratchpipe",
         choices=("scratchpipe", "strawman", "nocache", "static"),
@@ -326,6 +353,9 @@ def main():
         ap.error("--tables must be >= 0 (0 = uniform paper config)")
     if args.trace and args.scenario:
         ap.error("--trace and --scenario are mutually exclusive")
+    if args.adaptive_pad and not args.trace:
+        ap.error("--adaptive-pad derives buckets from a recorded trace; "
+                 "pass --trace")
     if args.arch == "dlrm-scratchpipe":
         train_dlrm(args)
     else:

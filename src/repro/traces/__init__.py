@@ -12,7 +12,11 @@ future sparse ids — this package makes workloads first-class artifacts:
     criteo      Criteo-TSV ingestion into the trace format
 """
 from repro.traces.format import TraceMeta, TraceReader, TraceWriter
-from repro.traces.profiling import hot_ids_from_trace, profile_hot_ids
+from repro.traces.profiling import (
+    derive_pad_buckets,
+    hot_ids_from_trace,
+    profile_hot_ids,
+)
 from repro.traces.recorder import TraceRecorder, record_trace
 from repro.traces.replay import TraceReplayStream
 from repro.traces.scenarios import (
@@ -33,4 +37,5 @@ __all__ = [
     "SCENARIOS",
     "profile_hot_ids",
     "hot_ids_from_trace",
+    "derive_pad_buckets",
 ]

@@ -1,0 +1,370 @@
+"""Device-resident [Plan] correctness (PR: plan_jax wired into the pipeline):
+
+  D1  planner="device" is bit-identical to planner="host" — host table,
+      storage, per-step stats, byte counters, losses — on RECORDED drift and
+      flash_crowd traces through scratchpipe, strawman, and sharded, with
+      and without the overlapped executor + fused dispatch, and with
+      multi-table slot budgets (plan_group_step offset correctness
+      end-to-end).
+  D2  hypothesis: DevicePlanner.plan == Planner.plan ELEMENTWISE (slots,
+      miss_ids, fill_slots, evict_slots, evict_ids, counts) driven the way
+      the pipeline drives them (each batch seen as look-ahead first).
+  D3  device PlanState checkpoint: state_dict/load_state_dict round-trips
+      at planner level and through ScratchPipe.state_arrays — the resumed
+      run replans identically.
+  D4  out-of-victims: the device planner's `ok` overflow flag surfaces
+      host-side as the SAME RuntimeError the host Planner raises.
+  D5  adaptive pad buckets: derive_pad_buckets reads a trace's miss-count
+      distribution; pad_len prefers the bucket set; a pad_buckets= run is
+      bit-identical to the pow-2 default.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # fall back to deterministic fixed examples
+    from _hypothesis_compat import given, settings, st
+
+import jax
+
+from repro.core.host_table import HostEmbeddingTable
+from repro.core.plan import Planner, pad_len
+from repro.core.plan_jax import DevicePlanner
+from repro.core.runtime import make_runtime
+from repro.core.table_group import TableGroup, TableSpec
+from repro.traces import (
+    TraceReplayStream,
+    derive_pad_buckets,
+    record_trace,
+    scenario_batches,
+)
+
+
+def small_group():
+    return TableGroup([TableSpec("a", 400, 8), TableSpec("b", 200, 8)])
+
+
+@pytest.fixture(scope="module", params=["drift", "flash_crowd"])
+def recorded_trace(request, tmp_path_factory):
+    group = small_group()
+    path = str(tmp_path_factory.mktemp("deviceplan") / request.param)
+    n = record_trace(
+        path,
+        group,
+        scenario_batches(
+            request.param, group, 30, batch_size=4, lookups_per_table=3, seed=11
+        ),
+    )
+    assert n == 30
+    return path, group
+
+
+def _dlrm_trainer(group):
+    from repro.configs.base import DLRMConfig
+    from repro.core.dlrm_runtime import DLRMTrainer
+
+    cfg = DLRMConfig(
+        name="dlrm-deviceplan",
+        table_rows=tuple(group.rows),
+        embed_dim=group.dim,
+        lookups_per_table=3,
+        batch_size=4,
+        bottom_mlp=(16, group.dim),
+        top_mlp=(16, 1),
+    )
+    return DLRMTrainer(cfg, jax.random.key(0), lr=0.05)
+
+
+def _sharded_train_fn(storages, slots_all, batch):
+    out = []
+    for storage, slots in zip(storages, slots_all):
+        slots = np.asarray(slots)
+        if slots.size:
+            storage = storage.at[np.unique(slots.ravel())].add(1.0)
+        out.append(storage)
+    return out, None
+
+
+def _run_design(
+    design, trace_path, group, *, planner, executor="sync", fused=False,
+    table_group=None, pad_buckets=None,
+):
+    host = HostEmbeddingTable(group.total_rows, group.dim, seed=1)
+    if design == "sharded":
+        runtime = make_runtime(
+            design,
+            host,
+            _sharded_train_fn,
+            num_slots=240,
+            table_group=group,
+            executor=executor,
+            planner=planner,
+        )
+    else:
+        trainer = _dlrm_trainer(group)
+        kw = dict(
+            num_slots=240,
+            executor=executor,
+            planner=planner,
+            table_group=table_group,
+            pad_buckets=pad_buckets,
+        )
+        if fused:
+            kw["fused_train_fn"] = trainer.fused_train_fn
+        runtime = make_runtime(design, host, trainer.train_fn, **kw)
+    with TraceReplayStream(trace_path, prefetch=0) as stream:
+        stats = runtime.run(stream, lookahead_fn=stream.peek_ids)
+    runtime.flush_to_host()
+    traffic = {k: (t.read, t.written) for k, t in runtime.traffic().items()}
+    storages = (
+        [np.asarray(p.storage) for p in runtime.pipes]
+        if hasattr(runtime, "pipes")
+        else [np.asarray(runtime.storage)]
+    )
+    return host.data.copy(), storages, stats, traffic
+
+
+def _assert_bit_identical(a, b, label):
+    host_a, stor_a, stats_a, traffic_a = a
+    host_b, stor_b, stats_b, traffic_b = b
+    np.testing.assert_array_equal(host_a, host_b, err_msg=f"{label}: host table")
+    assert len(stor_a) == len(stor_b)
+    for sa, sb in zip(stor_a, stor_b):
+        np.testing.assert_array_equal(sa, sb, err_msg=f"{label}: storage")
+    assert traffic_a == traffic_b, f"{label}: byte counters diverge"
+    assert len(stats_a) == len(stats_b), label
+    for sa, sb in zip(stats_a, stats_b):
+        assert (
+            sa.step, sa.n_lookups, sa.n_unique, sa.n_hits, sa.n_miss,
+            sa.n_evict, sa.hit_lookups,
+        ) == (
+            sb.step, sb.n_lookups, sb.n_unique, sb.n_hits, sb.n_miss,
+            sb.n_evict, sb.hit_lookups,
+        ), f"{label}: stats at step {sa.step}"
+        if isinstance(sa.aux, dict) and "loss" in sa.aux:
+            assert float(sa.aux["loss"]) == float(sb.aux["loss"]), (
+                f"{label}: loss at step {sa.step}"
+            )
+
+
+# --------------------------------------------------------------------- #
+# D1: host vs device planner, per design, on the recorded traces
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("design", ["scratchpipe", "strawman", "sharded"])
+def test_device_planner_bit_identical(recorded_trace, design):
+    path, group = recorded_trace
+    h = _run_design(design, path, group, planner="host")
+    d = _run_design(design, path, group, planner="device")
+    _assert_bit_identical(h, d, f"{design} host-vs-device")
+
+
+def test_device_planner_overlapped_fused(recorded_trace):
+    """The all-in fast path: device planner + overlapped executor + fused
+    translate+fill+train dispatch — still bit-identical to the plain host
+    sync engine."""
+    path, group = recorded_trace
+    h = _run_design("scratchpipe", path, group, planner="host")
+    d = _run_design(
+        "scratchpipe", path, group, planner="device",
+        executor="overlapped", fused=True,
+    )
+    _assert_bit_identical(h, d, "scratchpipe sync/host vs overlapped+fused/device")
+
+
+def test_device_planner_multi_table_budgets(recorded_trace):
+    """Per-table slot budgets: the device side runs plan_group_step (one
+    PlanState per table over the fused coordinates) — offsets must land
+    every output in the same global slot/row as the host partition."""
+    path, group = recorded_trace
+    h = _run_design("scratchpipe", path, group, planner="host", table_group=group)
+    d = _run_design("scratchpipe", path, group, planner="device", table_group=group)
+    _assert_bit_identical(h, d, "scratchpipe multi-table host-vs-device")
+
+
+def test_device_planner_rejects_non_lru():
+    host = HostEmbeddingTable(100, 4, seed=0)
+    with pytest.raises(ValueError, match="lru"):
+        make_runtime(
+            "scratchpipe", host, lambda s, sl, b: (s, None),
+            num_slots=64, planner="device", policy="random",
+        )
+
+
+# --------------------------------------------------------------------- #
+# D2: elementwise planner equivalence under hypothesis
+# --------------------------------------------------------------------- #
+def _drive_pair(batches, rows, slots, future=2):
+    host = Planner(rows, slots, future_window=future)
+    dev = DevicePlanner(rows, slots, future_window=future)
+    for i, ids in enumerate(batches):
+        look = batches[i + 1 : i + 1 + future]
+        rh = host.plan(ids, look)
+        rd = dev.plan(ids, look)
+        for f in ("miss_ids", "fill_slots", "evict_slots", "evict_ids"):
+            vh, vd = getattr(rh, f), getattr(rd, f)
+            np.testing.assert_array_equal(vh, vd, err_msg=f"{f} @ step {i}")
+            assert vd.dtype == np.int32, f
+        np.testing.assert_array_equal(
+            rh.slots, np.asarray(rd.slots), err_msg=f"slots @ step {i}"
+        )
+        assert (rh.n_unique, rh.n_hits) == (rd.n_unique, rd.n_hits), i
+    np.testing.assert_array_equal(host.slot_to_id, dev.slot_to_id)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.data())
+def test_device_planner_elementwise_equivalence(data):
+    rows = data.draw(st.integers(30, 150))
+    n_batches = data.draw(st.integers(4, 16))
+    seed = data.draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    batches = [
+        rng.integers(0, rows, size=rng.integers(1, 10)) for _ in range(n_batches)
+    ]
+    worst = max(
+        sum(len(np.unique(b)) for b in batches[i : i + 6])
+        for i in range(len(batches))
+    )
+    _drive_pair(batches, rows, min(rows, worst + 4))
+
+
+# --------------------------------------------------------------------- #
+# D3: device PlanState checkpoint round-trips
+# --------------------------------------------------------------------- #
+def test_device_state_dict_roundtrip():
+    rows, slots = 200, 96
+    rng = np.random.default_rng(3)
+    batches = [rng.integers(0, rows, size=12) for _ in range(24)]
+    a = DevicePlanner(rows, slots)
+    for i in range(10):
+        a.plan(batches[i], batches[i + 1 : i + 3]).miss_ids
+    snap = a.state_dict()
+    assert all(isinstance(v, np.ndarray) for v in snap.values())
+    b = DevicePlanner(rows, slots)
+    b.load_state_dict(snap)
+    assert b._cycle == a._cycle
+    for i in range(10, 20):
+        ra = a.plan(batches[i], batches[i + 1 : i + 3])
+        rb = b.plan(batches[i], batches[i + 1 : i + 3])
+        np.testing.assert_array_equal(np.asarray(ra.slots), np.asarray(rb.slots))
+        np.testing.assert_array_equal(ra.evict_ids, rb.evict_ids)
+    np.testing.assert_array_equal(a.slot_to_id, b.slot_to_id)
+    # host-planner checkpoints must be rejected loudly, not half-loaded
+    with pytest.raises(ValueError, match="incompatible"):
+        DevicePlanner(rows, slots).load_state_dict(
+            Planner(rows, slots).state_dict()
+        )
+
+
+def test_device_pipeline_state_arrays_roundtrip(recorded_trace):
+    """Checkpoint the device-planner pipeline at a drain boundary, restore
+    into a FRESH runtime, and drive BOTH over the identical trace tail: a
+    lossless PlanState round-trip (hold registers, last_use, free pointers,
+    cycle) makes them bit-identical — any dropped field would shift an
+    eviction."""
+    path, group = recorded_trace
+
+    def make(host):
+        trainer = _dlrm_trainer(group)
+        return make_runtime(
+            "scratchpipe", host, trainer.train_fn,
+            num_slots=240, planner="device",
+        ), trainer
+
+    host1 = HostEmbeddingTable(group.total_rows, group.dim, seed=1)
+    rt1, tr1 = make(host1)
+    with TraceReplayStream(path, stop=12, prefetch=0) as s1:
+        rt1.run(s1, lookahead_fn=s1.peek_ids)
+    snap = {k: np.array(v) for k, v in rt1.state_arrays().items()}
+
+    host2 = HostEmbeddingTable(group.total_rows, group.dim, seed=1)
+    rt2, tr2 = make(host2)
+    tr2.mlps = tr1.mlps  # dense params ride the model checkpoint in prod
+    rt2.load_state_arrays(snap)
+    tails = []
+    for rt in (rt1, rt2):
+        with TraceReplayStream(path, start=12, prefetch=0) as s:
+            stats = rt.run(s, lookahead_fn=s.peek_ids)
+        rt.flush_to_host()
+        tails.append(stats)
+    np.testing.assert_array_equal(host1.data, host2.data)
+    np.testing.assert_array_equal(
+        np.asarray(rt1.storage), np.asarray(rt2.storage)
+    )
+    assert len(tails[0]) == len(tails[1]) > 0
+    for sa, sb in zip(*tails):
+        assert (sa.n_unique, sa.n_hits, sa.n_miss, sa.n_evict) == (
+            sb.n_unique, sb.n_hits, sb.n_miss, sb.n_evict,
+        )
+        assert float(sa.aux["loss"]) == float(sb.aux["loss"])
+
+
+# --------------------------------------------------------------------- #
+# D4: the `ok` overflow flag surfaces as the host planner's error
+# --------------------------------------------------------------------- #
+def test_out_of_victims_same_error():
+    rows, slots = 40, 3
+    host = Planner(rows, slots, past_window=3, future_window=0)
+    dev = DevicePlanner(rows, slots, past_window=3, future_window=0)
+    batches = [np.array([i]) for i in range(4)]
+    host_err = dev_err = None
+    for b in batches:
+        try:
+            host.plan(b, [])
+        except RuntimeError as e:
+            host_err = str(e)
+    for b in batches:
+        try:
+            dev.plan(b, []).miss_ids  # materialization surfaces the flag
+        except RuntimeError as e:
+            dev_err = str(e)
+    assert host_err is not None and dev_err is not None
+    assert host_err == dev_err  # same words, same counts
+    assert "scratchpad too small" in dev_err
+
+
+def test_out_of_victims_through_pipeline(recorded_trace):
+    """An infeasibly small scratchpad aborts a device-planner run with the
+    same RuntimeError class/text family run_design keys on."""
+    path, group = recorded_trace
+    host = HostEmbeddingTable(group.total_rows, group.dim, seed=1)
+    trainer = _dlrm_trainer(group)
+    rt = make_runtime(
+        "scratchpipe", host, trainer.train_fn, num_slots=8, planner="device"
+    )
+    with TraceReplayStream(path, prefetch=0) as stream:
+        with pytest.raises(RuntimeError, match="scratchpad too small"):
+            rt.run(stream, lookahead_fn=stream.peek_ids)
+
+
+# --------------------------------------------------------------------- #
+# D5: adaptive pad buckets
+# --------------------------------------------------------------------- #
+def test_pad_len_prefers_buckets():
+    assert pad_len(10) == 256  # pow-2/floor default
+    assert pad_len(300) == 512
+    assert pad_len(10, buckets=(24, 96)) == 24
+    assert pad_len(50, buckets=(24, 96)) == 96
+    # beyond the largest bucket: pow-2 fallback, never a correctness cliff
+    assert pad_len(200, buckets=(24, 96)) == 256
+
+
+def test_derive_pad_buckets_and_parity(recorded_trace):
+    path, group = recorded_trace
+    buckets = derive_pad_buckets(path, 240)
+    assert buckets == tuple(sorted(buckets))
+    assert len(buckets) >= 1
+    # the largest bucket covers the largest observed miss burst; every
+    # bucket is positive and 8-aligned
+    assert all(b > 0 and b % 8 == 0 for b in buckets)
+    default = _run_design("scratchpipe", path, group, planner="host")
+    adaptive = _run_design(
+        "scratchpipe", path, group, planner="host", pad_buckets=buckets
+    )
+    _assert_bit_identical(default, adaptive, "pow2-vs-adaptive padding")
+    # and under the device planner too
+    adaptive_dev = _run_design(
+        "scratchpipe", path, group, planner="device", pad_buckets=buckets
+    )
+    _assert_bit_identical(default, adaptive_dev, "adaptive padding, device")

@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 
 from repro.core.plan import Planner
-from repro.core.plan_jax import init_state, plan_step
+from repro.core.plan_jax import init_state, plan_step, plan_window
 
 
 @pytest.mark.parametrize("seed", [0, 1, 2])
@@ -44,6 +44,44 @@ def test_device_planner_matches_host(seed):
         s2i = np.asarray(state.slot_to_id)
         live = np.flatnonzero(s2i >= 0)
         np.testing.assert_array_equal(hm[s2i[live]], live)
+
+
+@pytest.mark.parametrize("seed", [0, 3])
+def test_plan_window_scan_matches_sequential(seed):
+    """plan_window (one lax.scan dispatch over W cycles) == W sequential
+    plan_step calls: identical final state and identical stacked outputs."""
+    rows, slots, n, W = 120, 64, 8, 12
+    rng = np.random.default_rng(seed)
+    batches = [rng.integers(0, rows, size=n) for _ in range(W + 2)]
+    ids = np.stack([b.astype(np.int32) for b in batches[:W]])
+    fut = np.stack(
+        [
+            np.concatenate(batches[t + 1 : t + 3]).astype(np.int32)
+            for t in range(W)
+        ]
+    )
+
+    seq_state = init_state(rows, slots)
+    seq_outs = []
+    for t in range(W):
+        seq_state, out = plan_step(
+            seq_state, jnp.asarray(ids[t]), jnp.asarray(fut[t])
+        )
+        seq_outs.append(out)
+
+    scan_state, scan_outs = plan_window(
+        init_state(rows, slots), jnp.asarray(ids), jnp.asarray(fut)
+    )
+
+    for f in ("hitmap", "slot_to_id", "hold", "last_use", "free_ptr", "cycle"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(seq_state, f)),
+            np.asarray(getattr(scan_state, f)),
+            err_msg=f,
+        )
+    for k in seq_outs[0]:
+        stacked = np.stack([np.asarray(o[k]) for o in seq_outs])
+        np.testing.assert_array_equal(stacked, np.asarray(scan_outs[k]), k)
 
 
 def test_device_planner_reports_infeasible():
