@@ -126,6 +126,7 @@ class DesignResult:
     error: Optional[str] = None
     source: str = "synthetic"  # synthetic | scenario:<name> | trace:<path>
     planner: str = "host"  # [Plan] placement: host | device
+    kernel: str = "xla"  # embedding primitives: xla | pallas
 
 
 # Every run_design result lands here; benchmarks/run.py drains it into
@@ -213,6 +214,7 @@ def run_design(
     executor: str = "sync",
     fused: bool = False,
     planner: str = "host",
+    kernel: str = "xla",
 ) -> DesignResult:
     """design in {nocache, static, strawman, scratchpipe} — constructed
     through the EmbeddingCacheRuntime registry. ``num_tables``/``hetero``
@@ -302,7 +304,7 @@ def run_design(
         return dlrm_batches(tc, steps)
 
     host = _fresh_host(rows, cfg.embed_dim, seed=1)
-    trainer = DLRMTrainer(cfg, jax.random.key(0), lr=0.05)
+    trainer = DLRMTrainer(cfg, jax.random.key(0), lr=0.05, kernel=kernel)
     row_b = host.row_bytes
     t0 = time.time()
     try:
@@ -360,14 +362,12 @@ def run_design(
                 slots = max(slots, need)
                 budgets = group.slot_budgets(slots, min_per_table=floor)
             kw = {}
-            if design in ("scratchpipe", "strawman"):
+            if design in ("scratchpipe", "strawman", "sharded"):
                 kw["executor"] = executor
                 kw["planner"] = planner
-                if fused:
+                kw["kernel"] = kernel  # runtime-side [Insert] fills
+                if fused and design != "sharded":
                     kw["fused_train_fn"] = trainer.fused_train_fn
-            elif design == "sharded":
-                kw["executor"] = executor
-                kw["planner"] = planner
             pipe = make_runtime(
                 design,
                 host,
@@ -398,6 +398,7 @@ def run_design(
         r.error = "infeasible: cache smaller than worst-case window working set (§VI-D)"
         r.source = source
         r.planner = planner
+        r.kernel = kernel
         RESULTS_LOG.append(r)
         return r
     sync_runtime(runner if design in ("nocache", "static") else pipe, trainer)
@@ -408,6 +409,7 @@ def run_design(
     )
     r.source = source
     r.planner = planner
+    r.kernel = kernel
     RESULTS_LOG.append(r)
     return r
 

@@ -25,8 +25,12 @@ cache, or a cell's number would depend on which cells ran before it.
 
 Measured modes: ``sync`` (sync executor, split dispatch — the fast-path
 planner/padding/empty-skip still apply), ``fast`` (overlapped executor +
-fused insert+train, host planner) and ``device`` (fast + the device-resident
-planner: PlanState on-accelerator, raw ids h2d instead of translated slots).
+fused insert+train, host planner), ``device`` (fast + the device-resident
+planner: PlanState on-accelerator, raw ids h2d instead of translated slots)
+and ``pallas`` (fast + ``kernel="pallas"``: the fused fill+gather /
+coalesce+scatter cycle kernels — interpret-mode on this container, so its
+wall-clock measures the dispatch path, not TPU kernel speed; the
+``launches`` section carries the launch-count delta that IS the claim).
 On this 2-core container the overlapped worker threads contend with XLA's
 spinning pool, so the modes land close; on real two-tier hardware
 ``device`` is the intended production mode (DESIGN.md). The planner section
@@ -101,12 +105,14 @@ def _features() -> Dict[str, bool]:
 
     pipe_params = inspect.signature(ScratchPipe.__init__).parameters
     plan_params = inspect.signature(Planner.__init__).parameters
+    trainer_params = inspect.signature(DLRMTrainer.__init__).parameters
     return {
         "executor": "executor" in pipe_params,
         "fused": "fused_train_fn" in pipe_params,
         "memoize": "memoize" in plan_params,
         "stage_times": "record_stage_times" in pipe_params,
         "planner": "planner" in pipe_params,
+        "kernel": "kernel" in pipe_params and "kernel" in trainer_params,
     }
 
 
@@ -114,16 +120,24 @@ def _modes_for(design: str) -> tuple:
     """Measured mode axis per design. ``device`` = overlapped executor +
     fused dispatch + planner="device" — the all-in fast path; it only runs
     when the code base has the device planner (feature detection keeps the
-    harness able to measure older checkouts)."""
+    harness able to measure older checkouts). ``pallas`` = fast +
+    ``kernel="pallas"`` — scratchpipe only (interpret-mode kernels are the
+    dispatch-path smoke, one design covers the axis)."""
     if design == "scratchpipe":
-        modes = ("sync", "fast", "device")
+        modes = ("sync", "fast", "device", "pallas")
     elif design in ("strawman", "sharded"):
         modes = ("fast", "device")
     else:
         modes = ("fast",)
     if not _features()["planner"]:
         modes = tuple(m for m in modes if m != "device")
+    if not _features()["kernel"]:
+        modes = tuple(m for m in modes if m != "pallas")
     return modes
+
+
+def _mode_kernel(mode: str) -> str:
+    return "pallas" if mode == "pallas" else "xla"
 
 
 # ---- workloads -------------------------------------------------------------
@@ -185,12 +199,14 @@ def build_runtime(design: str, mode: str, group: TableGroup, host, trainer,
         kw = {"num_slots": slots}
         if feats["executor"]:
             kw["executor"] = "sync" if mode == "sync" else "overlapped"
-        if feats["fused"] and mode in ("fast", "device"):
+        if feats["fused"] and mode in ("fast", "device", "pallas"):
             kw["fused_train_fn"] = trainer.fused_train_fn
         if feats["stage_times"]:
             kw["record_stage_times"] = True
         if feats["planner"] and mode == "device":
             kw["planner"] = "device"
+        if feats["kernel"]:
+            kw["kernel"] = _mode_kernel(mode)  # runtime-side [Insert] fills
         return make_runtime(design, host, trainer.train_fn, **kw)
     if design == "sharded":
         kw = {"num_slots": slots, "table_group": group}
@@ -240,7 +256,9 @@ def measure_cell(design: str, scenario: str, mode: str, warmup: int,
     items = make_batches(scenario, group, warmup + steps)
     profile = items[: max(1, warmup // 2)] if scenario != "synthetic" else None
     host = HostEmbeddingTable(group.total_rows, cfg.embed_dim, seed=1)
-    trainer = DLRMTrainer(cfg, jax.random.key(0), lr=0.05)
+    kernel = _mode_kernel(mode)
+    tkw = {"kernel": kernel} if _features()["kernel"] else {}
+    trainer = DLRMTrainer(cfg, jax.random.key(0), lr=0.05, **tkw)
     runtime = build_runtime(design, mode, group, host, trainer, profile)
 
     stream = LookaheadStream(iter(items))
@@ -291,6 +309,7 @@ def measure_cell(design: str, scenario: str, mode: str, warmup: int,
         "design": design,
         "scenario": scenario,
         "mode": mode,
+        "kernel": kernel,
         "features": _features(),
         "steps": n_trained,
         "steps_per_s": round(n_trained / elapsed, 3) if elapsed > 0 else 0.0,
@@ -386,6 +405,66 @@ def measure_planner_device(scenario: str, steps: int, scan: bool) -> dict:
     }
 
 
+# ---- launch accounting -----------------------------------------------------
+def measure_launches() -> List[dict]:
+    """Per-cycle dispatch counts for one fused [Insert]+[Train] cycle at the
+    bench shapes, per kernel mode — traced (jax.make_jaxpr), not executed,
+    so the numbers are backend-independent. This is the evidence for the
+    "<= 2 pallas_call launches per cycle per pad bucket" claim: the whole
+    embedding fwd+bwd collapses into 1 fused fill+gather call and 1
+    coalesce+scatter call."""
+    import jax.numpy as jnp
+
+    from repro.core.dlrm_runtime import dlrm_fill_train_step
+    from repro.launch.hlo_stats import jaxpr_primitive_counts
+
+    if not _features()["kernel"]:
+        return []
+    cfg = bench_cfg()
+    n_slots = max(1024, int(TABLES * ROWS_PER_TABLE * CACHE_FRAC))
+    F = 256  # one pad bucket's worth of fills
+    slots = jnp.zeros((BATCH, TABLES, LOOKUPS), jnp.int32)
+    dense = jnp.zeros((BATCH, cfg.num_dense_features), jnp.float32)
+    label = jnp.zeros((BATCH,), jnp.float32)
+    fill_slots = jnp.zeros((F,), jnp.int32)
+    fill_rows = jnp.zeros((F, EMBED_DIM), jnp.float32)
+    storage = jnp.zeros((n_slots, EMBED_DIM), jnp.float32)
+    trainer = DLRMTrainer(cfg, jax.random.key(0), lr=0.05)
+    out = []
+    for kernel in ("xla", "pallas"):
+        counts = jaxpr_primitive_counts(
+            lambda st, m: dlrm_fill_train_step(
+                st, m, fill_slots, fill_rows, slots, dense, label, 0.05,
+                kernel=kernel,  # noqa: B023 (called before kernel rebinds)
+            ),
+            storage, trainer.mlps,
+        )
+        out.append({
+            "kernel": kernel,
+            "pallas_calls_per_cycle": counts.get("pallas_call", 0),
+            "scatter_ops_per_cycle": sum(
+                v for k, v in counts.items() if k.startswith("scatter")
+            ),
+            "gather_ops_per_cycle": counts.get("gather", 0),
+        })
+    return out
+
+
+def machine_info() -> dict:
+    """Provenance for checked-in numbers: the gate compares across machines,
+    so every recorded run says what class of machine produced it."""
+    import platform
+
+    return {
+        "platform": platform.platform(),
+        "machine": platform.machine(),
+        "cpus": os.cpu_count(),
+        "python": platform.python_version(),
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+    }
+
+
 # ---- driver ----------------------------------------------------------------
 def _measure_cell_isolated(design: str, scenario: str, mode: str,
                            warmup: int, steps: int) -> dict:
@@ -441,8 +520,18 @@ def run_suite(warmup: int, steps: int, planner_steps: int) -> dict:
                     f"{cell['us_per_batch']:>8.1f} us/batch",
                     flush=True,
                 )
+    launches = measure_launches()
+    for rec in launches:
+        print(
+            f"launches     kernel={rec['kernel']:<7} "
+            f"pallas_call={rec['pallas_calls_per_cycle']} "
+            f"scatter={rec['scatter_ops_per_cycle']} "
+            f"gather={rec['gather_ops_per_cycle']}  (per fused cycle)",
+            flush=True,
+        )
     return {
         "schema": "bench_wallclock/v1",
+        "machine": machine_info(),
         "config": {
             "tables": TABLES,
             "rows_per_table": ROWS_PER_TABLE,
@@ -457,6 +546,7 @@ def run_suite(warmup: int, steps: int, planner_steps: int) -> dict:
         "features": _features(),
         "runs": runs,
         "planner": planner,
+        "launches": launches,
     }
 
 
@@ -589,6 +679,18 @@ def check(result: dict) -> List[str]:
                 )
     if not result["planner"]:
         problems.append("planner section empty")
+    if _features()["kernel"]:
+        kernels = {c.get("kernel", "xla") for c in result["runs"]}
+        if "pallas" not in kernels:
+            problems.append("no kernel=pallas cell in runs (dispatch rot)")
+        for rec in result.get("launches", []):
+            if rec["kernel"] == "pallas" and rec["pallas_calls_per_cycle"] > 2:
+                problems.append(
+                    f"pallas cycle dispatches {rec['pallas_calls_per_cycle']} "
+                    "pallas_call launches (> 2 per pad bucket)"
+                )
+        if not result.get("launches"):
+            problems.append("launches section empty")
     return problems
 
 

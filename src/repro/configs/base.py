@@ -204,7 +204,9 @@ class DLRMConfig:
     cache_fraction: float = 0.05  # scratchpad size as fraction of table rows
     past_window: int = 3
     future_window: int = 2
-    use_pallas: bool = False
+    # embedding-primitive implementation: "xla" (stock ops) or "pallas"
+    # (fused cycle kernels; interpret-mode off-TPU, bit-identical to "xla")
+    kernel: str = "xla"
 
     def __post_init__(self):
         if self.table_rows is not None:

@@ -4,7 +4,19 @@ ScratchPipe AND both baselines (identical math; only row placement differs).
 The embedding rows enter as the ``storage`` operand (scratchpad / transient
 gathered region / full table) addressed by [Plan]-translated slots; the
 gradient duplication -> coalescing -> scatter-update runs on whatever memory
-holds ``storage``.
+holds ``storage``. The static ``kernel`` axis ("xla" | "pallas") selects the
+scratchpad primitive implementation: under "pallas" the per-cycle embedding
+work is exactly TWO pallas_call launches — the fused fill+gather+bag-reduce
+forward and the coalesce+scatter backward (or gather + scatter on the
+unfused step) — per pad bucket, bit-identical to "xla" in interpret mode.
+
+Gradients w.r.t. the bags are taken explicitly (``argnums=(0, 1)``) and fed
+to the backward kernel as pre-rounded per-bag deltas. Differentiating the
+gather itself is also supported (kernels/ops.py custom_vjp — the grad-check
+tests exercise it) but the production step keeps the bag-cotangent form: a
+VJP w.r.t. the full storage operand would materialize a dense (slots, D)
+cotangent every iteration, which is exactly the O(table) traffic the paper's
+coalesced scatter exists to avoid.
 """
 from __future__ import annotations
 
@@ -19,9 +31,9 @@ from repro.models import dlrm
 
 
 @functools.partial(
-    jax.jit, donate_argnums=(0,), static_argnames=("use_pallas", "lr")
+    jax.jit, donate_argnums=(0,), static_argnames=("kernel", "lr")
 )
-def dlrm_train_step(storage, mlps, slots, dense, label, lr, use_pallas=False):
+def dlrm_train_step(storage, mlps, slots, dense, label, lr, kernel="xla"):
     """Module-level jit so the compilation is shared across every trainer
     instance with the same shapes (benchmarks re-instantiate trainers a lot)."""
 
@@ -29,25 +41,27 @@ def dlrm_train_step(storage, mlps, slots, dense, label, lr, use_pallas=False):
         logit = dlrm.forward_from_bags(mlps_, dense, bags)
         return dlrm.bce_loss(logit, label)
 
-    bags = sp.gather_reduce(storage, slots, use_pallas=use_pallas)
+    bags = sp.gather_reduce(storage, slots, kernel=kernel)
     loss, (g_mlps, g_bags) = jax.value_and_grad(loss_fn, argnums=(0, 1))(mlps, bags)
     mlps = jax.tree.map(lambda p, g: p - lr * g, mlps, g_mlps)
-    storage = sp.coalesce_apply(storage, slots, g_bags, lr, use_pallas=use_pallas)
+    storage = sp.apply_grad(storage, slots, g_bags, lr, kernel=kernel)
     return storage, mlps, loss
 
 
 @functools.partial(
-    jax.jit, donate_argnums=(0,), static_argnames=("use_pallas", "lr")
+    jax.jit, donate_argnums=(0,), static_argnames=("kernel", "lr")
 )
 def dlrm_fill_train_step(
     storage, mlps, fill_slots, fill_rows, slots, dense, label, lr,
-    use_pallas=False,
+    kernel="xla",
 ):
     """Fused [Insert]-fill + [Train]: one dispatch per pipeline cycle instead
     of two. The fill lands before the gather — exactly the split engine's
     intra-cycle order — so results are bit-identical to fill-then-train.
     ``fill_slots`` may be bucket-padded with out-of-bounds sentinels
-    (drop-mode scatter discards them).
+    (drop-mode scatter discards them). Under ``kernel="pallas"`` the fill
+    AND the gather/bag-reduce are ONE fused pallas_call
+    (scratchpad.fill_gather_reduce).
 
     With the device planner (``ScratchPipe(planner="device")``) ``slots`` is
     the DEVICE-resident output of ``plan_jax.plan_step`` — the id->slot
@@ -55,27 +69,31 @@ def dlrm_fill_train_step(
     (not pre-translated slots) are all that crossed the h2d link this cycle.
     The executable is identical either way: a host-planner run feeds the
     same-shape int32 operand from host memory."""
-    storage = sp.fill_inline(storage, fill_slots, fill_rows)
 
     def loss_fn(mlps_, bags):
         logit = dlrm.forward_from_bags(mlps_, dense, bags)
         return dlrm.bce_loss(logit, label)
 
-    bags = sp.gather_reduce(storage, slots, use_pallas=use_pallas)
+    storage, bags = sp.fill_gather_reduce(
+        storage, fill_slots, fill_rows, slots, kernel=kernel
+    )
     loss, (g_mlps, g_bags) = jax.value_and_grad(loss_fn, argnums=(0, 1))(mlps, bags)
     mlps = jax.tree.map(lambda p, g: p - lr * g, mlps, g_mlps)
-    storage = sp.coalesce_apply(storage, slots, g_bags, lr, use_pallas=use_pallas)
+    storage = sp.apply_grad(storage, slots, g_bags, lr, kernel=kernel)
     return storage, mlps, loss
 
 
 class DLRMTrainer:
     """Holds the dense (MLP) parameters; exposes train_fn(storage, slots,
-    batch) for the cache runtimes."""
+    batch) for the cache runtimes. ``kernel`` defaults to the config's
+    ``kernel`` field (DLRMConfig), else "xla"."""
 
-    def __init__(self, cfg, key, lr: float = 0.05, use_pallas: bool = False):
+    def __init__(self, cfg, key, lr: float = 0.05, kernel: str = None):
         self.cfg = cfg
         self.lr = lr
-        self.use_pallas = use_pallas
+        self.kernel = sp._check_kernel(
+            kernel if kernel is not None else getattr(cfg, "kernel", "xla")
+        )
         self.mlps = dlrm.init_mlps(cfg, key)
 
     def train_fn(self, storage, slots, batch) -> Tuple[jax.Array, Dict[str, Any]]:
@@ -86,7 +104,7 @@ class DLRMTrainer:
             batch["dense"],
             batch["label"],
             lr=self.lr,
-            use_pallas=self.use_pallas,
+            kernel=self.kernel,
         )
         return storage, {"loss": loss}
 
@@ -104,6 +122,6 @@ class DLRMTrainer:
             batch["dense"],
             batch["label"],
             lr=self.lr,
-            use_pallas=self.use_pallas,
+            kernel=self.kernel,
         )
         return storage, {"loss": loss}

@@ -38,7 +38,12 @@ Executors (wall-clock fast path — see DESIGN.md "Wall-clock path"):
 Dispatch discipline: empty-operand device calls are skipped outright
 (zero-miss / zero-evict cycles launch nothing), [Insert]-fill can fuse into
 the [Train] dispatch (``fused_train_fn``), and variable-length index
-operands are padded to power-of-two buckets — or a trace-derived adaptive
+operands are padded to power-of-two buckets. The ``kernel="xla"|"pallas"``
+axis selects the device-primitive implementation for the runtime's own
+dispatches (the [Insert] fill here; the [Train] stage's gather/scatter
+kernels ride inside ``train_fn``/``fused_train_fn`` — build the trainer
+with the same ``kernel=``). Pad buckets double as the Pallas grid sizes, so
+"pallas" keeps the same one-executable-per-bucket discipline — or a trace-derived adaptive
 bucket set (``pad_buckets=``, see repro.traces.profiling.derive_pad_buckets)
 — via drop-mode scatters / sliced reads, so the number of distinct XLA
 executables stays O(log batch) instead of one per miss count.
@@ -139,11 +144,13 @@ class ScratchPipe:
         record_stage_times: bool = False,
         planner: str = "host",
         pad_buckets: Optional[Sequence[int]] = None,
+        kernel: str = "xla",
     ):
         if executor not in ("sync", "overlapped"):
             raise ValueError(f"unknown executor {executor!r}")
         if planner not in ("host", "device"):
             raise ValueError(f"unknown planner placement {planner!r}")
+        self.kernel = sp._check_kernel(kernel)
         self.host = host_table
         self.train_fn = train_fn
         self.fused_train_fn = fused_train_fn
@@ -333,6 +340,7 @@ class ScratchPipe:
                 self.storage,
                 pad_index(p.fill_slots, self.num_slots, self.pad_buckets),
                 entry.fetched_dev,
+                kernel=self.kernel,
             )
         self.hbm.written += p.fill_slots.size * self.host.row_bytes
         entry.times["insert"] = entry.times.get("insert", 0.0) + (

@@ -1,11 +1,20 @@
 """GPU/HBM scratchpad Storage array + the device-side embedding primitives.
 
 Storage is a functional jnp array (slots, dim); fills/updates donate the
-buffer so XLA updates in place. The gather+reduce and the gradient
-duplication/coalescing/scatter-update primitives — the paper's two
-memory-bound hot spots — dispatch to the Pallas TPU kernels when
-``use_pallas`` (see repro/kernels), otherwise to the pure-jnp reference path
-(identical math; used on CPU and in the dry-run).
+buffer so XLA updates in place. Every primitive carries the first-class
+``kernel="xla" | "pallas"`` axis:
+
+  * ``"xla"`` — the pure-jnp path (stock XLA ops), canonically defined in
+    repro.kernels.ref so both paths share ONE float-op ordering;
+  * ``"pallas"`` — the Pallas TPU kernels (repro.kernels.ops): the fused
+    fill+gather+bag-reduce forward and the coalesce+scatter backward, the
+    paper's two memory-bound hot spots as single cached launches per pad
+    bucket. On non-TPU backends they run under ``interpret=True`` and are
+    BIT-IDENTICAL to the XLA path (the kernel-parity test oracle).
+
+``read`` stays an XLA gather on purpose: it feeds the d2h victim write-back
+([Collect]/[Exchange]), which is PCIe-bound, not HBM-bound — there is no
+kernel win to wire there.
 """
 from __future__ import annotations
 
@@ -16,6 +25,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import ref as kref
+
+KERNELS = ("xla", "pallas")
+
+
+def _check_kernel(kernel: str) -> str:
+    if kernel not in KERNELS:
+        raise ValueError(f"unknown kernel {kernel!r}; expected one of {KERNELS}")
+    return kernel
+
 
 def fill_inline(storage: jax.Array, slots: jax.Array, rows: jax.Array) -> jax.Array:
     """[Insert]-fill body, for use INSIDE a larger jitted program (the fused
@@ -23,52 +42,73 @@ def fill_inline(storage: jax.Array, slots: jax.Array, rows: jax.Array) -> jax.Ar
     ``slots`` may be bucket-padded with positive out-of-bounds sentinels
     (drop-mode discards them). Negative indices would WRAP in jax — pad with
     num_slots, never -1."""
-    return storage.at[slots].set(rows.astype(storage.dtype), mode="drop")
+    return kref.fill_ref(storage, slots, rows)
 
 
-@functools.partial(jax.jit, donate_argnums=0)
-def fill(storage: jax.Array, slots: jax.Array, rows: jax.Array) -> jax.Array:
+@functools.partial(jax.jit, donate_argnums=0, static_argnames=("kernel",))
+def fill(
+    storage: jax.Array, slots: jax.Array, rows: jax.Array, *, kernel="xla"
+) -> jax.Array:
     """[Insert]: write fetched rows into their allocated slots (standalone
     donated dispatch; see :func:`fill_inline` for the padding contract)."""
+    if _check_kernel(kernel) == "pallas":
+        from repro.kernels import ops
+
+        return ops.fill(storage, slots, rows)
     return fill_inline(storage, slots, rows)
 
 
 @jax.jit
 def read(storage: jax.Array, slots: jax.Array) -> jax.Array:
-    """[Collect]: read victim rows for write-back."""
+    """[Collect]: read victim rows for write-back (XLA by design — the
+    consumer is the PCIe d2h path, not an HBM hot loop)."""
     return jnp.take(storage, slots, axis=0)
 
 
-def gather_reduce(storage: jax.Array, slot_ids: jax.Array, *, use_pallas=False):
+def gather_reduce(storage: jax.Array, slot_ids: jax.Array, *, kernel="xla"):
     """Embedding-bag forward: (B, T, L) slots -> (B, T, D) summed bags."""
-    if use_pallas:
+    if _check_kernel(kernel) == "pallas":
         from repro.kernels import ops
 
         return ops.gather_reduce(storage, slot_ids)
-    emb = jnp.take(storage, slot_ids, axis=0)  # (B, T, L, D)
-    return jnp.sum(emb, axis=2)
+    return kref.gather_reduce_ref(storage, slot_ids)
 
 
-def coalesce_apply(
+def apply_grad(
     storage: jax.Array,
     slot_ids: jax.Array,
     bag_grads: jax.Array,
     lr: float,
     *,
-    use_pallas=False,
+    kernel="xla",
 ) -> jax.Array:
     """Backward: duplicate bag grads to each looked-up row, coalesce
     duplicates (scatter-add), apply SGD. slot_ids (B,T,L), bag_grads (B,T,D)."""
-    if use_pallas:
+    if _check_kernel(kernel) == "pallas":
         from repro.kernels import ops
 
         return ops.coalesce_apply(storage, slot_ids, bag_grads, lr)
-    B, T, L = slot_ids.shape
-    D = bag_grads.shape[-1]
-    dup = jnp.broadcast_to(bag_grads[:, :, None, :], (B, T, L, D))
-    flat_slots = slot_ids.reshape(-1)
-    flat_grads = dup.reshape(-1, D).astype(storage.dtype)
-    return storage.at[flat_slots].add(-lr * flat_grads)
+    return kref.coalesce_apply_ref(storage, slot_ids, bag_grads, lr)
+
+
+def fill_gather_reduce(
+    storage: jax.Array,
+    fill_slots: jax.Array,
+    fill_rows: jax.Array,
+    slot_ids: jax.Array,
+    *,
+    kernel="xla",
+) -> Tuple[jax.Array, jax.Array]:
+    """Fused [Insert]-fill + embedding-bag forward for one pipeline cycle:
+    the fill lands before the gather (the split engine's intra-cycle order).
+    Returns (filled storage, (B, T, D) bags). Under ``kernel="pallas"`` this
+    is ONE pallas_call (the fused cycle kernel); under ``"xla"`` the same
+    math as fill_inline + gather_reduce."""
+    if _check_kernel(kernel) == "pallas":
+        from repro.kernels import ops
+
+        return ops.fill_gather_reduce(storage, fill_slots, fill_rows, slot_ids)
+    return kref.fill_gather_reduce_ref(storage, fill_slots, fill_rows, slot_ids)
 
 
 def make_storage(num_slots: int, dim: int, dtype=jnp.float32) -> jax.Array:

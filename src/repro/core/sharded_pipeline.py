@@ -46,6 +46,7 @@ class ShardedScratchPipe:
         record_stage_times: bool = False,
         planner: str = "host",
         pad_buckets: Optional[Sequence[int]] = None,
+        kernel: str = "xla",
     ):
         """``train_fn(storages, slots_per_shard, batch)`` ->
         (new_storages, aux). ``num_slots`` is the per-shard scratchpad size
@@ -109,6 +110,9 @@ class ShardedScratchPipe:
                     # monotone pad buckets
                     planner=planner,
                     pad_buckets=pad_buckets,
+                    # per-shard [Insert] fills run the same kernel axis; the
+                    # [Train] kernels ride inside the caller's train_fn
+                    kernel=kernel,
                 )
             )
 

@@ -1,3 +1,16 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+#
+# This paper's kernels (the §II-B memory-bound embedding primitives):
+#   gather_reduce.py  — gather+bag-reduce fwd, [Insert]-fill, and the fused
+#                       fill+gather+reduce cycle kernel
+#   grad_coalesce.py  — duplicate->coalesce->scatter SGD backward
+# dispatched through ops.py and the core.scratchpad kernel="xla"|"pallas"
+# axis; bit-parity with the XLA path is the oracle (see kernels/ref.py).
+#
+# QUARANTINE: flash_attention.py and ssd_chunk.py are LM-side kernels kept
+# for the non-DLRM arch configs (models/layers.py, models/mamba2.py). They
+# are deliberately NOT part of the recommendation workload: ops.py imports
+# them lazily, so a DLRM process never loads them. Do not extend them here;
+# grow only the embedding-cache kernels above.

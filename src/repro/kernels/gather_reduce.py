@@ -1,14 +1,33 @@
-"""Pallas TPU kernel: fused embedding gather + bag reduction (the paper's
-memory-bound forward primitive, §II-B).
+"""Pallas TPU kernels: the [Insert]/[Train] forward primitives (paper §II-B).
 
-Design (TPU adaptation of the CUDA gather): the lookup ids are scalar-
-prefetched into SMEM and drive the *index map* of the storage BlockSpec, so
-each grid step DMAs exactly one (1, d_tile) embedding-row tile HBM->VMEM and
-accumulates it into the output bag tile resident in VMEM. The d_tile axis is
-the innermost lane dim (128-aligned); bags revisit their output block across
-the L lookup steps, so the accumulator never leaves VMEM.
+Three kernels share one design language — scalar-prefetched int32 operand
+streams in SMEM drive the *index maps* of the storage BlockSpec, so each
+grid step DMAs exactly one (1, d_tile) embedding-row tile HBM<->VMEM:
 
-grid = (n_bags, L, D // d_tile)
+  * ``gather_reduce``  — embedding gather + bag reduction (the seed kernel).
+    grid (n_bags, L, D//d_tile); bags revisit their output block across the
+    L lookup steps, so the fp32 accumulator never leaves VMEM and the
+    reduction is sequential-in-l by construction (the property the XLA path
+    mirrors for bit-parity, see kernels/ref.py).
+  * ``fill``           — [Insert]-stage drop-mode scatter of fetched rows.
+    Slots are bucket-padded with out-of-bounds sentinels; a prefetched
+    valid mask predicates the write (``pl.when``), the block index is
+    clamped in-range so the DMA is always legal, and an unmodified block
+    writes back its own fetched values (a value-level no-op).
+  * ``fill_gather_reduce`` — the FUSED forward: one pallas_call covering the
+    [Insert]-fill AND the translated-slot gather/reduce of a pipeline
+    cycle. The op stream is ``F fill ops ++ nb*L gather ops`` on the inner
+    grid axis; because the TPU grid executes sequentially, every gather of
+    a just-filled row reads the filled value (intra-kernel RAW through the
+    aliased storage output), and the fill→gather order equals the split
+    engine's intra-cycle order — so the fused kernel is bit-identical to
+    fill-then-gather. Storage is input/output-aliased (in-place fill);
+    bags are a second fp32 output.
+
+Grid sizes come from the pipeline's pow-2/adaptive pad buckets (plan.py):
+static shapes => one cached executable per bucket, the PinnedCache
+discipline. Wrapper-level lane padding and empty-operand guards live in
+kernels/ops.py; these kernels keep the hard ``D % d_tile == 0`` contract.
 """
 from __future__ import annotations
 
@@ -22,7 +41,7 @@ from jax.experimental.pallas import tpu as pltpu
 DEFAULT_D_TILE = 128
 
 
-def _kernel(ids_ref, storage_ref, out_ref):
+def _gather_kernel(ids_ref, storage_ref, out_ref):
     l = pl.program_id(1)
 
     @pl.when(l == 0)
@@ -47,7 +66,7 @@ def gather_reduce(
     assert D % d_tile == 0, (D, d_tile)
     flat_ids = slot_ids.reshape(-1).astype(jnp.int32)
     out = pl.pallas_call(
-        _kernel,
+        _gather_kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=(nb, L, D // d_tile),
@@ -60,3 +79,137 @@ def gather_reduce(
         interpret=interpret,
     )(flat_ids, storage)
     return out
+
+
+def _fill_kernel(slot_ref, valid_ref, rows_ref, st_in_ref, st_out_ref):
+    del slot_ref, st_in_ref
+    i = pl.program_id(0)
+
+    @pl.when(valid_ref[i] == 1)
+    def _write():
+        st_out_ref[...] = rows_ref[...].astype(st_out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("d_tile", "interpret"))
+def fill(
+    storage: jax.Array,
+    fill_slots: jax.Array,
+    rows: jax.Array,
+    *,
+    d_tile: int = DEFAULT_D_TILE,
+    interpret: bool = False,
+) -> jax.Array:
+    """storage (N, D); fill_slots (F,) int32, sentinel-padded with values
+    >= N (dropped); rows (F, D). Returns the filled storage."""
+    (F,) = fill_slots.shape
+    N, D = storage.shape
+    d_tile = min(d_tile, D)
+    assert D % d_tile == 0, (D, d_tile)
+    slots = fill_slots.astype(jnp.int32)
+    valid = (slots < N).astype(jnp.int32)
+    slots = jnp.clip(slots, 0, N - 1)  # block index must stay DMA-legal
+    return pl.pallas_call(
+        _fill_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(F, D // d_tile),
+            in_specs=[
+                pl.BlockSpec((1, d_tile), lambda i, d, s, v: (i, d)),  # rows
+                pl.BlockSpec(
+                    (1, d_tile), lambda i, d, s, v: (s[i], d)
+                ),  # storage (aliased with the output)
+            ],
+            out_specs=pl.BlockSpec((1, d_tile), lambda i, d, s, v: (s[i], d)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((N, D), storage.dtype),
+        input_output_aliases={3: 0},  # (slots=0, valid=1, rows=2, storage=3)
+        interpret=interpret,
+    )(slots, valid, rows, storage)
+
+
+def _make_fused_kernel(F: int, L: int):
+    def _kernel(op_slot_ref, op_valid_ref, rows_ref, st_in_ref, st_out_ref,
+                bags_ref):
+        # The storage output aliases the storage input and the sequential
+        # TPU grid re-fetches the output block per step, so the gather ops
+        # (i >= F) observe every fill op's write — the intra-kernel
+        # [Insert]->[Train] RAW the fused dispatch depends on.
+        del op_slot_ref, st_in_ref
+        i = pl.program_id(1)
+
+        @pl.when((i < F) & (op_valid_ref[i] == 1))
+        def _fill():
+            st_out_ref[...] = rows_ref[...].astype(st_out_ref.dtype)
+
+        @pl.when(i >= F)
+        def _gather():
+            l = (i - F) % L
+
+            @pl.when(l == 0)
+            def _init():
+                bags_ref[...] = jnp.zeros_like(bags_ref)
+
+            bags_ref[...] += st_out_ref[...].astype(bags_ref.dtype)
+
+    return _kernel
+
+
+@functools.partial(jax.jit, static_argnames=("d_tile", "interpret"))
+def fill_gather_reduce(
+    storage: jax.Array,
+    fill_slots: jax.Array,
+    fill_rows: jax.Array,
+    slot_ids: jax.Array,
+    *,
+    d_tile: int = DEFAULT_D_TILE,
+    interpret: bool = False,
+):
+    """Fused [Insert]-fill + gather/bag-reduce: storage (N, D); fill_slots
+    (F,) sentinel-padded; fill_rows (F, D); slot_ids (nb, L) int32.
+    Returns (filled storage (N, D), fp32 bags (nb, D)) from ONE pallas_call.
+
+    Grid (D//d_tile, F + nb*L): the lane axis is OUTER so each d-slice
+    replays the full fill->gather op stream; within a slice the bag block
+    (b, d) is touched only by bag b's L contiguous gather steps, so the
+    VMEM accumulator init-at-l==0 discipline carries over from the plain
+    gather kernel unchanged."""
+    nb, L = slot_ids.shape
+    (F,) = fill_slots.shape
+    N, D = storage.shape
+    d_tile = min(d_tile, D)
+    assert D % d_tile == 0, (D, d_tile)
+    assert F > 0 and nb * L > 0, (F, nb, L)  # empty guards live in ops.py
+    fslots = fill_slots.astype(jnp.int32)
+    valid = (fslots < N).astype(jnp.int32)
+    fslots = jnp.clip(fslots, 0, N - 1)
+    op_slot = jnp.concatenate([fslots, slot_ids.reshape(-1).astype(jnp.int32)])
+    op_valid = jnp.concatenate([valid, jnp.ones((nb * L,), jnp.int32)])
+    storage_out, bags = pl.pallas_call(
+        _make_fused_kernel(F, L),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(D // d_tile, F + nb * L),
+            in_specs=[
+                # fill rows: live for the first F ops, parked on row F-1 after
+                pl.BlockSpec(
+                    (1, d_tile), lambda d, i, s, v: (jnp.minimum(i, F - 1), d)
+                ),
+                # storage (aliased with output 0): the op's target row tile
+                pl.BlockSpec((1, d_tile), lambda d, i, s, v: (s[i], d)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, d_tile), lambda d, i, s, v: (s[i], d)),
+                pl.BlockSpec(
+                    (1, d_tile),
+                    lambda d, i, s, v: (jnp.maximum(i - F, 0) // L, d),
+                ),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((N, D), storage.dtype),
+            jax.ShapeDtypeStruct((nb, D), jnp.float32),
+        ],
+        input_output_aliases={3: 0},  # (op_slot=0, op_valid=1, rows=2, st=3)
+        interpret=interpret,
+    )(op_slot, op_valid, fill_rows, storage)
+    return storage_out, bags

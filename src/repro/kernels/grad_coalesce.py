@@ -1,13 +1,22 @@
-"""Pallas TPU kernel: gradient duplication + coalescing + scatter SGD update
+"""Pallas TPU kernel: gradient duplication + coalescing + scatter update
 (the paper's memory-bound backward primitive, §II-B Fig. 2(b)).
 
 The storage buffer is input/output-aliased; the scalar-prefetched slot ids
 drive the OUTPUT BlockSpec index map, so each grid step brings the target
-embedding row tile into VMEM, accumulates ``-lr * bag_grad`` into it and
-lets Pallas write it back on block change. Duplicate rows within/across bags
-coalesce correctly because the TPU grid executes sequentially — later visits
-of the same row re-read the updated tile (read-modify-write), which is
-exactly the coalescing semantics of Fig. 2(b) without a separate sort pass.
+embedding row tile into VMEM, accumulates the bag's delta into it and lets
+Pallas write it back on block change. Duplicate rows within/across bags
+coalesce correctly because the TPU grid executes sequentially — later
+visits of the same row re-read the updated tile (read-modify-write), which
+is exactly the coalescing semantics of Fig. 2(b) without a separate sort
+pass.
+
+The kernel body is a PURE add of a pre-rounded per-bag delta. The SGD
+scaling (``-lr * bag_grads``) is applied ONCE per bag in the wrapper
+(kernels/ref.py:scatter_deltas) — an in-kernel ``acc += -lr * g`` would
+contract to an FMA (one rounding for mul+add) and break bit-parity with
+XLA's rounded-product-then-scatter-add. It also makes the kernel the
+generic coalescing scatter-add the custom_vjp backward reuses (scatter the
+bag cotangent into a zero buffer).
 
 grid = (n_bags, L, D // d_tile)
 """
@@ -23,40 +32,38 @@ from jax.experimental.pallas import tpu as pltpu
 DEFAULT_D_TILE = 128
 
 
-def _make_kernel(lr: float):
-    def _kernel(ids_ref, grad_ref, st_in_ref, st_out_ref):
-        # The output aliases the storage input, and the sequential TPU grid
-        # re-fetches the output block on revisit, so accumulating through the
-        # OUTPUT ref makes duplicate rows coalesce correctly (read-mod-write).
-        del st_in_ref
-        st_out_ref[...] += (-lr * grad_ref[...]).astype(st_out_ref.dtype)
-
-    return _kernel
+def _kernel(ids_ref, delta_ref, st_in_ref, st_out_ref):
+    # The output aliases the storage input, and the sequential TPU grid
+    # re-fetches the output block on revisit, so accumulating through the
+    # OUTPUT ref makes duplicate rows coalesce correctly (read-mod-write).
+    del st_in_ref
+    st_out_ref[...] += delta_ref[...].astype(st_out_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("lr", "d_tile", "interpret"))
-def coalesce_apply(
+@functools.partial(jax.jit, static_argnames=("d_tile", "interpret"))
+def scatter_add(
     storage: jax.Array,
     slot_ids: jax.Array,
-    bag_grads: jax.Array,
-    lr: float,
+    bag_deltas: jax.Array,
     *,
     d_tile: int = DEFAULT_D_TILE,
     interpret: bool = False,
 ) -> jax.Array:
-    """storage (N, D); slot_ids (nb, L) int32; bag_grads (nb, D)."""
+    """storage (N, D); slot_ids (nb, L) int32; bag_deltas (nb, D) in the
+    storage dtype. Adds each bag's delta to every row it looked up,
+    coalescing duplicates in flat bag-major order (== XLA's ``at[].add``)."""
     nb, L = slot_ids.shape
     N, D = storage.shape
     d_tile = min(d_tile, D)
     assert D % d_tile == 0, (D, d_tile)
     flat_ids = slot_ids.reshape(-1).astype(jnp.int32)
     return pl.pallas_call(
-        _make_kernel(lr),
+        _kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=(nb, L, D // d_tile),
             in_specs=[
-                pl.BlockSpec((1, d_tile), lambda b, l, d, ids: (b, d)),  # grads
+                pl.BlockSpec((1, d_tile), lambda b, l, d, ids: (b, d)),  # deltas
                 pl.BlockSpec(
                     (1, d_tile), lambda b, l, d, ids: (ids[b * L + l], d)
                 ),  # storage (aliased with the output)
@@ -66,6 +73,6 @@ def coalesce_apply(
             ),
         ),
         out_shape=jax.ShapeDtypeStruct((N, D), storage.dtype),
-        input_output_aliases={2: 0},  # storage (ids=0, grads=1) -> output 0
+        input_output_aliases={2: 0},  # storage (ids=0, deltas=1) -> output 0
         interpret=interpret,
-    )(flat_ids, bag_grads, storage)
+    )(flat_ids, bag_deltas, storage)

@@ -1,8 +1,29 @@
 """jit'd public wrappers around the Pallas kernels.
 
 ``interpret`` defaults to True off-TPU (CPU validation per the brief); on a
-real TPU backend the kernels compile natively. Wrappers handle padding /
-flattening so callers use natural shapes.
+real TPU backend the kernels compile natively. Wrappers own everything the
+raw kernels assert away:
+
+  * natural shapes — leading batch/table dims are flattened to (nb, L) and
+    restored on the way out;
+  * empty-operand cycles — zero bags, zero lookups or zero fill rows skip
+    the ``pallas_call`` entirely (the same discipline as the pipeline's
+    empty-dispatch guard);
+  * ragged lane dims — when ``D % d_tile != 0`` (possible only for
+    D > 128 and not a multiple of 128) the lane axis is zero-padded up to
+    the tile and sliced back after. This is a documented correctness
+    fallback: it copies storage and costs the in-place alias, but no
+    shipped config is ragged (D in {8, 32, 128});
+  * differentiation — ``gather_reduce`` and ``fill_gather_reduce`` carry a
+    ``jax.custom_vjp`` whose backward reuses the coalescing scatter-add
+    kernel (grad_coalesce), so ``jax.grad`` straight through the kernel
+    pair matches the reference path.
+
+The embedding-cache primitives (gather_reduce / coalesce_apply / fill /
+fill_gather_reduce) are the paper's workload. ``flash_attention`` and
+``ssd_chunk_scan`` below are LM-side kernels for the unrelated arch configs
+— quarantined behind lazy imports (see kernels/__init__.py), they never
+load in a DLRM process.
 """
 from __future__ import annotations
 
@@ -11,15 +32,69 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import flash_attention as _fa
 from repro.kernels import gather_reduce as _gr
 from repro.kernels import grad_coalesce as _gc
 from repro.kernels import ref as _ref
-from repro.kernels import ssd_chunk as _ssd
 
 
 def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def _lane_pad(D: int) -> int:
+    """Zero-pad amount taking the lane dim to a d_tile multiple (0 = none)."""
+    return (-D) % min(_gr.DEFAULT_D_TILE, D)
+
+
+def _pad_lanes(x, pad: int):
+    return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+
+
+# --------------------------------------------------------------------- #
+# forward: gather + bag reduce
+# --------------------------------------------------------------------- #
+def _gather_call(interpret, storage, flat_slots):
+    pad = _lane_pad(storage.shape[1])
+    if pad:
+        out = _gr.gather_reduce(
+            _pad_lanes(storage, pad), flat_slots, interpret=interpret
+        )
+        return out[:, : storage.shape[1]]
+    return _gr.gather_reduce(storage, flat_slots, interpret=interpret)
+
+
+def _scatter_call(interpret, storage, flat_slots, bag_deltas):
+    pad = _lane_pad(storage.shape[1])
+    if pad:
+        out = _gc.scatter_add(
+            _pad_lanes(storage, pad),
+            flat_slots,
+            _pad_lanes(bag_deltas, pad),
+            interpret=interpret,
+        )
+        return out[:, : storage.shape[1]]
+    return _gc.scatter_add(storage, flat_slots, bag_deltas, interpret=interpret)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _gather_reduce(interpret, n_slots, dtype_name, storage, flat_slots):
+    return _gather_call(interpret, storage, flat_slots)
+
+
+def _gr_fwd(interpret, n_slots, dtype_name, storage, flat_slots):
+    return _gather_call(interpret, storage, flat_slots), (flat_slots,)
+
+
+def _gr_bwd(interpret, n_slots, dtype_name, res, g):
+    # d(storage) = duplicate each bag cotangent to its looked-up rows and
+    # coalesce — exactly the backward kernel, scattered into a zero buffer.
+    (flat_slots,) = res
+    dtype = jnp.dtype(dtype_name)
+    zeros = jnp.zeros((n_slots, g.shape[-1]), dtype)
+    return (_scatter_call(interpret, zeros, flat_slots, g.astype(dtype)), None)
+
+
+_gather_reduce.defvjp(_gr_fwd, _gr_bwd)
 
 
 def gather_reduce(storage, slot_ids, *, interpret=None):
@@ -27,35 +102,138 @@ def gather_reduce(storage, slot_ids, *, interpret=None):
     interpret = _interpret_default() if interpret is None else interpret
     lead = slot_ids.shape[:-1]
     L = slot_ids.shape[-1]
-    flat = slot_ids.reshape(-1, L)
-    out = _gr.gather_reduce(storage, flat, interpret=interpret)
-    return out.reshape(*lead, storage.shape[1]).astype(storage.dtype)
+    D = storage.shape[1]
+    if L == 0 or slot_ids.size == 0:  # empty cycle: no dispatch
+        return jnp.zeros(lead + (D,), storage.dtype)
+    out = _gather_reduce(
+        interpret, storage.shape[0], storage.dtype.name,
+        storage, slot_ids.reshape(-1, L),
+    )
+    return out.reshape(*lead, D).astype(storage.dtype)
 
 
+# --------------------------------------------------------------------- #
+# backward: duplicate + coalesce + scatter SGD update
+# --------------------------------------------------------------------- #
 def coalesce_apply(storage, slot_ids, bag_grads, lr, *, interpret=None):
-    """storage (N, D); slot_ids (..., L); bag_grads (..., D)."""
+    """storage (N, D); slot_ids (..., L); bag_grads (..., D). The SGD delta
+    is pre-rounded per bag (ref.scatter_deltas) so the kernel's sequential
+    accumulation is bit-identical to XLA's scatter-add (no FMA contraction
+    inside the loop)."""
     interpret = _interpret_default() if interpret is None else interpret
     L = slot_ids.shape[-1]
     D = bag_grads.shape[-1]
-    return _gc.coalesce_apply(
-        storage,
-        slot_ids.reshape(-1, L),
-        bag_grads.reshape(-1, D).astype(jnp.float32),
-        float(lr),
-        interpret=interpret,
+    if L == 0 or slot_ids.size == 0:  # empty cycle: no dispatch
+        return storage
+    deltas = _ref.scatter_deltas(storage, bag_grads, float(lr)).reshape(-1, D)
+    return _scatter_call(interpret, storage, slot_ids.reshape(-1, L), deltas)
+
+
+# --------------------------------------------------------------------- #
+# [Insert]-fill (standalone) and the fused fill+gather forward
+# --------------------------------------------------------------------- #
+def fill(storage, fill_slots, rows, *, interpret=None):
+    """storage (N, D); fill_slots (F,) padded with out-of-bounds sentinels
+    (>= N, dropped); rows (F, D). Drop-mode scatter of fetched rows."""
+    interpret = _interpret_default() if interpret is None else interpret
+    if fill_slots.size == 0:  # empty cycle: no dispatch
+        return storage
+    pad = _lane_pad(storage.shape[1])
+    if pad:
+        out = _gr.fill(
+            _pad_lanes(storage, pad), fill_slots, _pad_lanes(rows, pad),
+            interpret=interpret,
+        )
+        return out[:, : storage.shape[1]]
+    return _gr.fill(storage, fill_slots, rows, interpret=interpret)
+
+
+def _fused_call(interpret, storage, fill_slots, fill_rows, flat_slots):
+    pad = _lane_pad(storage.shape[1])
+    if pad:
+        st, bags = _gr.fill_gather_reduce(
+            _pad_lanes(storage, pad), fill_slots, _pad_lanes(fill_rows, pad),
+            flat_slots, interpret=interpret,
+        )
+        D = storage.shape[1]
+        return st[:, :D], bags[:, :D]
+    return _gr.fill_gather_reduce(
+        storage, fill_slots, fill_rows, flat_slots, interpret=interpret
     )
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
+def _fill_gather_reduce(
+    interpret, n_slots, dtype_name, rows_dtype_name,
+    storage, fill_slots, fill_rows, flat_slots,
+):
+    return _fused_call(interpret, storage, fill_slots, fill_rows, flat_slots)
+
+
+def _fgr_fwd(interpret, n_slots, dtype_name, rows_dtype_name,
+             storage, fill_slots, fill_rows, flat_slots):
+    out = _fused_call(interpret, storage, fill_slots, fill_rows, flat_slots)
+    return out, (fill_slots, flat_slots)
+
+
+def _fgr_bwd(interpret, n_slots, dtype_name, rows_dtype_name, res, cts):
+    # Outputs: (new_storage, bags). Both are functions of the post-fill
+    # storage S' = fill(storage, fill_slots, fill_rows):
+    #   d(S') = g_storage + scatter_add(g_bags at flat_slots)   (kernel)
+    #   d(fill_rows) = d(S') at the (valid, unique) filled slots
+    #   d(storage)   = d(S') with the filled slots zeroed (overwritten rows
+    #                  contribute nothing to the original storage)
+    fill_slots, flat_slots = res
+    g_storage, g_bags = cts
+    dtype = jnp.dtype(dtype_name)
+    ds = _scatter_call(
+        interpret, g_storage.astype(dtype), flat_slots, g_bags.astype(dtype)
+    )
+    d_rows = jnp.take(ds, fill_slots, axis=0, mode="fill", fill_value=0)
+    d_rows = jnp.where((fill_slots < n_slots)[:, None], d_rows, 0)
+    d_storage = ds.at[fill_slots].set(0, mode="drop")
+    return (d_storage, None, d_rows.astype(jnp.dtype(rows_dtype_name)), None)
+
+
+_fill_gather_reduce.defvjp(_fgr_fwd, _fgr_bwd)
+
+
+def fill_gather_reduce(storage, fill_slots, fill_rows, slot_ids, *,
+                       interpret=None):
+    """One fused dispatch for a pipeline cycle's [Insert]-fill + gather/
+    bag-reduce: returns (filled storage (N, D), bags (..., D)). Degenerate
+    operands fall back to the single-kernel paths (empty-dispatch guard)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    lead = slot_ids.shape[:-1]
+    L = slot_ids.shape[-1]
+    D = storage.shape[1]
+    if L == 0 or slot_ids.size == 0:
+        return (
+            fill(storage, fill_slots, fill_rows, interpret=interpret),
+            jnp.zeros(lead + (D,), storage.dtype),
+        )
+    if fill_slots.size == 0:
+        return storage, gather_reduce(storage, slot_ids, interpret=interpret)
+    st, bags = _fill_gather_reduce(
+        interpret, storage.shape[0], storage.dtype.name, fill_rows.dtype.name,
+        storage, fill_slots, fill_rows, slot_ids.reshape(-1, L),
+    )
+    return st, bags.reshape(*lead, D).astype(storage.dtype)
+
+
+# --------------------------------------------------------------------- #
+# quarantined LM-side kernels (lazy imports; see kernels/__init__.py)
+# --------------------------------------------------------------------- #
 def ssd_chunk_scan(x, dt, A, Bm, Cm, *, chunk=256, interpret=None):
     """Fused Mamba2/SSD chunk scan (see kernels/ssd_chunk.py). Pads S up to a
     chunk multiple. Returns (y (B,S,nh,hd), h_final (B,nh,hd,ds))."""
+    from repro.kernels import ssd_chunk as _ssd  # noqa: PLC0415 (quarantine)
+
     interpret = _interpret_default() if interpret is None else interpret
     S = x.shape[1]
     Q = min(chunk, S)
     pad = (-S) % Q
     if pad:
-        import jax.numpy as jnp  # noqa: PLC0415
-
         x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
         dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
         Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
@@ -70,6 +248,8 @@ def ssd_chunk_scan(x, dt, A, Bm, Cm, *, chunk=256, interpret=None):
 def flash_attention(
     q, k, v, causal=True, window=None, block_q=128, block_kv=128, interpret=None
 ):
+    from repro.kernels import flash_attention as _fa  # noqa: PLC0415 (quarantine)
+
     interpret = _interpret_default() if interpret is None else interpret
     Sq, Skv = q.shape[1], k.shape[1]
     pq = (-Sq) % min(block_q, max(Sq, 1))

@@ -1,5 +1,27 @@
-"""Pure-jnp oracles for every Pallas kernel (the correctness references the
-per-kernel shape/dtype sweep tests assert against)."""
+"""Pure-jnp oracles for every Pallas kernel — AND the production XLA path.
+
+These are not merely test references: ``repro.core.scratchpad`` dispatches
+its ``kernel="xla"`` axis straight to the functions below, so the XLA and
+Pallas paths share ONE canonical definition of the embedding math, down to
+float-op ordering:
+
+  * gather/reduce accumulates bags SEQUENTIALLY over the lookup axis in
+    fp32 (``b0 + b1 + ... + b(L-1)``), then casts to the storage dtype.
+    A plain ``jnp.sum`` would let XLA reassociate the reduction and the
+    Pallas kernel (which revisits its VMEM accumulator once per lookup,
+    i.e. is sequential by construction) could never be bit-identical.
+  * the backward scatter applies a PRE-ROUNDED per-bag delta
+    (``(-lr * bag_grads).astype(storage.dtype)`` — one multiply rounding,
+    computed once per bag) and then scatter-adds duplicates in flat
+    bag-major order. Keeping the multiply out of the accumulation loop is
+    what makes the Pallas kernel matchable: a fused ``acc += -lr*g`` in the
+    kernel body contracts to an FMA (single rounding for mul+add) and
+    diverges from XLA's rounded-product-then-add in the last ulp.
+
+With both paths pinned to this ordering, ``interpret=True`` Pallas output is
+bit-identical (elementwise) to the XLA path — the correctness oracle the
+kernel-parity suite asserts (tests/test_kernels.py, tests/test_kernel_parity).
+"""
 from __future__ import annotations
 
 import math
@@ -9,23 +31,61 @@ import jax.numpy as jnp
 
 
 def gather_reduce_ref(storage: jax.Array, slot_ids: jax.Array) -> jax.Array:
-    """storage (N, D); slot_ids (..., L) -> (..., D) summed bags."""
-    emb = jnp.take(storage, slot_ids, axis=0)
-    return jnp.sum(emb, axis=-2)
+    """storage (N, D); slot_ids (..., L) -> (..., D) summed bags.
+
+    Sequential-in-l fp32 accumulation (see module docstring), cast back to
+    the storage dtype — the exact op order of the Pallas gather kernel."""
+    if slot_ids.shape[-1] == 0 or slot_ids.size == 0:
+        return jnp.zeros(
+            slot_ids.shape[:-1] + (storage.shape[-1],), storage.dtype
+        )
+    emb = jnp.take(storage, slot_ids, axis=0).astype(jnp.float32)
+    out = emb[..., 0, :]
+    for l in range(1, emb.shape[-2]):
+        out = out + emb[..., l, :]
+    return out.astype(storage.dtype)
+
+
+def scatter_deltas(storage, bag_grads, lr: float) -> jax.Array:
+    """The canonical pre-rounded per-bag SGD delta ``-lr * bag_grads`` in the
+    storage dtype — shared by the XLA scatter and the Pallas kernel wrapper
+    so the product is rounded identically before any accumulation."""
+    return (-lr * bag_grads).astype(storage.dtype)
 
 
 def coalesce_apply_ref(
     storage: jax.Array, slot_ids: jax.Array, bag_grads: jax.Array, lr: float
 ) -> jax.Array:
-    """storage (N, D); slot_ids (nb, L); bag_grads (nb, D).
+    """storage (N, D); slot_ids (..., L); bag_grads (..., D).
     Gradient duplication (bag -> each looked-up row), coalescing of duplicate
-    rows (scatter-add) and SGD update."""
-    nb, L = slot_ids.shape
+    rows (scatter-add in flat bag-major order) and the SGD update."""
+    L = slot_ids.shape[-1]
     D = bag_grads.shape[-1]
-    dup = jnp.broadcast_to(bag_grads[:, None, :], (nb, L, D))
-    return storage.at[slot_ids.reshape(-1)].add(
-        (-lr * dup.reshape(-1, D)).astype(storage.dtype)
-    )
+    if L == 0 or slot_ids.size == 0:
+        return storage
+    deltas = scatter_deltas(storage, bag_grads, lr).reshape(-1, D)
+    nb = deltas.shape[0]
+    dup = jnp.broadcast_to(deltas[:, None, :], (nb, L, D))
+    return storage.at[slot_ids.reshape(-1)].add(dup.reshape(-1, D))
+
+
+def fill_ref(storage: jax.Array, fill_slots: jax.Array, rows: jax.Array):
+    """[Insert]-fill: drop-mode scatter of fetched rows. ``fill_slots`` may
+    be bucket-padded with POSITIVE out-of-bounds sentinels (== num_slots);
+    drop mode discards them (negative indices would wrap)."""
+    return storage.at[fill_slots].set(rows.astype(storage.dtype), mode="drop")
+
+
+def fill_gather_reduce_ref(
+    storage: jax.Array,
+    fill_slots: jax.Array,
+    fill_rows: jax.Array,
+    slot_ids: jax.Array,
+):
+    """Fused [Insert]-fill + [Train]-gather forward: fill lands before the
+    gather (the split engine's intra-cycle order). Returns (storage, bags)."""
+    storage = fill_ref(storage, fill_slots, fill_rows)
+    return storage, gather_reduce_ref(storage, slot_ids)
 
 
 def flash_attention_ref(

@@ -152,7 +152,9 @@ def train_dlrm(args):
     rows = group.total_rows
     slots = max(2048, int(rows * cfg.cache_fraction))
     host = HostEmbeddingTable(rows, cfg.embed_dim, seed=args.seed)
-    trainer = DLRMTrainer(cfg, jax.random.key(args.seed), lr=args.lr)
+    trainer = DLRMTrainer(
+        cfg, jax.random.key(args.seed), lr=args.lr, kernel=args.kernel
+    )
 
     def batches(steps):
         if reader is not None:
@@ -204,6 +206,7 @@ def train_dlrm(args):
     if args.runtime in ("scratchpipe", "strawman", "sharded"):
         kw["executor"] = args.executor
         kw["planner"] = args.planner
+        kw["kernel"] = args.kernel  # runtime-side [Insert] fills
         if args.adaptive_pad:
             # trace-derived fill/evict pad buckets (vs the pow-2/256 default)
             pw, fw = (
@@ -263,8 +266,8 @@ def train_dlrm(args):
         else "synthetic"
     )
     print(
-        f"runtime={args.runtime} source={source} tables={group.num_tables} "
-        f"rows={list(group.rows)}"
+        f"runtime={args.runtime} source={source} kernel={args.kernel} "
+        f"tables={group.num_tables} rows={list(group.rows)}"
     )
     if args.record_trace:
         print(f"recorded trace -> {args.record_trace}")
@@ -308,6 +311,14 @@ def main():
         default="host",
         help="[Plan] placement: 'device' keeps PlanState on-accelerator and "
         "ships raw ids instead of pre-translated slots (bit-identical)",
+    )
+    ap.add_argument(
+        "--kernel",
+        choices=("xla", "pallas"),
+        default="xla",
+        help="embedding-primitive implementation: 'pallas' runs the fused "
+        "fill+gather+reduce forward and coalesce+scatter backward cycle "
+        "kernels (interpret-mode off-TPU; bit-identical to 'xla')",
     )
     ap.add_argument(
         "--adaptive-pad",
