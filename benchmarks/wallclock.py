@@ -596,10 +596,12 @@ def attach_baseline(result: dict, baseline: dict) -> dict:
 # ---- CI perf-regression gate ------------------------------------------------
 # The checked-in BENCH_wallclock.json carries a "smoke" section recorded at
 # the gate sizing below; CI re-runs the same sizing and fails on collapses
-# beyond the noise band. Thresholds are deliberately loose — CI runners are
-# not the recording machine — so the gate catches order-of-magnitude
-# regressions (a new per-cycle sync, a per-step recompile), not single-%
-# noise.
+# beyond the noise band. The gate only arms when the baseline's machine-class
+# provenance matches the runner (see gate_skip_reason) — on a different
+# machine class it skips loudly instead of stretching the threshold until it
+# can mask real regressions. Within a class the threshold is still generous:
+# it catches order-of-magnitude collapses (a new per-cycle sync, a per-step
+# recompile), not single-% noise.
 GATE_WARMUP, GATE_STEPS, GATE_PLANNER_STEPS = 8, 10, 20
 
 
@@ -609,6 +611,44 @@ def _planner_key(p: dict) -> tuple:
         p.get("placement", "host"),
         p.get("mode", "memoize" if p.get("memoize") else "naive"),
     )
+
+
+# What makes two runners comparable for a perf ratio: architecture, core
+# count, and accelerator backend. Software versions (python/jax) and the
+# kernel build in the platform string move between images without changing
+# the machine class, so they deliberately do NOT gate.
+MACHINE_CLASS_KEYS = ("machine", "cpus", "backend")
+
+
+def machine_class(info: Optional[dict]) -> Optional[tuple]:
+    if not info:
+        return None
+    return tuple(info.get(k) for k in MACHINE_CLASS_KEYS)
+
+
+def gate_skip_reason(
+    baseline: dict, current: Optional[dict] = None
+) -> Optional[str]:
+    """The gate's ratios only mean anything against a baseline recorded on
+    the same machine class — a loose cross-machine threshold silently
+    absorbs real regressions (a 0.35 floor vs a 2x-faster recording box
+    hides a 2.8x collapse). Returns the human-readable skip reason when the
+    baseline must not be used, None when the gate may run."""
+    base_cls = machine_class(baseline.get("machine"))
+    cur_cls = machine_class(current if current is not None else machine_info())
+    if base_cls is None:
+        return (
+            "baseline carries no machine provenance — cannot verify it was "
+            "recorded on this machine class; re-record with --with-smoke"
+        )
+    if base_cls != cur_cls:
+        diff = ", ".join(
+            f"{k}: baseline={b!r} vs runner={c!r}"
+            for k, b, c in zip(MACHINE_CLASS_KEYS, base_cls, cur_cls)
+            if b != c
+        )
+        return f"baseline machine class does not match this runner ({diff})"
+    return None
 
 
 def regression_gate(
@@ -779,12 +819,22 @@ def main():
     if args.gate:
         with open(args.gate) as f:
             gate_baseline = json.load(f)
-        problems = regression_gate(result, gate_baseline, args.gate_ratio)
-        for p in problems:
-            print(f"  [FAIL][gate] {p}")
-        failures += problems
-        if not problems:
-            print(f"  [PASS] perf gate vs {args.gate}")
+        skip = gate_skip_reason(gate_baseline)
+        if skip:
+            # loudly NOT a pass: a cross-machine ratio would need a
+            # threshold loose enough to mask real regressions
+            print(f"  [SKIP][gate] {skip}")
+            print(
+                "  [SKIP][gate] perf gate not applied — re-record the "
+                "baseline on this machine class (--with-smoke) to arm it"
+            )
+        else:
+            problems = regression_gate(result, gate_baseline, args.gate_ratio)
+            for p in problems:
+                print(f"  [FAIL][gate] {p}")
+            failures += problems
+            if not problems:
+                print(f"  [PASS] perf gate vs {args.gate}")
     if failures:
         raise SystemExit(1)
 

@@ -10,9 +10,14 @@ Registered runtimes (the paper's four designs + the §IV-B straw-man):
     strawman     — dynamic cache, no pipelining (§IV-B)
     sharded      — per-table-partition ScratchPipe managers (§VI-G)
 
+plus the read-only serving variants (queue-as-lookahead inference path):
+
+    nocache-serve / static-serve / scratchpipe-serve
+
 Every factory takes ``(host_table, train_fn, **kwargs)``; multi-table
 kwargs (``table_group``, ``slot_budgets``) are honored where the design
-supports them and rejected where it cannot.
+supports them and rejected where it cannot. Serving factories require
+``train_fn=None`` — they never write back.
 """
 from __future__ import annotations
 
@@ -66,7 +71,12 @@ def register_runtime(name: str):
 
 def _ensure_registered() -> None:
     # importing the modules runs their @register_runtime decorators
-    from repro.core import pipeline, sharded_pipeline, static_cache  # noqa: F401
+    from repro.core import (  # noqa: F401
+        pipeline,
+        serving_cache,
+        sharded_pipeline,
+        static_cache,
+    )
 
 
 def available_runtimes() -> List[str]:

@@ -1,39 +1,38 @@
-"""Serving launcher: batched prefill + greedy decode.
+"""Serving launcher: LM prefill+decode, or the embedding lookup tier.
 
-``python -m repro.launch.serve --arch <id> --smoke --batch 4 --prompt-len 32
---gen 16`` runs prefill over a synthetic prompt batch then streams decode
-steps against the KV/SSM cache.
+LM archs (batched prefill + greedy decode against the KV/SSM cache):
+
+    python -m repro.launch.serve --arch <id> --smoke --batch 4 \
+        --prompt-len 32 --gen 16
+
+Embedding serving (the DLRM lookup tier through a read-only cache runtime —
+the queue-as-lookahead pipeline, driven either from a recorded serving
+trace or a synthetic scenario):
+
+    python -m repro.launch.serve --embedding --design scratchpipe-serve \
+        --scenario inference_mix --steps 64 --depth 2
+    python -m repro.launch.serve --embedding --trace /path/to/trace --depth 2
 """
 from __future__ import annotations
 
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.configs import get_config, get_smoke_config
-from repro.configs.base import ShapeSpec
-from repro.launch.mesh import make_host_mesh, make_production_mesh
-from repro.models import api
+def _serve_lm(args) -> None:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
 
-
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+    from repro.configs import get_config, get_smoke_config
+    from repro.configs.base import ShapeSpec
+    from repro.launch.mesh import make_host_mesh, make_production_mesh
+    from repro.models import api
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if cfg.family == "encoder":
         raise SystemExit("encoder-only arch has no decode step")
     mesh = make_host_mesh() if args.smoke else make_production_mesh()
-    total = args.prompt_len + args.gen
     shape = ShapeSpec("serve", args.prompt_len, args.batch, "prefill")
 
     with jax.set_mesh(mesh):
@@ -69,6 +68,114 @@ def main():
               f"({dt / max(args.gen - 1, 1) * 1e3:.1f} ms/step/batch)")
         for b in range(min(args.batch, 2)):
             print(f"  sample[{b}]: {gen[b].tolist()}")
+
+
+def _serve_embedding(args) -> None:
+    import numpy as np
+
+    from repro.core.host_table import HostEmbeddingTable
+    from repro.core.runtime import make_runtime
+    from repro.core.table_group import TableGroup
+    from repro.serving import replay_serving, summarize_latencies
+
+    if args.trace:
+        from repro.traces.format import TraceReader
+
+        reader = TraceReader(args.trace)
+        group = reader.group
+        steps = reader.num_batches if args.steps is None else min(
+            args.steps, reader.num_batches
+        )
+        batches = [reader.batch(i)[0] for i in range(steps)]
+        src = f"trace {args.trace} ({steps} batches)"
+    else:
+        from repro.traces.scenarios import scenario_batches
+
+        group = TableGroup.uniform(args.tables, args.rows, args.dim)
+        steps = args.steps if args.steps is not None else 64
+        batches = [
+            gids
+            for gids, _ in scenario_batches(
+                args.scenario,
+                group,
+                steps,
+                batch_size=args.batch,
+                lookups_per_table=args.lookups,
+                seed=args.seed,
+            )
+        ]
+        src = f"scenario {args.scenario} ({steps} batches)"
+
+    host = HostEmbeddingTable(group.total_rows, group.dim, seed=args.seed + 1)
+    kwargs = dict(kernel=args.kernel)
+    if args.design == "scratchpipe-serve":
+        num_slots = max(
+            int(group.total_rows * args.cache_frac),
+            sum(
+                min(s.rows, group.window_floor(args.batch * args.lookups,
+                                               window=args.depth + 2))
+                for s in group.tables
+            ),
+        )
+        kwargs.update(num_slots=num_slots, window=args.depth,
+                      table_group=group)
+    elif args.design == "static-serve":
+        from repro.traces.profiling import profile_hot_ids
+
+        kwargs.update(
+            hot_ids=profile_hot_ids(batches[: max(2, len(batches) // 4)],
+                                    group, args.cache_frac)
+        )
+    backend = make_runtime(args.design, host, None, **kwargs)
+
+    print(f"serving {src} through {args.design} at queue depth {args.depth}")
+    res = replay_serving(backend, batches, depth=args.depth)
+    lat = res["latency"]
+    print(
+        f"served {res['served']} micro-batches: "
+        f"p50={lat['p50_ms']:.2f}ms p99={lat['p99_ms']:.2f}ms "
+        f"{res['lookups_per_s']:,.0f} lookups/s"
+    )
+    print(
+        f"hit_rate={res['hit_rate']:.3f} "
+        f"hit_lookup_rate={res['hit_lookup_rate']:.3f} "
+        f"emergency_rate={res['emergency_rate']:.3f} "
+        f"(post-warmup, warmup={res['warmup']})"
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="LM arch id (LM serving)")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    emb = ap.add_argument_group("embedding serving")
+    emb.add_argument(
+        "--embedding", action="store_true",
+        help="serve the DLRM embedding lookup tier instead of an LM arch",
+    )
+    emb.add_argument("--design", default="scratchpipe-serve")
+    emb.add_argument("--trace", default=None, help="recorded serving trace dir")
+    emb.add_argument("--scenario", default="inference_mix")
+    emb.add_argument("--steps", type=int, default=None)
+    emb.add_argument("--depth", type=int, default=2,
+                     help="queue depth = look-ahead window")
+    emb.add_argument("--tables", type=int, default=4)
+    emb.add_argument("--rows", type=int, default=20_000)
+    emb.add_argument("--dim", type=int, default=32)
+    emb.add_argument("--lookups", type=int, default=8)
+    emb.add_argument("--cache-frac", type=float, default=0.25)
+    emb.add_argument("--kernel", default="xla", choices=("xla", "pallas"))
+    args = ap.parse_args()
+    if args.embedding:
+        _serve_embedding(args)
+    elif args.arch is not None:
+        _serve_lm(args)
+    else:
+        ap.error("pick a serving mode: --arch <id> (LM) or --embedding (DLRM)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,6 @@
+"""Online serving front-end: concurrent single-request lookups micro-batched
+into read-only cache pipeline cycles (the queue is the look-ahead window)."""
+from repro.serving.driver import replay_serving, summarize_latencies
+from repro.serving.frontend import EmbeddingServer
+
+__all__ = ["EmbeddingServer", "replay_serving", "summarize_latencies"]

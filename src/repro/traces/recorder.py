@@ -137,3 +137,31 @@ def record_trace(
         path, group, batches_per_shard=batches_per_shard, provenance=provenance
     )
     return rec.record(stream, steps)
+
+
+def record_serving_trace(
+    path: str,
+    group: TableGroup,
+    stream: Iterator[Tuple[np.ndarray, Any]],
+    *,
+    steps: Optional[int] = None,
+    provenance: Optional[Dict[str, Any]] = None,
+    batches_per_shard: int = 256,
+) -> int:
+    """Snapshot a SERVING trace: the id stream only. Payloads are stripped
+    to their ids before recording (a lookup request has no label and will
+    never produce a gradient), so the on-disk record carries zero dense
+    features and the trace replays as pure (ids, {"sparse_ids"}) items for
+    the read-only serving runtimes. Provenance is tagged ``kind=serving``
+    so benchmarks can refuse to train on a label-free trace."""
+    prov = {"kind": "serving", **dict(provenance or {})}
+
+    def strip(items):
+        for gids, payload in items:
+            sp = payload.get("sparse_ids") if isinstance(payload, dict) else None
+            yield gids, ({"sparse_ids": sp} if sp is not None else {})
+
+    rec = TraceRecorder(
+        path, group, batches_per_shard=batches_per_shard, provenance=prov
+    )
+    return rec.record(strip(stream), steps)

@@ -10,7 +10,13 @@ cache runtime drives it unchanged, plus:
   [Plan] never stalls on shard I/O. Because the reader is position-
   addressed (fixed-size records), the prefetcher is purely a warm-up: if
   the consumer outruns it, the batch is read synchronously — the delivered
-  sequence is bit-identical either way.
+  sequence is bit-identical either way. Positions being decoded are
+  tracked in an in-flight set under the condition variable, so consumer
+  and prefetcher never decode the same position twice: a consumer landing
+  on an in-flight position waits for the decode instead of re-reading it,
+  and a position the consumer claims is skipped by the prefetcher. A
+  ``seek()`` bumps a generation counter that invalidates any decode still
+  in flight (its result is discarded, never delivered or cached).
 
 * **Exact-position checkpointing.** ``state_dict()`` records the batch
   cursor; ``TraceReplayStream(path, start=state["consumed"])`` (or
@@ -19,8 +25,9 @@ cache runtime drives it unchanged, plus:
 """
 from __future__ import annotations
 
+import os
 import threading
-from typing import Any, Dict, List, Optional, Tuple, Union
+from typing import Any, Dict, List, Optional, Set, Tuple, Union
 
 import numpy as np
 
@@ -37,8 +44,12 @@ class TraceReplayStream:
         prefetch: int = 8,
     ):
         """Replay batches ``[start, stop)`` of the trace (``stop=None`` =
-        to the end; a ``stop`` beyond the trace is clamped)."""
-        self._reader = trace if isinstance(trace, TraceReader) else TraceReader(trace)
+        to the end; a ``stop`` beyond the trace is clamped). ``trace`` is a
+        trace directory path or any reader exposing the ``TraceReader``
+        surface (``num_batches`` / ``batch`` / ``global_ids`` / ``group``)."""
+        self._reader = (
+            TraceReader(trace) if isinstance(trace, (str, os.PathLike)) else trace
+        )
         self._n = self._reader.num_batches
         if stop is not None:
             self._n = min(self._n, max(0, int(stop)))
@@ -49,6 +60,12 @@ class TraceReplayStream:
         self._cache: Dict[int, Tuple[np.ndarray, dict]] = {}
         self._cv = threading.Condition()
         self._stop = False
+        # positions with a decode in progress (consumer or prefetcher):
+        # guarded by _cv; whoever claims a position is the only decoder.
+        self._inflight: Set[int] = set()
+        # seek() bumps the generation; a decode started under an older
+        # generation discards its result instead of caching/delivering it.
+        self._gen = 0
         self._thread: Optional[threading.Thread] = None
         if self._depth > 0:
             self._thread = threading.Thread(
@@ -66,7 +83,11 @@ class TraceReplayStream:
                 want = None
                 while not self._stop:
                     want = next(
-                        (p for p in self._window() if p not in self._cache),
+                        (
+                            p
+                            for p in self._window()
+                            if p not in self._cache and p not in self._inflight
+                        ),
                         None,
                     )
                     if want is not None:
@@ -74,9 +95,24 @@ class TraceReplayStream:
                     self._cv.wait()
                 if self._stop:
                     return
-            item = self._reader.batch(want)  # decode outside the lock
+                gen = self._gen
+                self._inflight.add(want)
+            try:
+                item = self._reader.batch(want)  # decode outside the lock
+            except BaseException:
+                with self._cv:
+                    self._inflight.discard(want)
+                    self._cv.notify_all()
+                raise
             with self._cv:
-                if want in self._window():
+                self._inflight.discard(want)
+                # a decode invalidated by seek() (or that slid out of the
+                # window / raced close()) is discarded, never cached
+                if (
+                    gen == self._gen
+                    and not self._stop
+                    and want in self._window()
+                ):
                     self._cache[want] = item
                 self._cv.notify_all()
 
@@ -90,8 +126,27 @@ class TraceReplayStream:
                 raise StopIteration
             pos = self._pos
             item = self._cache.pop(pos, None)
+            if item is None and pos in self._inflight:
+                # the prefetcher is already decoding this position — wait
+                # for it instead of issuing a duplicate synchronous read
+                while (
+                    pos in self._inflight
+                    and pos not in self._cache
+                    and not self._stop
+                ):
+                    self._cv.wait()
+                item = self._cache.pop(pos, None)
+            if item is None:
+                # claim the position so the prefetcher skips it: exactly
+                # one decode per position, prefetch on or off
+                self._inflight.add(pos)
         if item is None:
-            item = self._reader.batch(pos)
+            try:
+                item = self._reader.batch(pos)
+            finally:
+                with self._cv:
+                    self._inflight.discard(pos)
+                    self._cv.notify_all()
         with self._cv:
             self._pos = pos + 1
             for k in [k for k in self._cache if k < self._pos]:
@@ -141,11 +196,15 @@ class TraceReplayStream:
         return {"consumed": self._pos, "num_batches": self._n}
 
     def seek(self, pos: int) -> None:
-        """Jump the cursor to an exact batch position."""
+        """Jump the cursor to an exact batch position. Cached batches are
+        dropped and any decode still in flight is invalidated (its result
+        is discarded when it completes — it can never be delivered for the
+        post-seek schedule)."""
         if not (0 <= pos <= self._n):
             raise ValueError(f"seek {pos} out of range [0, {self._n}]")
         with self._cv:
             self._pos = pos
+            self._gen += 1  # invalidate in-flight decodes
             self._cache.clear()
             self._cv.notify_all()
 
@@ -165,12 +224,22 @@ class TraceReplayStream:
         )
 
     # -- lifecycle ----------------------------------------------------------
-    def close(self) -> None:
+    def close(self, timeout: Optional[float] = 5.0) -> None:
+        """Stop the prefetcher and join its thread. If the thread is stuck
+        in a decode past ``timeout`` seconds, the thread handle is KEPT (a
+        later ``close()`` can reap it) and a TimeoutError is raised — a
+        silently abandoned live thread would keep reading shards after the
+        caller believes the stream is closed. Idempotent once joined."""
         with self._cv:
             self._stop = True
             self._cv.notify_all()
         if self._thread is not None:
-            self._thread.join(timeout=5.0)
+            self._thread.join(timeout=timeout)
+            if self._thread.is_alive():
+                raise TimeoutError(
+                    f"prefetch thread still decoding after {timeout}s; "
+                    "call close() again to reap it"
+                )
             self._thread = None
 
     def __enter__(self):

@@ -24,6 +24,11 @@ Scenario catalog (select by name via :func:`scenario_batches`):
     cold_start   new-item injection: the active id frontier grows every
                  step and ``new_share`` of lookups target freshly launched
                  items that no profiling pass has ever seen.
+    inference_mix
+                 serving traffic: label-free request micro-batches blending
+                 a stationary personalized head, a drifting trending
+                 middle, and a uniform exploration tail — the id stream an
+                 online recommender's lookup tier actually sees.
 """
 from __future__ import annotations
 
@@ -203,11 +208,56 @@ def cold_start_batches(
         yield _emit(rng, group, np.stack(cols, axis=1), num_dense_features)
 
 
+def inference_mix_batches(
+    group: TableGroup,
+    steps: int,
+    *,
+    batch_size: int = 2048,
+    lookups_per_table: int = 20,
+    locality: str = "medium",
+    num_dense_features: int = 0,  # serving requests carry no dense features
+    seed: int = 0,
+    trend_share: float = 0.3,
+    explore_share: float = 0.05,
+    trend_drift_rate: float = 0.01,
+) -> Iterator[Tuple[np.ndarray, dict]]:
+    """Online inference traffic: each lookup is drawn from a three-way mix —
+    a stationary Zipf head (returning users' personalized rows), a
+    ``trend_share`` slice from a FAST-drifting Zipf window (trending items,
+    rotating ``trend_drift_rate * rows`` per step — an order of magnitude
+    faster than the training ``drift`` scenario), and an ``explore_share``
+    uniform tail (exploration / cold candidates). Payloads are label-free
+    (no gradient will ever exist for a serving lookup); dense features
+    default to none and the recorder's serving mode strips the payload to
+    ids regardless."""
+    s = LOCALITY_S[locality]
+    rng = np.random.default_rng(seed)
+    size = (batch_size, lookups_per_table)
+    for t in range(steps):
+        cols = []
+        for spec in group.tables:
+            head = sample_ids_s(rng, spec.rows, size, s)
+            shift = int(round(t * trend_drift_rate * spec.rows))
+            trend_ranks = zipf_ranks(rng, spec.rows, size, s)
+            trend = scatter_ranks((trend_ranks + shift) % spec.rows, spec.rows)
+            explore = rng.integers(0, spec.rows, size=size, dtype=np.int64)
+            u = rng.random(size)
+            ids = np.where(u < explore_share, explore, head)
+            ids = np.where(
+                (u >= explore_share) & (u < explore_share + trend_share),
+                trend,
+                ids,
+            )
+            cols.append(ids)
+        yield _emit(rng, group, np.stack(cols, axis=1), num_dense_features)
+
+
 SCENARIOS: Dict[str, Callable[..., Iterator]] = {
     "drift": drift_batches,
     "flash_crowd": flash_crowd_batches,
     "diurnal": diurnal_batches,
     "cold_start": cold_start_batches,
+    "inference_mix": inference_mix_batches,
 }
 
 

@@ -1,0 +1,181 @@
+"""The hypothesis compatibility layer must keep asserting everywhere.
+
+This container ships no ``hypothesis``; property tests import it through the
+guarded pattern in ``tests/_hypothesis_compat.py`` so they run as fixed
+deterministic example sweeps instead of skipping (or, worse, aborting
+collection). Two things keep that true over time:
+
+H1  meta: every ``from hypothesis import`` in tests/ sits inside a
+    try/except ImportError with the ``_hypothesis_compat`` fallback — a new
+    hard import would silently turn the whole module into a collection
+    error on this container.
+H2  shim semantics: the fallback really executes the property body
+    FALLBACK_EXAMPLES times, deterministically (same drawn values every
+    run), with strategies honoring their bounds — so a "passing" property
+    under the shim means the assertions actually ran on real examples.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+
+import numpy as np
+
+from _hypothesis_compat import FALLBACK_EXAMPLES
+
+TESTS_DIR = pathlib.Path(__file__).parent
+
+
+# ---------------------------------------------------------------------------
+# H1: all hypothesis imports in tests/ are guarded with the compat fallback
+# ---------------------------------------------------------------------------
+def _hypothesis_import_guards(path: pathlib.Path):
+    """Yield (lineno, guarded) for each ``from hypothesis import`` node."""
+    tree = ast.parse(path.read_text())
+    # map every node importing hypothesis to the Try node containing it
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Try):
+            continue
+        body_imports = [
+            n
+            for n in ast.walk(ast.Module(body=node.body, type_ignores=[]))
+            if isinstance(n, ast.ImportFrom) and n.module == "hypothesis"
+        ]
+        if not body_imports:
+            continue
+        catches_import_error = any(
+            h.type is not None
+            and any(
+                getattr(name, "id", None) in ("ImportError", "ModuleNotFoundError")
+                for name in ast.walk(h.type)
+            )
+            for h in node.handlers
+        )
+        falls_back_to_compat = any(
+            isinstance(n, ast.ImportFrom) and n.module == "_hypothesis_compat"
+            for h in node.handlers
+            for n in ast.walk(ast.Module(body=h.body, type_ignores=[]))
+        )
+        for imp in body_imports:
+            yield imp.lineno, catches_import_error and falls_back_to_compat
+    # imports NOT inside any Try are unguarded by construction
+    guarded_linenos = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Try):
+            for n in ast.walk(ast.Module(body=node.body, type_ignores=[])):
+                if isinstance(n, ast.ImportFrom) and n.module == "hypothesis":
+                    guarded_linenos.add(n.lineno)
+    for node in ast.walk(tree):
+        if (
+            isinstance(node, ast.ImportFrom)
+            and node.module == "hypothesis"
+            and node.lineno not in guarded_linenos
+        ):
+            yield node.lineno, False
+
+
+def test_every_hypothesis_import_is_guarded():
+    offenders = []
+    for path in sorted(TESTS_DIR.glob("test_*.py")):
+        for lineno, guarded in _hypothesis_import_guards(path):
+            if not guarded:
+                offenders.append(f"{path.name}:{lineno}")
+    assert not offenders, (
+        "hard 'from hypothesis import' outside the try/except-ImportError + "
+        "_hypothesis_compat fallback pattern (would abort collection on "
+        f"containers without hypothesis): {offenders}"
+    )
+
+
+def test_guard_pattern_is_actually_in_use():
+    # the meta-test is vacuous if nobody imports hypothesis at all
+    uses = [
+        path.name
+        for path in TESTS_DIR.glob("test_*.py")
+        if "from hypothesis import" in path.read_text()
+    ]
+    assert uses, "no property-test modules found — did the pattern move?"
+
+
+# ---------------------------------------------------------------------------
+# H2: the fallback shim asserts something everywhere
+# ---------------------------------------------------------------------------
+def test_shim_runs_every_example():
+    from _hypothesis_compat import given, st
+
+    seen = []
+
+    @given(st.integers(0, 100), st.booleans())
+    def prop(n, b):
+        seen.append((n, b))
+        assert 0 <= n <= 100
+
+    prop()
+    assert len(seen) == FALLBACK_EXAMPLES
+    assert len(set(seen)) > 1  # not one example repeated
+
+
+def test_shim_is_deterministic_across_runs():
+    from _hypothesis_compat import given, settings, st
+
+    def collect():
+        drawn = []
+
+        @settings(deadline=None)
+        @given(st.integers(-5, 5), st.floats(0.0, 1.0), st.sampled_from("abc"))
+        def prop(n, x, c):
+            drawn.append((n, x, c))
+
+        prop()
+        return drawn
+
+    assert collect() == collect()
+
+
+def test_shim_strategies_respect_bounds():
+    from _hypothesis_compat import given, st
+
+    @given(st.integers(3, 7), st.floats(-1.0, 1.0), st.sampled_from([10, 20]))
+    def prop(n, x, c):
+        assert 3 <= n <= 7 and isinstance(n, int)
+        assert -1.0 <= x <= 1.0
+        assert c in (10, 20)
+
+    prop()
+
+
+def test_shim_data_strategy_draws():
+    from _hypothesis_compat import given, st
+
+    draws = []
+
+    @given(st.data())
+    def prop(data):
+        v = data.draw(st.integers(0, 3))
+        draws.append(v)
+        assert 0 <= v <= 3
+
+    prop()
+    assert len(draws) == FALLBACK_EXAMPLES
+
+
+def test_shim_rng_is_independent_per_example():
+    # each example reseeds: example k's draws depend only on k, not on how
+    # many strategies earlier examples consumed (replay stability)
+    from _hypothesis_compat import given, st
+
+    first = []
+
+    @given(st.integers(0, 10**9))
+    def one(n):
+        first.append(n)
+
+    two_first = []
+
+    @given(st.integers(0, 10**9), st.integers(0, 10**9))
+    def two(a, b):
+        two_first.append(a)
+
+    one()
+    two()
+    assert first == two_first

@@ -1,0 +1,182 @@
+"""TraceReplayStream prefetch-concurrency regressions.
+
+R1  exactly-once decode: consumer and prefetcher never decode the same
+    position twice, whether the consumer outruns the prefetcher or not
+    (counting-reader stub; prefetch on and off).
+R2  close() never silently abandons a live prefetch thread: a join timeout
+    raises (keeping the thread handle) and a later close() reaps it.
+R3  seek() invalidates decodes in flight: a result decoded for the
+    pre-seek schedule is never delivered or cached after the seek.
+
+The stubs exercise only the reader surface the stream touches
+(``num_batches`` / ``batch`` / ``global_ids``), which TraceReplayStream
+accepts duck-typed (anything that is not a path is used as a reader).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import Counter
+
+import numpy as np
+import pytest
+
+from repro.traces.replay import TraceReplayStream
+
+
+class CountingReader:
+    """Position-addressed reader that counts decodes per position."""
+
+    def __init__(self, n: int = 24, delay: float = 0.0):
+        self.num_batches = n
+        self.delay = delay
+        self.calls: Counter = Counter()
+        self._lock = threading.Lock()
+        self.group = None
+
+    def _payload(self, i: int):
+        ids = np.full((2, 1, 3), i, dtype=np.int64)
+        return ids, {"dense": np.zeros((2, 1), np.float32), "pos": i}
+
+    def batch(self, i: int):
+        with self._lock:
+            self.calls[i] += 1
+        if self.delay:
+            time.sleep(self.delay)
+        return self._payload(i)
+
+    def global_ids(self, i: int):
+        return self._payload(i)[0]
+
+
+class GatedReader(CountingReader):
+    """Reader whose decode blocks until released — deterministic
+    close-during-decode / seek-during-decode windows."""
+
+    def __init__(self, n: int = 24):
+        super().__init__(n)
+        self.started = threading.Event()  # a decode has entered batch()
+        self.release = threading.Event()  # lets the blocked decode finish
+        self.gate_on: set = set(range(n))  # positions that block
+
+    def batch(self, i: int):
+        with self._lock:
+            self.calls[i] += 1
+        if i in self.gate_on:
+            self.started.set()
+            assert self.release.wait(timeout=10.0), "test deadlock"
+        return self._payload(i)
+
+
+def _drain(stream, n):
+    return [payload["pos"] for _, payload in (next(stream) for _ in range(n))]
+
+
+# ---------------------------------------------------------------------------
+# R1: exactly one decode per position
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("prefetch", [0, 4])
+def test_exactly_once_decode(prefetch):
+    reader = CountingReader(n=24)
+    with TraceReplayStream(reader, prefetch=prefetch) as s:
+        seq = _drain(s, 24)
+        with pytest.raises(StopIteration):
+            next(s)
+    assert seq == list(range(24))
+    assert reader.calls == Counter({i: 1 for i in range(24)})
+
+
+def test_exactly_once_decode_fast_consumer():
+    # the consumer outruns the slow prefetcher: pre-fix, every step the
+    # consumer re-decoded the position the prefetch thread was already on
+    reader = CountingReader(n=16, delay=0.01)
+    with TraceReplayStream(reader, prefetch=8) as s:
+        seq = _drain(s, 16)
+    assert seq == list(range(16))
+    dupes = {i: c for i, c in reader.calls.items() if c != 1}
+    assert not dupes, f"positions decoded more than once: {dupes}"
+    assert len(reader.calls) == 16
+
+
+def test_exactly_once_decode_slow_consumer():
+    # prefetcher runs ahead; the consumer only ever pops the cache
+    reader = CountingReader(n=12)
+    with TraceReplayStream(reader, prefetch=4) as s:
+        out = []
+        for _ in range(12):
+            time.sleep(0.002)  # let the prefetcher stay ahead
+            out.append(next(s)[1]["pos"])
+    assert out == list(range(12))
+    assert reader.calls == Counter({i: 1 for i in range(12)})
+
+
+# ---------------------------------------------------------------------------
+# R2: close() vs a decode stuck in the reader
+# ---------------------------------------------------------------------------
+def test_close_during_decode_raises_then_reaps():
+    reader = GatedReader(n=8)
+    s = TraceReplayStream(reader, prefetch=2)
+    assert reader.started.wait(timeout=10.0)
+    # the prefetch thread is blocked inside reader.batch(): a short join
+    # must NOT pretend the stream closed cleanly
+    with pytest.raises(TimeoutError):
+        s.close(timeout=0.05)
+    thread = s._thread
+    assert thread is not None and thread.is_alive()
+    reader.release.set()
+    s.close(timeout=10.0)  # reaps the (now finishable) thread
+    assert s._thread is None
+    assert not thread.is_alive()
+
+
+def test_close_result_discarded_not_cached():
+    reader = GatedReader(n=8)
+    s = TraceReplayStream(reader, prefetch=2)
+    assert reader.started.wait(timeout=10.0)
+    with s._cv:
+        s._stop = True
+        s._cv.notify_all()
+    reader.release.set()
+    s.close(timeout=10.0)
+    assert s._cache == {}  # the post-stop completion was dropped
+
+
+# ---------------------------------------------------------------------------
+# R3: seek() invalidates in-flight decodes
+# ---------------------------------------------------------------------------
+def test_seek_during_decode_invalidates():
+    reader = GatedReader(n=16)
+    reader.gate_on = {0}  # only position 0 blocks
+    s = TraceReplayStream(reader, prefetch=2)
+    try:
+        assert reader.started.wait(timeout=10.0)  # prefetcher decoding 0
+        s.seek(5)
+        reader.release.set()
+        # the stale batch-0 decode must be discarded: delivered sequence
+        # starts exactly at the seek target
+        seq = _drain(s, 4)
+        assert seq == [5, 6, 7, 8]
+        assert 0 not in s._cache
+        assert s.consumed == 9
+    finally:
+        reader.release.set()
+        s.close(timeout=10.0)
+
+
+def test_seek_back_during_decode_no_stale_cache():
+    # seek BACK to the in-flight position: the old decode is from the same
+    # position but an invalidated generation — it must be re-read, not
+    # served from the discarded result (exactly-once applies per schedule)
+    reader = GatedReader(n=16)
+    reader.gate_on = {3}
+    s = TraceReplayStream(reader, start=3, prefetch=2)
+    try:
+        assert reader.started.wait(timeout=10.0)  # decoding position 3
+        s.seek(3)  # same cursor, new generation
+        reader.gate_on = set()
+        reader.release.set()
+        seq = _drain(s, 3)
+        assert seq == [3, 4, 5]
+    finally:
+        reader.release.set()
+        s.close(timeout=10.0)

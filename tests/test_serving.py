@@ -1,0 +1,280 @@
+"""Online serving runtime: read-only cache + queue-as-lookahead front-end.
+
+S1  registry: the three serving designs are registered, reject a train_fn,
+    and satisfy the EmbeddingCacheRuntime protocol surface.
+S2  bit-parity: scratchpipe-serve and static-serve lookups are bitwise
+    identical to the nocache oracle on recorded drift and flash_crowd
+    serving traces, at every queue depth (emergency completion included).
+S3  hit-rate vs queue depth: 100% post-warmup hits at depth >= window (the
+    always-hit guarantee with the queue as the look-ahead window), strictly
+    fewer hits at depth 0; no write-back ever (host rows untouched).
+S4  serving traces: record_serving_trace strips payloads to ids (zero dense
+    features, kind=serving provenance) and the inference_mix scenario is
+    registered and label-free by default.
+S5  front-end: concurrent single-request lookups are micro-batched into
+    cycles and every future resolves to that request's own oracle bags.
+"""
+from __future__ import annotations
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.host_table import HostEmbeddingTable
+from repro.core.runtime import available_runtimes, make_runtime
+from repro.core.serving_cache import (
+    NoCacheServer,
+    ReadOnlyCacheServer,
+    StaticCacheServer,
+)
+from repro.core.table_group import TableGroup
+from repro.serving import EmbeddingServer, replay_serving
+from repro.traces.format import TraceReader
+from repro.traces.recorder import record_serving_trace
+from repro.traces.scenarios import available_scenarios, scenario_batches
+
+SEED = 7
+DIM = 8
+WINDOW = 2
+
+
+def small_group() -> TableGroup:
+    return TableGroup.uniform(2, 400, DIM)
+
+
+def make_host(group) -> HostEmbeddingTable:
+    return HostEmbeddingTable(group.total_rows, DIM, seed=SEED)
+
+
+def record(tmp_path, scenario: str, steps: int = 20):
+    group = small_group()
+    stream = scenario_batches(
+        scenario, group, steps, batch_size=4, lookups_per_table=3, seed=SEED
+    )
+    path = str(tmp_path / scenario)
+    record_serving_trace(path, group, stream, steps=steps)
+    reader = TraceReader(path)
+    return group, [reader.batch(i)[0] for i in range(reader.num_batches)], path
+
+
+def serve_all(backend, batches, depth):
+    res = replay_serving(backend, batches, depth=depth, collect_bags=True)
+    return res["bags"], res
+
+
+# ---------------------------------------------------------------------------
+# S1: registry
+# ---------------------------------------------------------------------------
+def test_serving_designs_registered():
+    avail = available_runtimes()
+    for name in ("nocache-serve", "static-serve", "scratchpipe-serve"):
+        assert name in avail
+
+
+def test_serving_factories_reject_train_fn():
+    group = small_group()
+    host = make_host(group)
+    with pytest.raises(TypeError, match="read-only"):
+        make_runtime("scratchpipe-serve", host, lambda *a: None, num_slots=64)
+    with pytest.raises(TypeError, match="read-only"):
+        make_runtime("nocache-serve", host, lambda *a: None)
+    srv = make_runtime(
+        "scratchpipe-serve", host, None, num_slots=128, window=WINDOW,
+        table_group=group,
+    )
+    assert isinstance(srv, ReadOnlyCacheServer)
+    srv.flush_to_host()  # protocol no-op: nothing is ever dirty
+    assert set(srv.traffic()) == {"host", "pcie", "hbm"}
+    assert srv.stats == []
+
+
+def test_runtime_protocol_run_with_queue_depth():
+    group = small_group()
+    srv = make_runtime(
+        "scratchpipe-serve", make_host(group), None, num_slots=128,
+        window=WINDOW, table_group=group,
+    )
+    stream = scenario_batches(
+        "inference_mix", group, 12, batch_size=4, lookups_per_table=3,
+        seed=SEED,
+    )
+    stats = srv.run(stream)
+    assert len(stats) == 12
+    warm = stats[WINDOW + 1:]
+    assert all(s.n_miss == 0 for s in warm)  # default depth = window
+
+
+# ---------------------------------------------------------------------------
+# S2: bit-parity vs the nocache oracle on recorded serving traces
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("scenario", ["drift", "flash_crowd"])
+@pytest.mark.parametrize("depth", [0, 1, WINDOW])
+def test_scratchpipe_serve_parity(tmp_path, scenario, depth):
+    group, batches, _ = record(tmp_path, scenario)
+    oracle, _ = serve_all(NoCacheServer(make_host(group)), batches, 0)
+    srv = ReadOnlyCacheServer(
+        make_host(group), 128, window=WINDOW, table_group=group
+    )
+    bags, _ = serve_all(srv, batches, depth)
+    assert len(bags) == len(oracle) == len(batches)
+    for i, (a, b) in enumerate(zip(bags, oracle)):
+        np.testing.assert_array_equal(a, b, err_msg=f"batch {i}")
+
+
+@pytest.mark.parametrize("scenario", ["drift", "flash_crowd"])
+def test_static_serve_parity(tmp_path, scenario):
+    group, batches, _ = record(tmp_path, scenario)
+    oracle, _ = serve_all(NoCacheServer(make_host(group)), batches, 0)
+    hot = np.sort(
+        np.unique(np.concatenate([b.ravel() for b in batches[:5]]))[:80]
+    )
+    bags, _ = serve_all(StaticCacheServer(make_host(group), hot), batches, 0)
+    for i, (a, b) in enumerate(zip(bags, oracle)):
+        np.testing.assert_array_equal(a, b, err_msg=f"batch {i}")
+
+
+def test_parity_under_eviction_pressure(tmp_path):
+    # scratchpad barely larger than the window working set: constant
+    # evictions + emergency re-plans — results must STILL match the oracle
+    group, batches, _ = record(tmp_path, "flash_crowd", steps=30)
+    floor = (WINDOW + 2) * 4 * 3  # (window+2 in-flight) x uniques/batch/table
+    srv = ReadOnlyCacheServer(
+        make_host(group), 2 * floor, window=WINDOW, table_group=group
+    )
+    oracle, _ = serve_all(NoCacheServer(make_host(group)), batches, 0)
+    bags, _ = serve_all(srv, batches, 1)  # under-aged: emergency path hot
+    for i, (a, b) in enumerate(zip(bags, oracle)):
+        np.testing.assert_array_equal(a, b, err_msg=f"batch {i}")
+
+
+# ---------------------------------------------------------------------------
+# S3: the hit-rate vs queue-depth curve
+# ---------------------------------------------------------------------------
+def test_hit_rate_saturates_at_window_depth(tmp_path):
+    group, batches, _ = record(tmp_path, "drift", steps=24)
+    rates = {}
+    for depth in (0, WINDOW, WINDOW + 2):
+        srv = ReadOnlyCacheServer(
+            make_host(group), 256, window=WINDOW, table_group=group
+        )
+        _, res = serve_all(srv, batches, depth)
+        rates[depth] = res["hit_rate"]
+        assert res["served"] == len(batches)
+    assert rates[WINDOW] == 1.0
+    assert rates[WINDOW + 2] == 1.0
+    assert rates[0] < 1.0  # depth 0 has no look-ahead to hide fills behind
+
+
+def test_serving_never_writes_back(tmp_path):
+    group, batches, _ = record(tmp_path, "drift", steps=10)
+    host = make_host(group)
+    before = host.data.copy()
+    srv = ReadOnlyCacheServer(host, 128, window=WINDOW, table_group=group)
+    serve_all(srv, batches, WINDOW)
+    srv.flush_to_host()
+    np.testing.assert_array_equal(host.data, before)
+    assert host.traffic.written == 0
+
+
+# ---------------------------------------------------------------------------
+# S4: serving traces
+# ---------------------------------------------------------------------------
+def test_record_serving_trace_strips_payload(tmp_path):
+    group = small_group()
+    stream = scenario_batches(
+        "drift", group, 6, batch_size=4, lookups_per_table=3, seed=SEED
+    )
+    path = str(tmp_path / "serve_trace")
+    n = record_serving_trace(
+        path, group, stream, steps=6, provenance={"scenario": "drift"}
+    )
+    assert n == 6
+    reader = TraceReader(path)
+    assert reader.meta.num_dense_features == 0
+    prov = reader.meta.provenance
+    assert prov["kind"] == "serving" and prov["scenario"] == "drift"
+    gids, payload = reader.batch(0)
+    assert payload["sparse_ids"].shape == (4, 2, 3)
+    np.testing.assert_array_equal(group.globalize(payload["sparse_ids"]), gids)
+
+
+def test_inference_mix_registered_and_label_free():
+    assert "inference_mix" in available_scenarios()
+    group = small_group()
+    gids, payload = next(
+        scenario_batches(
+            "inference_mix", group, 1, batch_size=4, lookups_per_table=3,
+            seed=SEED,
+        )
+    )
+    assert gids.shape == (4, 2, 3)
+    assert payload["dense"].shape == (4, 0)  # serving: no dense features
+    assert (gids >= group.offsets[:-1][None, :, None]).all()
+    assert (gids < group.offsets[1:][None, :, None]).all()
+
+
+# ---------------------------------------------------------------------------
+# S5: the micro-batching front-end
+# ---------------------------------------------------------------------------
+def test_frontend_resolves_each_request_to_its_own_bags():
+    group = small_group()
+    host = make_host(group)
+    srv = ReadOnlyCacheServer(host, 256, window=WINDOW, table_group=group)
+    rng = np.random.default_rng(SEED)
+    requests = [
+        group.globalize(
+            rng.integers(0, 400, size=(1, 2, 3))
+        )[0]  # one request: (T, L)
+        for _ in range(40)
+    ]
+    with EmbeddingServer(srv, max_batch=4) as server:
+        futures = [server.lookup(r) for r in requests]
+        results = [f.result(timeout=60.0) for f in futures]
+    for req, got in zip(requests, results):
+        want = host.data[req.ravel()].reshape(2, 3, DIM).sum(axis=1)
+        np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5)
+
+
+def test_frontend_concurrent_submitters():
+    group = small_group()
+    host = make_host(group)
+    srv = ReadOnlyCacheServer(host, 256, window=WINDOW, table_group=group)
+    rng = np.random.default_rng(SEED + 1)
+    per_thread = 12
+    reqs = {
+        t: [group.globalize(rng.integers(0, 400, size=(1, 2, 3)))[0]
+            for _ in range(per_thread)]
+        for t in range(4)
+    }
+    results: dict = {}
+
+    def client(t):
+        out = []
+        with_srv = [server.lookup(r) for r in reqs[t]]
+        for f in with_srv:
+            out.append(np.asarray(f.result(timeout=60.0)))
+        results[t] = out
+
+    with EmbeddingServer(srv, max_batch=8) as server:
+        threads = [threading.Thread(target=client, args=(t,)) for t in reqs]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join(timeout=60.0)
+    assert set(results) == set(reqs)
+    for t, out in results.items():
+        for req, got in zip(reqs[t], out):
+            want = host.data[req.ravel()].reshape(2, 3, DIM).sum(axis=1)
+            np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_frontend_rejects_after_close():
+    group = small_group()
+    srv = ReadOnlyCacheServer(
+        make_host(group), 128, window=WINDOW, table_group=group
+    )
+    server = EmbeddingServer(srv)
+    server.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        server.lookup(group.globalize(np.zeros((1, 2, 3), np.int64))[0])

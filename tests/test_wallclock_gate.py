@@ -1,0 +1,90 @@
+"""wallclock --gate machine-class provenance check.
+
+A perf ratio against a baseline recorded on different hardware is noise
+with a threshold attached — loose enough to "pass", it masks real
+regressions. The gate must only arm when the baseline's machine-class
+provenance matches the runner, and must skip with a reason otherwise.
+"""
+from __future__ import annotations
+
+import copy
+
+from benchmarks.wallclock import (
+    MACHINE_CLASS_KEYS,
+    gate_skip_reason,
+    machine_class,
+    machine_info,
+    regression_gate,
+)
+
+RUNNER = {
+    "platform": "Linux-6.1-x86_64",
+    "machine": "x86_64",
+    "cpus": 2,
+    "python": "3.11.8",
+    "jax": "0.4.37",
+    "backend": "cpu",
+}
+
+
+def _baseline(machine=None):
+    return {
+        "machine": machine,
+        "smoke": {
+            "runs": [
+                {
+                    "design": "scratchpipe",
+                    "scenario": "synthetic",
+                    "mode": "sync",
+                    "steps_per_s": 10.0,
+                }
+            ],
+            "planner": [],
+        },
+    }
+
+
+def test_machine_class_ignores_software_versions():
+    other = dict(RUNNER, python="3.12.1", jax="0.5.0",
+                 platform="Linux-5.15-x86_64")
+    assert machine_class(RUNNER) == machine_class(other)
+    assert gate_skip_reason(_baseline(other), current=RUNNER) is None
+
+
+def test_gate_skips_on_machine_class_mismatch():
+    for key, val in (("machine", "aarch64"), ("cpus", 96), ("backend", "tpu")):
+        mismatched = dict(RUNNER, **{key: val})
+        reason = gate_skip_reason(_baseline(mismatched), current=RUNNER)
+        assert reason is not None and key in reason, (key, reason)
+        assert "does not match" in reason
+
+
+def test_gate_skips_on_missing_provenance():
+    reason = gate_skip_reason(_baseline(None), current=RUNNER)
+    assert reason is not None and "no machine provenance" in reason
+    assert gate_skip_reason({}, current=RUNNER) is not None
+
+
+def test_gate_runs_on_matching_class():
+    base = _baseline(copy.deepcopy(RUNNER))
+    assert gate_skip_reason(base, current=RUNNER) is None
+    fresh = {
+        "config": {"warmup": 8, "steps": 10},
+        "runs": [
+            {
+                "design": "scratchpipe",
+                "scenario": "synthetic",
+                "mode": "sync",
+                "steps_per_s": 1.0,  # 10x collapse: must be flagged
+            }
+        ],
+        "planner": [],
+    }
+    problems = regression_gate(fresh, base, min_ratio=0.35)
+    assert problems and "scratchpipe" in problems[0]
+
+
+def test_gate_skip_reason_defaults_to_current_machine():
+    # against the live machine_info() the self-baseline always matches
+    assert gate_skip_reason({"machine": machine_info()}) is None
+    assert set(MACHINE_CLASS_KEYS) <= set(machine_info())
