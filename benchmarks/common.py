@@ -215,6 +215,8 @@ def run_design(
     fused: bool = False,
     planner: str = "host",
     kernel: str = "xla",
+    tracer=None,
+    metrics=None,
 ) -> DesignResult:
     """design in {nocache, static, strawman, scratchpipe} — constructed
     through the EmbeddingCacheRuntime registry. ``num_tables``/``hetero``
@@ -309,7 +311,10 @@ def run_design(
     t0 = time.time()
     try:
         if design == "nocache":
-            runner = make_runtime("nocache", host, trainer.train_fn)
+            runner = make_runtime(
+                "nocache", host, trainer.train_fn,
+                tracer=tracer, metrics=metrics,
+            )
             stats = runner.run(batches())
             pcie = runner.traffic()["pcie"].total
             # all embedding fwd+bwd on the host tier: gather + RMW update.
@@ -341,7 +346,10 @@ def run_design(
                 hot = hot_ids_for_group(group, cache_frac, locality=locality)
             else:
                 hot = hot_ids_global(tc, cache_frac, steps=20)
-            runner = make_runtime("static", host, trainer.train_fn, hot_ids=hot)
+            runner = make_runtime(
+                "static", host, trainer.train_fn, hot_ids=hot,
+                tracer=tracer, metrics=metrics,
+            )
             stats = runner.run(batches())
             tr = runner.traffic()
             pcie = tr["pcie"].total
@@ -361,7 +369,7 @@ def run_design(
                 need = sum(min(floor, r) for r in group.rows)
                 slots = max(slots, need)
                 budgets = group.slot_budgets(slots, min_per_table=floor)
-            kw = {}
+            kw = {"tracer": tracer, "metrics": metrics}
             if design in ("scratchpipe", "strawman", "sharded"):
                 kw["executor"] = executor
                 kw["planner"] = planner

@@ -1,8 +1,16 @@
 """§VI-D implementation overhead: worst-case scratchpad Storage sizing for
 the paper's default config = (8 tables x 20 lookups x 2048 batch x 128 dim
 x 4 B) x 6 in-flight mini-batches = 960 MB, vs the measured live working set
-(much smaller thanks to window hits)."""
+(much smaller thanks to window hits).
+
+Also measures the telemetry overhead cell (repro.obs): the same tiny
+pipeline run with telemetry off twice (the pair bounds run-to-run noise),
+with a MetricsRegistry attached, and with full span tracing — the off path
+must stay within the noise band because it executes the identical code
+(NULL_SPAN + counters never constructed)."""
 from __future__ import annotations
+
+import time
 
 import numpy as np
 
@@ -62,15 +70,88 @@ def run(steps: int = 20) -> list:
             "value": round(worst_local / 2**20, 2),
         }
     )
+    rows.extend(telemetry_overhead(steps=steps))
     return rows
+
+
+def _telemetry_cell(mode: str, steps: int) -> float:
+    """steps/s for one tiny ScratchPipe run in the given telemetry mode.
+
+    ``off`` passes no tracer/metrics kwargs at all — byte-for-byte the
+    pre-telemetry construction path, so two off runs bound the noise floor
+    the opt-in modes are judged against."""
+    from repro import obs
+
+    cfg = bench_cfg()
+    tc = TraceConfig(
+        num_tables=cfg.num_tables,
+        rows_per_table=cfg.rows_per_table,
+        lookups_per_table=cfg.lookups_per_table,
+        batch_size=cfg.batch_size,
+        locality="medium",
+        seed=3,
+    )
+    rows_total = cfg.num_tables * cfg.rows_per_table
+    host = HostEmbeddingTable(rows_total, cfg.embed_dim, seed=1)
+    tr = DLRMTrainer(cfg, jax.random.key(0))
+    kw = {}
+    if mode == "metrics":
+        kw["metrics"] = obs.MetricsRegistry()
+    elif mode == "tracing":
+        kw["metrics"] = obs.MetricsRegistry()
+        kw["tracer"] = obs.Tracer()
+    pipe = ScratchPipe(host, int(rows_total * 0.10), tr.train_fn, **kw)
+    # warm the jit caches outside the timed region
+    warm = LookaheadStream(dlrm_batches(tc, 2))
+    pipe.run(warm, lookahead_fn=warm.peek_ids)
+    # best-of-3: one GC pause / scheduler hiccup in a short run otherwise
+    # reads as telemetry overhead (this is a relative comparison, so best
+    # achievable rate is the honest statistic)
+    best = 0.0
+    for _ in range(3):
+        stream = LookaheadStream(dlrm_batches(tc, steps))
+        t0 = time.perf_counter()
+        pipe.run(stream, lookahead_fn=stream.peek_ids)
+        best = max(best, steps / (time.perf_counter() - t0))
+    return best
+
+
+def telemetry_overhead(steps: int = 20) -> list:
+    steps = max(steps, 8)  # sub-8-step cells are all noise
+    cells = (("off_a", "off"), ("off_b", "off"), ("metrics", "metrics"),
+             ("tracing", "tracing"))
+    return [
+        {
+            "bench": "telemetry_overhead",
+            "metric": f"steps_per_s_{label}",
+            "value": round(_telemetry_cell(mode, steps), 2),
+        }
+        for label, mode in cells
+    ]
 
 
 def validate(rows) -> list:
     by = {r["metric"]: r["value"] for r in rows}
+    # the off/off pair measures run-to-run noise on this container; the
+    # opt-in modes only have to clear generous floors (CI boxes are noisy)
+    off = max(by["steps_per_s_off_a"], by["steps_per_s_off_b"])
     return [
         ("worst case matches paper's 960 MB (MiB)", abs(by["worst_case_paper_config_MiB"] - 960.0) < 1),
         (
             "measured live set well below worst case (§VI-D)",
             by["measured_held_slots_MiB"] < by["worst_case_bench_config_MiB"],
+        ),
+        (
+            "telemetry-off pair within noise of each other (2x band)",
+            min(by["steps_per_s_off_a"], by["steps_per_s_off_b"])
+            >= 0.5 * off,
+        ),
+        (
+            "metrics-on within 2x of telemetry-off",
+            by["steps_per_s_metrics"] >= 0.5 * off,
+        ),
+        (
+            "full tracing within 3x of telemetry-off",
+            by["steps_per_s_tracing"] >= 0.33 * off,
         ),
     ]

@@ -1,12 +1,39 @@
-"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from the result JSONs
-(so the document is regenerable: ``python -m benchmarks.report``)."""
+"""Render the benchmark result artifacts, and machine-verify them.
+
+Two modes:
+
+* ``python -m benchmarks.report`` — regenerate the EXPERIMENTS.md §Dry-run
+  and §Roofline tables from the per-cell result JSONs, then render the
+  cross-PR perf trajectory per design×scenario cell from the schema'd,
+  machine-class-tagged records in ``BENCH_wallclock.json`` (plus
+  ``BENCH_summary.json`` / ``BENCH_serve.json`` when present).
+
+* ``python -m benchmarks.report --check`` — validate the checked-in
+  artifacts against their schemas and the shared machine-provenance block
+  (the same ``machine_class`` the wallclock ``--gate`` keys its baselines
+  on). Exit nonzero on any problem — this is what the CI ``obs-smoke`` job
+  runs, so "measurably faster" stays checked by machines, not prose.
+"""
 from __future__ import annotations
 
+import argparse
 import glob
 import json
 import os
+import sys
+from typing import List, Optional
 
 HERE = os.path.dirname(__file__)
+WALLCLOCK_PATH = os.path.join(HERE, "..", "BENCH_wallclock.json")
+SERVE_PATH = os.path.join(HERE, "..", "BENCH_serve.json")
+SUMMARY_PATH = os.path.join(HERE, "results", "BENCH_summary.json")
+
+# artifact -> (path, required schema tag, required at --check time)
+ARTIFACTS = {
+    "wallclock": (WALLCLOCK_PATH, "bench_wallclock/v1", True),
+    "summary": (SUMMARY_PATH, "bench_summary/v1", False),
+    "serve": (SERVE_PATH, "bench_serve/v1", False),
+}
 
 
 def load(sub):
@@ -45,8 +72,6 @@ def dryrun_table() -> str:
 
 
 def skip_table() -> str:
-    import sys
-
     sys.path.insert(0, os.path.join(HERE, "..", "src"))
     from repro.configs import dryrun_cells
 
@@ -75,10 +100,183 @@ def roofline_table(tag: str = "") -> str:
     return "\n".join(lines)
 
 
-if __name__ == "__main__":
+# --------------------------------------------------------------------------- #
+# perf trajectory (design x scenario cells from the wallclock artifact)
+# --------------------------------------------------------------------------- #
+def _machine_tag(doc: dict) -> str:
+    from benchmarks.wallclock import machine_class
+
+    m = doc.get("machine")
+    return machine_class(m) if isinstance(m, dict) else "unknown"
+
+
+def wallclock_trajectory(doc: Optional[dict] = None) -> str:
+    """One row per design×scenario cell, one column per measured mode —
+    steps/s as recorded. The machine-class tag in the header is what makes
+    the numbers comparable across PRs: cells are only a trajectory within
+    one runner class (the same key the wallclock ``--gate`` uses)."""
+    if doc is None:
+        if not os.path.exists(WALLCLOCK_PATH):
+            return "(no BENCH_wallclock.json checked in)"
+        doc = json.load(open(WALLCLOCK_PATH))
+    runs = doc.get("runs") or []
+    modes: List[str] = []
+    for r in runs:
+        if r["mode"] not in modes:
+            modes.append(r["mode"])
+    cells = {}
+    for r in runs:
+        cells.setdefault((r["design"], r["scenario"]), {})[r["mode"]] = r
+    lines = [
+        f"machine-class: `{_machine_tag(doc)}`  (steps/s; trajectory is "
+        "only comparable within one runner class)",
+        "",
+        "| design | scenario | " + " | ".join(modes) + " | hit rate |",
+        "|---|---|" + "---|" * (len(modes) + 1),
+    ]
+    for (design, scenario), per_mode in cells.items():
+        vals = [
+            f"{per_mode[m]['steps_per_s']:.1f}" if m in per_mode else "—"
+            for m in modes
+        ]
+        hit = next(iter(per_mode.values()))["hit_rate"]
+        lines.append(
+            f"| {design} | {scenario} | " + " | ".join(vals) + f" | {hit:.3f} |"
+        )
+    if doc.get("speedup_steps_per_s"):
+        lines.append("")
+        lines.append(f"fast-path speedup: {doc['speedup_steps_per_s']}x")
+    return "\n".join(lines)
+
+
+def summary_trajectory() -> str:
+    if not os.path.exists(SUMMARY_PATH):
+        return "(no BENCH_summary.json checked in)"
+    doc = json.load(open(SUMMARY_PATH))
+    lines = [
+        f"machine-class: `{_machine_tag(doc)}`  "
+        f"(all_claims_ok={doc.get('all_claims_ok')})",
+        "",
+        "| design | locality/source | planner | hit rate | model iter ms | wall ms |",
+        "|---|---|---|---|---|---|",
+    ]
+    for d in doc.get("designs", []):
+        src = d.get("source") or d.get("locality")
+        lines.append(
+            f"| {d['design']} | {src} | {d.get('planner', 'host')} | "
+            f"{d['hit_rate']:.3f} | {d['iter_ms_paper']:.2f} | "
+            f"{d.get('wall_ms', 0):.2f} |"
+        )
+    return "\n".join(lines)
+
+
+# --------------------------------------------------------------------------- #
+# --check: schema + provenance validation (CI obs-smoke)
+# --------------------------------------------------------------------------- #
+def _check_machine_block(doc: dict, label: str) -> List[str]:
+    from benchmarks.wallclock import MACHINE_CLASS_KEYS
+
+    problems = []
+    m = doc.get("machine")
+    if not isinstance(m, dict):
+        return [f"{label}: missing machine provenance block"]
+    for k in MACHINE_CLASS_KEYS:
+        if k not in m:
+            problems.append(f"{label}: machine block missing {k!r}")
+    return problems
+
+
+def check_artifact(name: str, path: str, schema: str) -> List[str]:
+    try:
+        doc = json.load(open(path))
+    except Exception as e:
+        return [f"{name}: unreadable JSON: {type(e).__name__}: {e}"]
+    problems = []
+    if doc.get("schema") != schema:
+        problems.append(
+            f"{name}: schema {doc.get('schema')!r}, expected {schema!r}"
+        )
+    problems += _check_machine_block(doc, name)
+    if name == "wallclock":
+        runs = doc.get("runs")
+        if not isinstance(runs, list) or not runs:
+            problems.append("wallclock: no runs recorded")
+        else:
+            for i, r in enumerate(runs):
+                for k in ("design", "scenario", "mode", "steps_per_s"):
+                    if k not in r:
+                        problems.append(f"wallclock: run {i} missing {k!r}")
+                        break
+                else:
+                    if not (
+                        isinstance(r["steps_per_s"], (int, float))
+                        and r["steps_per_s"] > 0
+                    ):
+                        problems.append(
+                            f"wallclock: run {i} steps_per_s "
+                            f"{r['steps_per_s']!r} not a positive number"
+                        )
+    elif name == "summary":
+        if not isinstance(doc.get("designs"), list):
+            problems.append("summary: missing designs list")
+    elif name == "serve":
+        if not isinstance(doc.get("results"), (list, dict)) and not doc.get(
+            "designs"
+        ):
+            # serve schema keeps per-design latency records; accept any
+            # non-empty payload beyond schema+machine
+            payload = {
+                k: v for k, v in doc.items() if k not in ("schema", "machine")
+            }
+            if not payload:
+                problems.append("serve: no result payload")
+    return problems
+
+
+def run_check() -> int:
+    ok = True
+    for name, (path, schema, required) in ARTIFACTS.items():
+        if not os.path.exists(path):
+            if required:
+                print(f"FAIL {name}: {path} missing")
+                ok = False
+            else:
+                print(f"SKIP {name}: {path} not present")
+            continue
+        problems = check_artifact(name, path, schema)
+        if problems:
+            print(f"FAIL {name}:")
+            for p in problems:
+                print(f"  - {p}")
+            ok = False
+        else:
+            print(f"OK   {name} ({path})")
+    return 0 if ok else 1
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--check",
+        action="store_true",
+        help="validate the checked-in bench artifacts (schema + machine "
+        "provenance); exit nonzero on any problem",
+    )
+    args = ap.parse_args()
+    if args.check:
+        return run_check()
     print("## Dry-run\n")
     print(dryrun_table())
     print("\n### Skipped cells\n")
     print(skip_table())
     print("\n## Roofline\n")
     print(roofline_table())
+    print("\n## Perf trajectory (wallclock)\n")
+    print(wallclock_trajectory())
+    print("\n## Perf trajectory (bench summary)\n")
+    print(summary_trajectory())
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -74,10 +74,15 @@ def write_summary(all_ok: bool, total_seconds: float, path: str = SUMMARY_PATH):
         }
         for r in drain_results_log()
     ]
+    # same machine-class provenance block as BENCH_wallclock.json and
+    # BENCH_serve.json — all three bench artifacts share one schema for it
+    from benchmarks.wallclock import machine_info
+
     summary = {
         "schema": "bench_summary/v1",
         "all_claims_ok": bool(all_ok),
         "total_bench_seconds": round(total_seconds, 1),
+        "machine": machine_info(),
         "designs": designs,
     }
     os.makedirs(os.path.dirname(path), exist_ok=True)

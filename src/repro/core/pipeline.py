@@ -81,6 +81,7 @@ from repro.core.host_table import HostEmbeddingTable, HostTraffic
 from repro.core.plan import Planner, PlanResult, pad_index, pad_len, pad_rows
 from repro.core.runtime import register_runtime
 from repro.core.table_group import TableGroup
+from repro.obs import NULL_SPAN, resolve as obs_resolve
 
 
 @dataclasses.dataclass
@@ -93,7 +94,13 @@ class StepStats:
     n_evict: int
     hit_lookups: int = 0  # lookup-level (non-unique) hit count
     by_table: Any = None  # per-table {hits, misses} (multi-table runs only)
-    stage_times: Optional[Dict[str, float]] = None  # main-thread s per stage
+    # DEPRECATED: main-thread seconds per stage only. Under
+    # executor="overlapped" this field cannot see worker/d2h time (the
+    # submit returns immediately, so "collect"/"insert" record enqueue cost
+    # and the d2h copy is charged nowhere). Use a repro.obs.Tracer — its
+    # spans are recorded on the thread that does the work, and
+    # Tracer.totals() gives (thread, stage) -> seconds attribution.
+    stage_times: Optional[Dict[str, float]] = None
     aux: Any = None
 
     @property
@@ -124,6 +131,11 @@ _pad_index = pad_index
 _pad_rows = pad_rows
 
 
+def _d2h_slice(arr, n: int) -> np.ndarray:
+    """d2h-worker task: sync the victim-row device read and drop padding."""
+    return np.asarray(arr)[:n]
+
+
 class ScratchPipe:
     def __init__(
         self,
@@ -145,6 +157,9 @@ class ScratchPipe:
         planner: str = "host",
         pad_buckets: Optional[Sequence[int]] = None,
         kernel: str = "xla",
+        tracer=None,
+        metrics=None,
+        obs_labels: Optional[Dict[str, str]] = None,
     ):
         if executor not in ("sync", "overlapped"):
             raise ValueError(f"unknown executor {executor!r}")
@@ -230,6 +245,85 @@ class ScratchPipe:
             self._d2h_pool = ThreadPoolExecutor(
                 max_workers=1, thread_name_prefix="scratchpipe-d2h"
             )
+        # -- telemetry (strictly opt-in; see repro.obs) --------------------- #
+        # Resolved ONCE here; with both unset the hot loop sees only
+        # `is None` branches and the shared NULL_SPAN singleton.
+        self._tracer, self._metrics = obs_resolve(tracer, metrics)
+        # Pool-submitted work is span-wrapped at construction (not per
+        # cycle), so spans land on the worker/d2h thread that runs them and
+        # the on-path allocates no closures in the loop either.
+        self._gather_fn = self.host.gather
+        self._writeback_fn = self._writeback
+        self._d2h_slice_fn = _d2h_slice
+        if self._tracer is not None:
+            self._gather_fn = self._tracer.wrap(
+                "collect.gather", self.host.gather, cat="host"
+            )
+            self._writeback_fn = self._tracer.wrap(
+                "insert.writeback", self._writeback, cat="host"
+            )
+            self._d2h_slice_fn = self._tracer.wrap(
+                "exchange.d2h", _d2h_slice, cat="d2h"
+            )
+        self._mc = None
+        if self._metrics is not None:
+            self._setup_metrics(dict(obs_labels or {}))
+
+    def _setup_metrics(self, labels: Dict[str, str]) -> None:
+        """Eagerly create counter cells and register lazy gauges. Byte
+        gauges read the existing unconditional HostTraffic totals at
+        snapshot time; occupancy/memo gauges probe planner state the same
+        way — nothing here adds per-cycle work."""
+        m = self._metrics
+        labels.setdefault("runtime", "scratchpipe" if self.pipelined else "strawman")
+        self._mc = {
+            k: m.counter(f"cache.{k}", **labels)
+            for k in ("cycles", "lookups", "unique", "hits", "misses",
+                      "evicts", "fills")
+        }
+        self._tbl_counters = None
+        if self.table_group is not None:
+            self._tbl_counters = [
+                (m.counter("cache.hits", table=t.name, **labels),
+                 m.counter("cache.misses", table=t.name, **labels))
+                for t in self.table_group.tables
+            ]
+        m.gauge("traffic.pcie.h2d_bytes", fn=lambda: self.pcie.written, **labels)
+        m.gauge("traffic.pcie.d2h_bytes", fn=lambda: self.pcie.read, **labels)
+        m.gauge("traffic.hbm.read_bytes", fn=lambda: self.hbm.read, **labels)
+        m.gauge("traffic.hbm.written_bytes", fn=lambda: self.hbm.written, **labels)
+        m.gauge("traffic.host.read_bytes",
+                fn=lambda: self.host.traffic.read, **labels)
+        m.gauge("traffic.host.written_bytes",
+                fn=lambda: self.host.traffic.written, **labels)
+        m.gauge("planner.occupancy", fn=lambda: self.planner.occupancy, **labels)
+        m.gauge("planner.hold_occupancy", fn=self._hold_occupancy, **labels)
+        m.gauge("planner.memo.hits", fn=lambda: self._memo_counts()[0], **labels)
+        m.gauge("planner.memo.misses", fn=lambda: self._memo_counts()[1], **labels)
+
+    def _hold_occupancy(self) -> int:
+        """Slots currently held by the RAW window (hold register != 0)."""
+        h = getattr(self.planner, "hold", None)
+        if h is not None:  # host planner: numpy shift register
+            return int(np.count_nonzero(h))
+        states = getattr(self.planner, "_states", None)
+        if states:  # device planner: per-table on-accelerator registers
+            return int(sum(int(np.count_nonzero(np.asarray(s.hold)))
+                           for s in states))
+        return 0
+
+    def _memo_counts(self) -> Tuple[int, int]:
+        """(hits, misses) of the planner's per-batch memo (host planner
+        digest cache / device planner prep cache)."""
+        for attr in ("_digests", "_prep"):
+            c = getattr(self.planner, attr, None)
+            if c is not None:
+                return c.hits, c.misses
+        return (0, 0)
+
+    def _span(self, name: str, cat: str = "train"):
+        t = self._tracer
+        return NULL_SPAN if t is None else t.span(name, cat)
 
     # ------------------------------------------------------------------ #
     # overlapped-executor plumbing
@@ -272,77 +366,90 @@ class ScratchPipe:
     # ------------------------------------------------------------------ #
     def _stage_plan(self, entry: _InFlight, lookahead: List[np.ndarray]):
         t0 = time.perf_counter()
-        entry.plan = self.planner.plan(entry.ids, lookahead)
-        if self._d2h_pool is not None and hasattr(entry.plan, "start_materialize"):
-            # device planner + overlapped executor: pull the miss/evict ids
-            # back on the d2h worker so the sync overlaps [Train] dispatches
-            entry.plan.start_materialize(self._d2h_pool)
+        with self._span("plan"):
+            entry.plan = self.planner.plan(entry.ids, lookahead)
+            if self._d2h_pool is not None and hasattr(
+                entry.plan, "start_materialize"
+            ):
+                # device planner + overlapped executor: pull the miss/evict
+                # ids back on the d2h worker so the sync overlaps [Train]
+                entry.plan.start_materialize(self._d2h_pool, tracer=self._tracer)
         entry.times["plan"] = time.perf_counter() - t0
 
     def _stage_collect(self, entry: _InFlight):
         t0 = time.perf_counter()
-        p = entry.plan
-        if p.miss_ids.size:
-            if self._host_pool is not None:
-                entry.host_rows_f = self._submit_host(self.host.gather, p.miss_ids)
-            else:
-                entry.host_rows = self.host.gather(p.miss_ids)  # host-tier read
-        if p.evict_slots.size:
-            # pad victim reads to the pow-2 bucket (slot 0 is always safe to
-            # read); the d2h side slices the real rows back out
-            entry.evicted_dev = sp.read(
-                self.storage, pad_index(p.evict_slots, 0, self.pad_buckets)
-            )
-        self.hbm.read += p.evict_slots.size * self.host.row_bytes
+        with self._span("collect"):
+            p = entry.plan
+            if p.miss_ids.size:
+                if self._host_pool is not None:
+                    entry.host_rows_f = self._submit_host(
+                        self._gather_fn, p.miss_ids
+                    )
+                else:
+                    entry.host_rows = self._gather_fn(p.miss_ids)  # host read
+            if p.evict_slots.size:
+                # pad victim reads to the pow-2 bucket (slot 0 is always safe
+                # to read); the d2h side slices the real rows back out
+                entry.evicted_dev = sp.read(
+                    self.storage, pad_index(p.evict_slots, 0, self.pad_buckets)
+                )
+            self.hbm.read += p.evict_slots.size * self.host.row_bytes
         entry.times["collect"] = time.perf_counter() - t0
 
     def _stage_exchange(self, entry: _InFlight):
         t0 = time.perf_counter()
-        p = entry.plan
-        if p.miss_ids.size:
-            rows = (
-                entry.host_rows_f.result()
-                if entry.host_rows_f is not None
-                else entry.host_rows
-            )
-            entry.fetched_dev = jax.device_put(
-                pad_rows(rows, self.pad_buckets)
-            )  # h2d
-        n_evict = int(p.evict_slots.size)
-        if n_evict:
-            if self._d2h_pool is not None:
-                entry.evicted_host_f = self._d2h_pool.submit(
-                    lambda arr, n: np.asarray(arr)[:n], entry.evicted_dev, n_evict
+        with self._span("exchange"):
+            p = entry.plan
+            if p.miss_ids.size:
+                rows = (
+                    entry.host_rows_f.result()
+                    if entry.host_rows_f is not None
+                    else entry.host_rows
                 )
-            else:
-                entry.evicted_host = np.asarray(entry.evicted_dev)[:n_evict]  # d2h
-        self.pcie.written += p.miss_ids.size * self.host.row_bytes
-        self.pcie.read += p.evict_slots.size * self.host.row_bytes
+                entry.fetched_dev = jax.device_put(
+                    pad_rows(rows, self.pad_buckets)
+                )  # h2d
+            n_evict = int(p.evict_slots.size)
+            if n_evict:
+                if self._d2h_pool is not None:
+                    entry.evicted_host_f = self._d2h_pool.submit(
+                        self._d2h_slice_fn, entry.evicted_dev, n_evict
+                    )
+                else:
+                    entry.evicted_host = self._d2h_slice_fn(
+                        entry.evicted_dev, n_evict
+                    )  # d2h
+            self.pcie.written += p.miss_ids.size * self.host.row_bytes
+            self.pcie.read += p.evict_slots.size * self.host.row_bytes
         entry.times["exchange"] = time.perf_counter() - t0
 
     def _stage_insert_host(self, entry: _InFlight):
         """[Insert], host half: write evicted (dirty, trained) rows back."""
         t0 = time.perf_counter()
-        p = entry.plan
-        if p.evict_ids.size:
-            if self._host_pool is not None:
-                self._submit_host(self._writeback, p.evict_ids, entry.evicted_host_f)
-            else:
-                self.host.scatter(p.evict_ids, entry.evicted_host)  # host write
+        with self._span("insert_host"):
+            p = entry.plan
+            if p.evict_ids.size:
+                if self._host_pool is not None:
+                    self._submit_host(
+                        self._writeback_fn, p.evict_ids, entry.evicted_host_f
+                    )
+                else:
+                    self.host.scatter(p.evict_ids, entry.evicted_host)
         entry.times["insert"] = time.perf_counter() - t0
 
     def _stage_insert_fill(self, entry: _InFlight):
         """[Insert], device half: fill fetched rows into their slots."""
         t0 = time.perf_counter()
-        p = entry.plan
-        if p.fill_slots.size:
-            self.storage = sp.fill(
-                self.storage,
-                pad_index(p.fill_slots, self.num_slots, self.pad_buckets),
-                entry.fetched_dev,
-                kernel=self.kernel,
-            )
-        self.hbm.written += p.fill_slots.size * self.host.row_bytes
+        with self._span("insert_fill"):
+            p = entry.plan
+            if p.fill_slots.size:
+                self.storage = sp.fill(
+                    self.storage,
+                    pad_index(p.fill_slots, self.num_slots, self.pad_buckets),
+                    entry.fetched_dev,
+                    kernel=self.kernel,
+                )
+            self.hbm.written += p.fill_slots.size * self.host.row_bytes
         entry.times["insert"] = entry.times.get("insert", 0.0) + (
             time.perf_counter() - t0
         )
@@ -351,6 +458,12 @@ class ScratchPipe:
         self, entry: _InFlight, fused_entry: Optional[_InFlight] = None
     ) -> StepStats:
         t0 = time.perf_counter()
+        with self._span("train"):
+            return self._train_body(entry, fused_entry, t0)
+
+    def _train_body(
+        self, entry: _InFlight, fused_entry: Optional[_InFlight], t0: float
+    ) -> StepStats:
         p = entry.plan
         if fused_entry is not None:
             # one dispatch: the younger batch's [Insert]-fill rides inside
@@ -389,6 +502,21 @@ class ScratchPipe:
             aux=aux,
         )
         self._stats.append(st)
+        mc = self._mc
+        if mc is not None:
+            mc["cycles"].inc()
+            mc["lookups"].inc(st.n_lookups)
+            mc["unique"].inc(st.n_unique)
+            mc["hits"].inc(st.n_hits)
+            mc["misses"].inc(st.n_miss)
+            mc["evicts"].inc(st.n_evict)
+            mc["fills"].inc(int(p.fill_slots.size))
+            if by_table is not None and self._tbl_counters is not None:
+                for (ch, cm), h, m in zip(
+                    self._tbl_counters, by_table["hits"], by_table["misses"]
+                ):
+                    ch.inc(int(h))
+                    cm.inc(int(m))
         return st
 
     # ------------------------------------------------------------------ #

@@ -119,20 +119,27 @@ class PinnedCache:
     it (every stream in ``repro.data``/``repro.traces`` hands over fresh
     arrays)."""
 
-    __slots__ = ("_keep", "_entries")
+    __slots__ = ("_keep", "_entries", "hits", "misses")
 
     def __init__(self, keep: int):
         self._keep = int(keep)
         self._entries: "collections.OrderedDict[int, Tuple[Any, Any]]" = (
             collections.OrderedDict()
         )
+        # Unconditional int counters (same discipline as HostTraffic):
+        # read lazily by the obs layer's memo-hit-rate gauges at snapshot
+        # time, so they cost one int add with or without metrics on.
+        self.hits = 0
+        self.misses = 0
 
     def get(self, ref: Any, build: Callable[[Any], Any]) -> Any:
         key = id(ref)
         hit = self._entries.get(key)
         if hit is not None and hit[0] is ref:
+            self.hits += 1
             self._entries.move_to_end(key)
             return hit[1]
+        self.misses += 1
         val = build(ref)
         self._entries[key] = (ref, val)
         while len(self._entries) > self._keep:

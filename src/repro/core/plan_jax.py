@@ -327,11 +327,15 @@ class DevicePlanResult:
         self._future = None
         self._host = False
 
-    def start_materialize(self, pool) -> None:
+    def start_materialize(self, pool, tracer=None) -> None:
         """Kick the d2h of the host-facing outputs onto ``pool`` (the
-        pipeline's d2h worker) so it overlaps [Train]."""
+        pipeline's d2h worker) so it overlaps [Train]. With a tracer the
+        device_get is spanned on the worker thread that executes it."""
         if not self._host and self._future is None:
-            self._future = pool.submit(jax.device_get, self._payload)
+            fn = jax.device_get
+            if tracer is not None:
+                fn = tracer.wrap("plan.materialize", fn, cat="d2h")
+            self._future = pool.submit(fn, self._payload)
 
     def _materialize(self):
         if self._host:

@@ -60,6 +60,7 @@ from repro.core.pipeline import StepStats
 from repro.core.plan import Planner, PlanResult, pad_index, pad_rows
 from repro.core.runtime import register_runtime
 from repro.core.table_group import TableGroup
+from repro.obs import NULL_SPAN, resolve as obs_resolve
 
 
 @functools.partial(jax.jit, static_argnames=("kernel",))
@@ -85,7 +86,16 @@ class _ServingRuntimeBase:
     """Queue surface + EmbeddingCacheRuntime protocol shared by all three
     serving designs. Unpipelined designs serve a whole batch per cycle."""
 
-    def __init__(self, host_table: HostEmbeddingTable, *, queue_depth: int = 0):
+    _RUNTIME_NAME = "serve"
+
+    def __init__(
+        self,
+        host_table: HostEmbeddingTable,
+        *,
+        queue_depth: int = 0,
+        tracer=None,
+        metrics=None,
+    ):
         self.host = host_table
         self.queue_depth = int(queue_depth)
         self.pcie = HostTraffic()
@@ -93,6 +103,42 @@ class _ServingRuntimeBase:
         self._queue: Deque[_ServeEntry] = collections.deque()
         self._stats: List[StepStats] = []
         self._step = 0
+        # opt-in telemetry (see repro.obs); resolved once at construction
+        self._tracer, self._metrics = obs_resolve(tracer, metrics)
+        self._mc = None
+        self._latency = None
+        m = self._metrics
+        if m is not None:
+            lbl = {"runtime": self._RUNTIME_NAME}
+            self._mc = {
+                k: m.counter(f"serve.{k}", **lbl)
+                for k in ("requests", "lookups", "hits", "misses",
+                          "emergency_serves", "emergency_rows")
+            }
+            self._latency = m.histogram("serve.latency_us", **lbl)
+            m.gauge("serve.queue_depth", fn=lambda: len(self._queue), **lbl)
+            m.gauge(
+                "traffic.pcie.h2d_bytes", fn=lambda: self.pcie.written, **lbl
+            )
+            m.gauge("traffic.pcie.d2h_bytes", fn=lambda: self.pcie.read, **lbl)
+            m.gauge("traffic.hbm.read_bytes", fn=lambda: self.hbm.read, **lbl)
+            m.gauge(
+                "traffic.hbm.written_bytes", fn=lambda: self.hbm.written, **lbl
+            )
+            m.gauge(
+                "traffic.host.read_bytes",
+                fn=lambda: self.host.traffic.read,
+                **lbl,
+            )
+            m.gauge(
+                "traffic.host.written_bytes",
+                fn=lambda: self.host.traffic.written,
+                **lbl,
+            )
+
+    def _span(self, name: str, cat: str = "serve"):
+        t = self._tracer
+        return NULL_SPAN if t is None else t.span(name, cat)
 
     # -- queue surface ------------------------------------------------------
     def enqueue(self, ids: np.ndarray, tag: Any = None) -> None:
@@ -114,7 +160,20 @@ class _ServingRuntimeBase:
             raise IndexError("serve_next on an empty queue")
         entry = self._queue.popleft()
         self._step += 1
-        bags, st = self._serve(entry)
+        mc = self._mc
+        t0 = time.perf_counter() if mc is not None else 0.0
+        with self._span("serve"):
+            bags, st = self._serve(entry)
+        if mc is not None:
+            self._latency.observe((time.perf_counter() - t0) * 1e6)
+            mc["requests"].inc()
+            mc["lookups"].inc(st.n_lookups)
+            mc["hits"].inc(st.n_hits)
+            mc["misses"].inc(st.n_miss)
+            em = st.aux.get("emergency", 0) if isinstance(st.aux, dict) else 0
+            if em:
+                mc["emergency_serves"].inc()
+                mc["emergency_rows"].inc(em)
         self._stats.append(st)
         return bags, st, entry.tag
 
@@ -157,8 +216,15 @@ class NoCacheServer(_ServingRuntimeBase):
     into a transient padded region, then runs the same fused forward. No
     device-resident rows, no state — the bit-parity reference."""
 
-    def __init__(self, host_table, *, queue_depth: int = 0, kernel: str = "xla"):
-        super().__init__(host_table, queue_depth=queue_depth)
+    _RUNTIME_NAME = "nocache-serve"
+
+    def __init__(
+        self, host_table, *, queue_depth: int = 0, kernel: str = "xla",
+        tracer=None, metrics=None,
+    ):
+        super().__init__(
+            host_table, queue_depth=queue_depth, tracer=tracer, metrics=metrics
+        )
         self.kernel = sp._check_kernel(kernel)
 
     def _serve(self, entry: _ServeEntry) -> Tuple[np.ndarray, StepStats]:
@@ -189,6 +255,8 @@ class StaticCacheServer(_ServingRuntimeBase):
     from host, never inserted). Decays under drift exactly like the
     training variant — the comparison point the curve is measured against."""
 
+    _RUNTIME_NAME = "static-serve"
+
     def __init__(
         self,
         host_table,
@@ -196,8 +264,12 @@ class StaticCacheServer(_ServingRuntimeBase):
         *,
         queue_depth: int = 0,
         kernel: str = "xla",
+        tracer=None,
+        metrics=None,
     ):
-        super().__init__(host_table, queue_depth=queue_depth)
+        super().__init__(
+            host_table, queue_depth=queue_depth, tracer=tracer, metrics=metrics
+        )
         self.kernel = sp._check_kernel(kernel)
         self.hot_ids = np.asarray(np.sort(hot_ids), dtype=np.int64)
         self.id_to_slot = np.full(host_table.rows, -1, dtype=np.int64)
@@ -254,6 +326,8 @@ class ReadOnlyCacheServer(_ServingRuntimeBase):
     completion on the serve path (misses + latency, never wrong results).
     """
 
+    _RUNTIME_NAME = "scratchpipe-serve"
+
     def __init__(
         self,
         host_table: HostEmbeddingTable,
@@ -267,10 +341,14 @@ class ReadOnlyCacheServer(_ServingRuntimeBase):
         pad_buckets: Optional[Sequence[int]] = None,
         kernel: str = "xla",
         storage_dtype=None,
+        tracer=None,
+        metrics=None,
     ):
         super().__init__(
             host_table,
             queue_depth=window if queue_depth is None else queue_depth,
+            tracer=tracer,
+            metrics=metrics,
         )
         self.kernel = sp._check_kernel(kernel)
         self.window = int(window)
@@ -326,11 +404,12 @@ class ReadOnlyCacheServer(_ServingRuntimeBase):
         return out
 
     def _plan_entry(self, entry: _ServeEntry) -> None:
-        entry.plan = self.planner.plan(entry.ids, self._future_ids())
-        # newly (re-)assigned slots await their fill
-        if entry.plan.fill_slots.size:
-            self._landed[entry.plan.fill_slots] = False
-        entry.stage = 1
+        with self._span("serve.plan"):
+            entry.plan = self.planner.plan(entry.ids, self._future_ids())
+            # newly (re-)assigned slots await their fill
+            if entry.plan.fill_slots.size:
+                self._landed[entry.plan.fill_slots] = False
+            entry.stage = 1
 
     def _admitted(self, entry: _ServeEntry) -> None:
         self._refill_visible()
@@ -380,11 +459,12 @@ class ReadOnlyCacheServer(_ServingRuntimeBase):
     def _advance(self) -> None:
         """Advance every visible non-head entry one stage (the background
         pipeline work overlapping this cycle's serve)."""
-        for e in self._visible:
-            if e.stage == 1:
-                self._fetch(e)
-            elif e.stage == 2:
-                self._insert(e)
+        with self._span("serve.advance"):
+            for e in self._visible:
+                if e.stage == 1:
+                    self._fetch(e)
+                elif e.stage == 2:
+                    self._insert(e)
 
     # -- serve --------------------------------------------------------------
     def _serve(self, entry: _ServeEntry) -> Tuple[np.ndarray, StepStats]:
@@ -411,7 +491,8 @@ class ReadOnlyCacheServer(_ServingRuntimeBase):
         n_evict = int(entry.plan.evict_slots.size)
         missing = uniq[~resident_u]
         if missing.size:
-            n_evict += self._emergency_fill(entry, missing)
+            with self._span("serve.emergency"):
+                n_evict += self._emergency_fill(entry, missing)
 
         slots = self.planner.hitmap[flat]
         assert (slots >= 0).all() and self._landed[slots].all(), (

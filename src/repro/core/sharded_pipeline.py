@@ -47,6 +47,8 @@ class ShardedScratchPipe:
         planner: str = "host",
         pad_buckets: Optional[Sequence[int]] = None,
         kernel: str = "xla",
+        tracer=None,
+        metrics=None,
     ):
         """``train_fn(storages, slots_per_shard, batch)`` ->
         (new_storages, aux). ``num_slots`` is the per-shard scratchpad size
@@ -113,6 +115,10 @@ class ShardedScratchPipe:
                     # per-shard [Insert] fills run the same kernel axis; the
                     # [Train] kernels ride inside the caller's train_fn
                     kernel=kernel,
+                    tracer=tracer,
+                    metrics=metrics,
+                    # per-shard metric cells: same names, one label apart
+                    obs_labels={"shard": str(i)},
                 )
             )
 

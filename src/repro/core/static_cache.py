@@ -27,9 +27,54 @@ import numpy as np
 from repro.core.host_table import HostEmbeddingTable, HostTraffic
 from repro.core.pipeline import StepStats, _pad_rows
 from repro.core.runtime import register_runtime
+from repro.obs import NULL_SPAN, resolve as obs_resolve
 
 
-class NoCacheBaseline:
+class _BaselineObs:
+    """Shared opt-in telemetry for the unpipelined baselines. Both run one
+    whole step per cycle on the calling thread, so one "step" span plus the
+    post-step counter batch covers them; traffic gauges read the existing
+    unconditional byte counters at snapshot time."""
+
+    def _init_obs(self, tracer, metrics, runtime_name: str) -> None:
+        self._tracer, self._metrics = obs_resolve(tracer, metrics)
+        self._mc = None
+        m = self._metrics
+        if m is None:
+            return
+        lbl = {"runtime": runtime_name}
+        self._mc = {
+            k: m.counter(f"cache.{k}", **lbl)
+            for k in ("cycles", "lookups", "unique", "hits", "misses")
+        }
+        m.gauge("traffic.pcie.h2d_bytes", fn=lambda: self.pcie.written, **lbl)
+        m.gauge("traffic.pcie.d2h_bytes", fn=lambda: self.pcie.read, **lbl)
+        m.gauge("traffic.hbm.read_bytes", fn=lambda: self.hbm.read, **lbl)
+        m.gauge("traffic.hbm.written_bytes", fn=lambda: self.hbm.written, **lbl)
+        m.gauge(
+            "traffic.host.read_bytes", fn=lambda: self.host.traffic.read, **lbl
+        )
+        m.gauge(
+            "traffic.host.written_bytes",
+            fn=lambda: self.host.traffic.written,
+            **lbl,
+        )
+
+    def _span(self, name: str, cat: str = "train"):
+        t = self._tracer
+        return NULL_SPAN if t is None else t.span(name, cat)
+
+    def _count_step(self, st: StepStats) -> None:
+        mc = self._mc
+        if mc is not None:
+            mc["cycles"].inc()
+            mc["lookups"].inc(st.n_lookups)
+            mc["unique"].inc(st.n_unique)
+            mc["hits"].inc(st.n_hits)
+            mc["misses"].inc(st.n_miss)
+
+
+class NoCacheBaseline(_BaselineObs):
     """All embedding work on the host tier; device only does the MLPs.
 
     train_fn(storage, slots, batch) is reused by presenting the *gathered
@@ -37,39 +82,45 @@ class NoCacheBaseline:
     so compute is identical; the updated rows are scattered back to host.
     """
 
-    def __init__(self, host_table: HostEmbeddingTable, train_fn):
+    def __init__(
+        self, host_table: HostEmbeddingTable, train_fn, *, tracer=None,
+        metrics=None,
+    ):
         self.host = host_table
         self.train_fn = train_fn
         self.pcie = HostTraffic()
         self.hbm = HostTraffic()  # stays zero: device holds no embedding rows
         self._stats: List[StepStats] = []
+        self._init_obs(tracer, metrics, "nocache")
 
     def _step(self, step: int, ids, batch) -> StepStats:
-        ids = np.asarray(ids)
-        flat = ids.ravel()
-        uniq, inv = np.unique(flat, return_inverse=True)
-        rows = self.host.gather(uniq)  # host gather (memory-bound)
-        # pow-2 padded transient region: bounded set of [Train] executables
-        # instead of one compile per distinct unique count (zero rows past
-        # ``uniq.size`` are never addressed by ``slots``)
-        storage = jax.device_put(_pad_rows(rows))
-        self.pcie.written += rows.nbytes
-        slots = inv.reshape(ids.shape)
-        storage, aux = self.train_fn(storage, slots, batch)
-        new_rows = np.asarray(storage)[: uniq.size]
-        self.pcie.read += new_rows.nbytes
-        # host-side scatter of trained rows (gradient path on slow tier)
-        self.host.scatter(uniq, new_rows)
-        st = StepStats(
-            step=step,
-            n_lookups=int(flat.size),
-            n_unique=int(uniq.size),
-            n_hits=0,
-            n_miss=int(uniq.size),
-            n_evict=0,
-            aux=aux,
-        )
+        with self._span("step"):
+            ids = np.asarray(ids)
+            flat = ids.ravel()
+            uniq, inv = np.unique(flat, return_inverse=True)
+            rows = self.host.gather(uniq)  # host gather (memory-bound)
+            # pow-2 padded transient region: bounded set of [Train]
+            # executables instead of one compile per distinct unique count
+            # (zero rows past ``uniq.size`` are never addressed by ``slots``)
+            storage = jax.device_put(_pad_rows(rows))
+            self.pcie.written += rows.nbytes
+            slots = inv.reshape(ids.shape)
+            storage, aux = self.train_fn(storage, slots, batch)
+            new_rows = np.asarray(storage)[: uniq.size]
+            self.pcie.read += new_rows.nbytes
+            # host-side scatter of trained rows (gradient path on slow tier)
+            self.host.scatter(uniq, new_rows)
+            st = StepStats(
+                step=step,
+                n_lookups=int(flat.size),
+                n_unique=int(uniq.size),
+                n_hits=0,
+                n_miss=int(uniq.size),
+                n_evict=0,
+                aux=aux,
+            )
         self._stats.append(st)
+        self._count_step(st)
         return st
 
     def run(self, stream, lookahead_fn=None) -> List[StepStats]:
@@ -92,7 +143,7 @@ class NoCacheBaseline:
         return self._stats
 
 
-class StaticCacheBaseline:
+class StaticCacheBaseline(_BaselineObs):
     """Yin et al. static top-N cache. ``hot_ids`` are pinned on-device.
 
     ``hot_ids`` are GLOBAL row ids; for a TableGroup they come from per-table
@@ -104,6 +155,9 @@ class StaticCacheBaseline:
         host_table: HostEmbeddingTable,
         hot_ids: np.ndarray,
         train_fn,
+        *,
+        tracer=None,
+        metrics=None,
     ):
         self.host = host_table
         self.train_fn = train_fn
@@ -115,8 +169,13 @@ class StaticCacheBaseline:
         self.storage = jax.device_put(host_table.gather(self.hot_ids))
         host_table.traffic.reset()  # preload is not steady-state traffic
         self._stats: List[StepStats] = []
+        self._init_obs(tracer, metrics, "static")
 
     def _step(self, step: int, ids, batch) -> StepStats:
+        with self._span("step"):
+            return self._step_body(step, ids, batch)
+
+    def _step_body(self, step: int, ids, batch) -> StepStats:
         ids = np.asarray(ids)
         flat = ids.ravel()
         uniq = np.unique(flat)
@@ -175,6 +234,7 @@ class StaticCacheBaseline:
             aux=aux,
         )
         self._stats.append(st)
+        self._count_step(st)
         return st
 
     def run(self, stream, lookahead_fn=None) -> List[StepStats]:
@@ -208,11 +268,13 @@ def _reject_unsupported(name: str, kw: dict) -> None:
 
 @register_runtime("nocache")
 def _make_nocache(host_table, train_fn, **kw) -> NoCacheBaseline:
+    obs_kw = {k: kw.pop(k, None) for k in ("tracer", "metrics")}
     _reject_unsupported("nocache", kw)
-    return NoCacheBaseline(host_table, train_fn)
+    return NoCacheBaseline(host_table, train_fn, **obs_kw)
 
 
 @register_runtime("static")
 def _make_static(host_table, train_fn, *, hot_ids, **kw) -> StaticCacheBaseline:
+    obs_kw = {k: kw.pop(k, None) for k in ("tracer", "metrics")}
     _reject_unsupported("static", kw)
-    return StaticCacheBaseline(host_table, hot_ids, train_fn)
+    return StaticCacheBaseline(host_table, hot_ids, train_fn, **obs_kw)

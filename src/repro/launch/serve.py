@@ -169,13 +169,45 @@ def main():
     emb.add_argument("--lookups", type=int, default=8)
     emb.add_argument("--cache-frac", type=float, default=0.25)
     emb.add_argument("--kernel", default="xla", choices=("xla", "pallas"))
+    ap.add_argument(
+        "--metrics-out",
+        default=None,
+        help="write an obs_metrics/v1 JSONL snapshot here at exit "
+        "(opt-in telemetry; see repro.obs)",
+    )
+    ap.add_argument(
+        "--trace-out",
+        default=None,
+        help="write a Chrome trace-event JSON here at exit (load in "
+        "Perfetto / chrome://tracing)",
+    )
     args = ap.parse_args()
-    if args.embedding:
-        _serve_embedding(args)
-    elif args.arch is not None:
-        _serve_lm(args)
-    else:
-        ap.error("pick a serving mode: --arch <id> (LM) or --embedding (DLRM)")
+    from repro.launch.train import obs_export, obs_setup
+
+    tracer, metrics = obs_setup(args.trace_out, args.metrics_out)
+    try:
+        if args.embedding:
+            _serve_embedding(args)
+        elif args.arch is not None:
+            _serve_lm(args)
+        else:
+            ap.error(
+                "pick a serving mode: --arch <id> (LM) or --embedding (DLRM)"
+            )
+    finally:
+        obs_export(
+            args.trace_out,
+            args.metrics_out,
+            tracer,
+            metrics,
+            provenance={
+                "mode": "serve",
+                "design": args.design if args.embedding else args.arch,
+                "depth": args.depth,
+                "kernel": args.kernel,
+                "scenario": None if args.trace else args.scenario,
+            },
+        )
 
 
 if __name__ == "__main__":

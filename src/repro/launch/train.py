@@ -13,12 +13,38 @@ import time
 import jax
 import numpy as np
 
+from repro import obs
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config, get_smoke_config
 from repro.launch import steps as S
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models import api
 from repro.runtime import TrainSupervisor
+
+
+def obs_setup(trace_out, metrics_out, jax_annotations=False):
+    """Build and globally install the opt-in telemetry pair (either side
+    may be None). Every runtime/stream constructed afterwards picks them
+    up via ``repro.obs.resolve`` — one call covers all threads."""
+    tracer = obs.Tracer(jax_annotations=jax_annotations) if trace_out else None
+    metrics = obs.MetricsRegistry() if metrics_out else None
+    if tracer is not None or metrics is not None:
+        obs.install(tracer, metrics)
+    return tracer, metrics
+
+
+def obs_export(trace_out, metrics_out, tracer, metrics, provenance):
+    """Write the artifacts and clear the global install (also on error
+    paths — callers wrap the run in try/finally)."""
+    try:
+        if metrics is not None:
+            metrics.write_jsonl(metrics_out, provenance=provenance)
+            print(f"metrics snapshot -> {metrics_out}")
+        if tracer is not None:
+            n = tracer.export_chrome(trace_out)
+            print(f"chrome trace -> {trace_out} ({n} events)")
+    finally:
+        obs.install(None, None)
 
 
 def synth_lm_stream(cfg, shape, steps, seed=0):
@@ -359,6 +385,24 @@ def main():
     )
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument(
+        "--metrics-out",
+        default=None,
+        help="write an obs_metrics/v1 JSONL snapshot here at exit "
+        "(opt-in telemetry; see repro.obs)",
+    )
+    ap.add_argument(
+        "--trace-out",
+        default=None,
+        help="write a Chrome trace-event JSON here at exit (load in "
+        "Perfetto / chrome://tracing; spans cover all pipeline threads)",
+    )
+    ap.add_argument(
+        "--jax-annotations",
+        action="store_true",
+        help="additionally wrap spans in jax.profiler.TraceAnnotation "
+        "(for correlating stage names with a jax-profiler capture)",
+    )
     args = ap.parse_args()
     if args.tables < 0:
         ap.error("--tables must be >= 0 (0 = uniform paper config)")
@@ -367,10 +411,31 @@ def main():
     if args.adaptive_pad and not args.trace:
         ap.error("--adaptive-pad derives buckets from a recorded trace; "
                  "pass --trace")
-    if args.arch == "dlrm-scratchpipe":
-        train_dlrm(args)
-    else:
-        train_lm(args)
+    tracer, metrics = obs_setup(
+        args.trace_out, args.metrics_out, jax_annotations=args.jax_annotations
+    )
+    try:
+        if args.arch == "dlrm-scratchpipe":
+            train_dlrm(args)
+        else:
+            train_lm(args)
+    finally:
+        obs_export(
+            args.trace_out,
+            args.metrics_out,
+            tracer,
+            metrics,
+            provenance={
+                "mode": "train",
+                "arch": args.arch,
+                "runtime": args.runtime,
+                "executor": args.executor,
+                "planner": args.planner,
+                "kernel": args.kernel,
+                "steps": args.steps,
+                "smoke": bool(args.smoke),
+            },
+        )
 
 
 if __name__ == "__main__":

@@ -23,6 +23,8 @@ from typing import Any, List, Optional, Tuple
 
 import numpy as np
 
+from repro.obs import NULL_SPAN, resolve as obs_resolve
+
 
 class EmbeddingServer:
     """Micro-batching front-end over a read-only serving runtime.
@@ -33,15 +35,28 @@ class EmbeddingServer:
     (T, L) id shape — the pipeline's compiled lookup shape.
     """
 
-    def __init__(self, backend, *, max_batch: int = 32):
+    def __init__(self, backend, *, max_batch: int = 32, tracer=None):
         self.backend = backend
         self.max_batch = int(max_batch)
+        # front-end spans land on the worker thread below; default to the
+        # backend's tracer so one opt-in covers the whole serving stack,
+        # else the process-global install
+        self._tracer, _ = obs_resolve(
+            tracer if tracer is not None else getattr(backend, "_tracer", None),
+            None,
+        )
         self._cv = threading.Condition()
         self._waiting: List[Tuple[np.ndarray, Future]] = []
         self._stop = False
         self._err: Optional[BaseException] = None
-        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread = threading.Thread(
+            target=self._worker, daemon=True, name="serving-frontend"
+        )
         self._thread.start()
+
+    def _span(self, name: str):
+        t = self._tracer
+        return NULL_SPAN if t is None else t.span(name, cat="serve")
 
     # -- client surface -----------------------------------------------------
     def lookup(self, ids: np.ndarray) -> "Future[np.ndarray]":
@@ -89,10 +104,12 @@ class EmbeddingServer:
                     # admit ALL waiting requests first: the backend plans
                     # over its queue, so forming the tail before serving
                     # the head is what turns load into look-ahead
-                    self._form_batches()
+                    with self._span("frontend.form"):
+                        self._form_batches()
                 bags, _st, futures = self.backend.serve_next()
-                for i, fut in enumerate(futures):
-                    fut.set_result(bags[i])
+                with self._span("frontend.complete"):
+                    for i, fut in enumerate(futures):
+                        fut.set_result(bags[i])
         except BaseException as e:  # deliver the failure to every caller
             with self._cv:
                 self._err = e

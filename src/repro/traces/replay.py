@@ -31,6 +31,7 @@ from typing import Any, Dict, List, Optional, Set, Tuple, Union
 
 import numpy as np
 
+from repro.obs import NULL_SPAN, resolve as obs_resolve
 from repro.traces.format import TraceReader
 
 
@@ -42,6 +43,7 @@ class TraceReplayStream:
         start: int = 0,
         stop: Optional[int] = None,
         prefetch: int = 8,
+        tracer=None,
     ):
         """Replay batches ``[start, stop)`` of the trace (``stop=None`` =
         to the end; a ``stop`` beyond the trace is clamped). ``trace`` is a
@@ -66,12 +68,19 @@ class TraceReplayStream:
         # seek() bumps the generation; a decode started under an older
         # generation discards its result instead of caching/delivering it.
         self._gen = 0
+        # opt-in tracing: decode spans land on whichever thread decodes
+        # (prefetcher or consumer) — see repro.obs
+        self._tracer, _ = obs_resolve(tracer, None)
         self._thread: Optional[threading.Thread] = None
         if self._depth > 0:
             self._thread = threading.Thread(
-                target=self._prefetch_loop, daemon=True
+                target=self._prefetch_loop, daemon=True, name="trace-prefetch"
             )
             self._thread.start()
+
+    def _span(self, name: str):
+        t = self._tracer
+        return NULL_SPAN if t is None else t.span(name, cat="io")
 
     # -- prefetcher ---------------------------------------------------------
     def _window(self) -> range:
@@ -98,7 +107,8 @@ class TraceReplayStream:
                 gen = self._gen
                 self._inflight.add(want)
             try:
-                item = self._reader.batch(want)  # decode outside the lock
+                with self._span("trace.decode"):
+                    item = self._reader.batch(want)  # decode outside the lock
             except BaseException:
                 with self._cv:
                     self._inflight.discard(want)
@@ -142,7 +152,8 @@ class TraceReplayStream:
                 self._inflight.add(pos)
         if item is None:
             try:
-                item = self._reader.batch(pos)
+                with self._span("trace.decode_sync"):
+                    item = self._reader.batch(pos)
             finally:
                 with self._cv:
                     self._inflight.discard(pos)

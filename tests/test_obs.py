@@ -1,0 +1,326 @@
+"""Telemetry layer (repro.obs) tests:
+
+  O1  registry: instrument dedup by (kind, name, labels), counter/gauge/
+      histogram snapshots, JSONL export validates against obs_metrics/v1.
+  O2  tracer: spans recorded on the EXECUTING thread; Chrome trace-event
+      export is valid (balanced B/E, monotone per-thread timestamps) with
+      >= 3 distinct threads; Tracer.totals() attributes wall-clock to the
+      (thread, span) that did the work; dangling spans are balanced.
+  O3  opt-in is structural: a ScratchPipe built without tracer/metrics has
+      no tracer, no counter cells, and no wrapped pool functions.
+  O4  bit parity: executor="overlapped" WITH full tracing+metrics is
+      bit-identical to untraced executor="sync" on recorded-style batches.
+  O5  counter correctness: cache.* counters equal the StepStats sums on
+      drift and flash_crowd scenario traces (incl. per-table cells).
+  O6  serving: serve.* counters match replay results (requests, latency
+      histogram count, emergency accounting vs StepStats.aux).
+  O7  the validators actually reject corrupt artifacts.
+"""
+import json
+import threading
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro import obs
+from repro.core.host_table import HostEmbeddingTable
+from repro.core.pipeline import ScratchPipe
+from repro.core.serving_cache import NoCacheServer, ReadOnlyCacheServer
+from repro.core.table_group import TableGroup
+from repro.data.lookahead import LookaheadStream
+from repro.obs.check import validate_chrome_trace, validate_metrics_jsonl
+from repro.serving import replay_serving
+from repro.traces.scenarios import scenario_batches
+
+DIM = 8
+
+
+class CountingTrainer:
+    """[Train] = +1 per unique touched slot: integer-exact parity oracle."""
+
+    def train_fn(self, storage, slots, batch):
+        uniq = jnp.unique(jnp.asarray(slots).ravel(), size=slots.size,
+                          fill_value=-1)
+        ok = uniq >= 0
+        upd = jnp.where(ok, uniq, 0)
+        add = jnp.zeros_like(storage).at[upd].add(
+            jnp.where(ok, 1.0, 0.0)[:, None]
+        )
+        return storage + add, {}
+
+
+def group_batches(scenario, steps=20, seed=7):
+    group = TableGroup.uniform(2, 400, DIM)
+    batches = [
+        gids
+        for gids, _ in scenario_batches(
+            scenario, group, steps, batch_size=4, lookups_per_table=3,
+            seed=seed,
+        )
+    ]
+    return group, batches
+
+
+def run_pipe(batches, group, **kw):
+    host = HostEmbeddingTable(group.total_rows, DIM, seed=1)
+    host.data[:] = 0.0
+    pipe = ScratchPipe(
+        host, 96, CountingTrainer().train_fn, table_group=group,
+        past_window=3, future_window=2, **kw
+    )
+    stream = LookaheadStream(iter([(b, {}) for b in batches]))
+    stats = pipe.run(stream, lookahead_fn=stream.peek_ids)
+    pipe.close()
+    pipe.flush_to_host()
+    return host.data.copy(), stats, pipe
+
+
+# ---------------------------------------------------------------------------
+# O1: metrics registry
+# ---------------------------------------------------------------------------
+def test_registry_dedup_and_counter():
+    m = obs.MetricsRegistry()
+    a = m.counter("cache.hits", runtime="x")
+    b = m.counter("cache.hits", runtime="x")
+    c = m.counter("cache.hits", runtime="y")
+    assert a is b and a is not c
+    a.inc()
+    a.inc(4)
+    assert a.value == 5 and c.value == 0
+    assert len(m) == 2
+
+
+def test_gauge_probe_and_histogram():
+    m = obs.MetricsRegistry()
+    box = {"v": 0}
+    m.gauge("probe", fn=lambda: box["v"])
+    h = m.histogram("lat", unit="us")
+    for v in (1, 2, 4, 100, 1000):
+        h.observe(v)
+    box["v"] = 42
+    snap = {r["name"]: r for r in m.snapshot()}
+    assert snap["probe"]["value"] == 42  # evaluated at snapshot time
+    assert snap["lat"]["count"] == 5
+    assert snap["lat"]["min"] == 1 and snap["lat"]["max"] == 1000
+    assert snap["lat"]["p50"] <= snap["lat"]["p99"]
+    # a probe that raises must not break the snapshot
+    m.gauge("bad", fn=lambda: 1 / 0)
+    bad = {r["name"]: r for r in m.snapshot()}["bad"]
+    assert bad["value"] is None and "error" in bad
+
+
+def test_metrics_jsonl_schema(tmp_path):
+    m = obs.MetricsRegistry()
+    m.counter("c").inc(3)
+    m.gauge("g").set(1.5)
+    m.histogram("h").observe(10)
+    path = str(tmp_path / "m.jsonl")
+    m.write_jsonl(path, provenance={"mode": "test"})
+    assert validate_metrics_jsonl(path) == []
+    lines = [json.loads(l) for l in open(path)]
+    assert lines[0]["schema"] == "obs_metrics/v1"
+    assert lines[0]["kind"] == "meta"
+    assert lines[0]["provenance"] == {"mode": "test"}
+    assert lines[0]["num_metrics"] == 3 == len(lines) - 1
+
+
+# ---------------------------------------------------------------------------
+# O2: tracer
+# ---------------------------------------------------------------------------
+def test_chrome_trace_multithread(tmp_path):
+    tr = obs.Tracer()
+
+    def worker(name):
+        with tr.span(name, cat="host"):
+            pass
+
+    with tr.span("main_stage"):
+        t1 = threading.Thread(target=worker, args=("w1",), name="worker-1")
+        t2 = threading.Thread(target=worker, args=("w2",), name="worker-2")
+        t1.start(), t2.start()
+        t1.join(), t2.join()
+    tr.instant("marker")
+    path = str(tmp_path / "t.json")
+    n = tr.export_chrome(path)
+    assert n > 0
+    assert validate_chrome_trace(path, min_threads=3) == []
+    doc = json.load(open(path))
+    names = {
+        e["args"]["name"]
+        for e in doc["traceEvents"]
+        if e["ph"] == "M" and e["name"] == "thread_name"
+    }
+    assert {"worker-1", "worker-2"} <= names
+    totals = tr.totals()
+    assert ("worker-1", "w1") in totals and ("worker-2", "w2") in totals
+
+
+def test_dangling_span_balanced(tmp_path):
+    tr = obs.Tracer()
+    s = tr.span("never_closed")
+    s.__enter__()  # simulate a thread that died mid-span
+    path = str(tmp_path / "d.json")
+    tr.export_chrome(path)
+    assert validate_chrome_trace(path) == []
+
+
+def test_wrap_attributes_to_executing_thread():
+    tr = obs.Tracer()
+    fn = tr.wrap("work", lambda x: x + 1, cat="host")
+    out = {}
+    t = threading.Thread(target=lambda: out.update(r=fn(1)), name="exec-thread")
+    t.start()
+    t.join()
+    assert out["r"] == 2
+    assert ("exec-thread", "work") in tr.totals()
+
+
+# ---------------------------------------------------------------------------
+# O3: opt-out is structural
+# ---------------------------------------------------------------------------
+def test_metrics_off_default_structure():
+    group, batches = group_batches("drift", steps=4)
+    _, _, pipe = run_pipe(batches, group)
+    assert pipe._tracer is None
+    assert pipe._mc is None
+
+
+def test_install_resolve_precedence():
+    g = obs.MetricsRegistry()
+    local = obs.MetricsRegistry()
+    obs.install(None, g)
+    try:
+        assert obs.resolve(None, None) == (None, g)
+        assert obs.resolve(None, local) == (None, local)  # explicit wins
+    finally:
+        obs.install(None, None)
+    assert obs.resolve(None, None) == (None, None)
+
+
+# ---------------------------------------------------------------------------
+# O4: bit parity under tracing
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("scenario", ["drift", "flash_crowd"])
+def test_traced_overlapped_parity(scenario):
+    group, batches = group_batches(scenario)
+    ref, ref_stats, _ = run_pipe(batches, group, executor="sync")
+    tr, m = obs.Tracer(), obs.MetricsRegistry()
+    got, got_stats, _ = run_pipe(
+        batches, group, executor="overlapped", tracer=tr, metrics=m
+    )
+    np.testing.assert_array_equal(ref, got)
+    assert [s.n_hits for s in ref_stats] == [s.n_hits for s in got_stats]
+    assert [s.n_evict for s in ref_stats] == [s.n_evict for s in got_stats]
+    # the traced run actually traced: host worker spans present
+    assert any(name == "collect.gather" for _, name in tr.totals())
+
+
+# ---------------------------------------------------------------------------
+# O5: counter correctness vs StepStats
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("scenario", ["drift", "flash_crowd"])
+def test_counters_match_stepstats(scenario):
+    group, batches = group_batches(scenario)
+    m = obs.MetricsRegistry()
+    _, stats, _ = run_pipe(batches, group, metrics=m)
+    lbl = {"runtime": "scratchpipe"}
+    assert m.counter("cache.cycles", **lbl).value == len(stats)
+    assert m.counter("cache.lookups", **lbl).value == sum(
+        s.n_lookups for s in stats
+    )
+    assert m.counter("cache.unique", **lbl).value == sum(
+        s.n_unique for s in stats
+    )
+    assert m.counter("cache.hits", **lbl).value == sum(s.n_hits for s in stats)
+    assert m.counter("cache.misses", **lbl).value == sum(
+        s.n_miss for s in stats
+    )
+    assert m.counter("cache.evicts", **lbl).value == sum(
+        s.n_evict for s in stats
+    )
+    for i, t in enumerate(group.tables):
+        assert m.counter("cache.hits", table=t.name, **lbl).value == sum(
+            int(s.by_table["hits"][i]) for s in stats
+        )
+        assert m.counter("cache.misses", table=t.name, **lbl).value == sum(
+            int(s.by_table["misses"][i]) for s in stats
+        )
+    # byte gauges read the unconditional traffic counters
+    snap = {
+        (r["name"], r["labels"].get("runtime")): r for r in m.snapshot()
+    }
+    assert snap[("traffic.host.read_bytes", "scratchpipe")]["value"] > 0
+
+
+# ---------------------------------------------------------------------------
+# O6: serving counters
+# ---------------------------------------------------------------------------
+def test_serving_counters_and_latency(tmp_path):
+    group, batches = group_batches("flash_crowd", steps=16)
+    host = HostEmbeddingTable(group.total_rows, DIM, seed=2)
+    m, tr = obs.MetricsRegistry(), obs.Tracer()
+    srv = ReadOnlyCacheServer(
+        host, 96, window=2, table_group=group, tracer=tr, metrics=m
+    )
+    res = replay_serving(srv, batches, depth=1)
+    lbl = {"runtime": "scratchpipe-serve"}
+    assert m.counter("serve.requests", **lbl).value == res["served"] == len(
+        batches
+    )
+    snap = {r["name"]: r for r in m.snapshot() if r["kind"] == "histogram"}
+    assert snap["serve.latency_us"]["count"] == res["served"]
+    # oracle emergency accounting from an untelemetried replay
+    srv2 = ReadOnlyCacheServer(host, 96, window=2, table_group=group)
+    emergencies = []
+    for b in batches:
+        srv2.enqueue(b)
+        _, st, _ = srv2.serve_next()
+        emergencies.append(
+            st.aux.get("emergency", 0) if isinstance(st.aux, dict) else 0
+        )
+    assert m.counter("serve.emergency_rows", **lbl).value == sum(emergencies)
+    assert m.counter("serve.emergency_serves", **lbl).value == sum(
+        1 for e in emergencies if e
+    )
+    assert any(name == "serve" for _, name in tr.totals())
+
+
+def test_serving_parity_with_telemetry(tmp_path):
+    group, batches = group_batches("drift", steps=12)
+    oracle = replay_serving(
+        NoCacheServer(HostEmbeddingTable(group.total_rows, DIM, seed=2)),
+        batches, depth=0, collect_bags=True,
+    )["bags"]
+    m, tr = obs.MetricsRegistry(), obs.Tracer()
+    srv = ReadOnlyCacheServer(
+        HostEmbeddingTable(group.total_rows, DIM, seed=2), 128, window=2,
+        table_group=group, tracer=tr, metrics=m,
+    )
+    bags = replay_serving(srv, batches, depth=2, collect_bags=True)["bags"]
+    for i, (a, b) in enumerate(zip(bags, oracle)):
+        np.testing.assert_array_equal(a, b, err_msg=f"batch {i}")
+
+
+# ---------------------------------------------------------------------------
+# O7: validators reject corruption
+# ---------------------------------------------------------------------------
+def test_validators_reject_bad_artifacts(tmp_path):
+    bad_trace = tmp_path / "bad.json"
+    bad_trace.write_text("{not json")
+    assert validate_chrome_trace(str(bad_trace)) != []
+    # unbalanced + non-monotone events
+    evil = {
+        "traceEvents": [
+            {"ph": "B", "name": "a", "pid": 1, "tid": 1, "ts": 10.0},
+            {"ph": "E", "pid": 1, "tid": 1, "ts": 5.0},
+            {"ph": "E", "pid": 1, "tid": 1, "ts": 6.0},
+        ]
+    }
+    evil_path = tmp_path / "evil.json"
+    evil_path.write_text(json.dumps(evil))
+    assert validate_chrome_trace(str(evil_path)) != []
+    bad_metrics = tmp_path / "bad.jsonl"
+    bad_metrics.write_text('{"kind": "counter", "name": "x"}\n')
+    assert validate_metrics_jsonl(str(bad_metrics)) != []
