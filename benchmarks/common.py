@@ -30,6 +30,7 @@ import numpy as np
 
 from repro.configs.base import DLRMConfig
 from repro.configs.dlrm_scratchpipe import hetero_rows
+from repro.core import scratchpad as sp
 from repro.core.dlrm_runtime import DLRMTrainer
 from repro.core.host_table import HostEmbeddingTable
 from repro.core.runtime import make_runtime
@@ -127,6 +128,9 @@ class DesignResult:
     source: str = "synthetic"  # synthetic | scenario:<name> | trace:<path>
     planner: str = "host"  # [Plan] placement: host | device
     kernel: str = "xla"  # embedding primitives: xla | pallas
+    precision: str = "fp32"  # scratchpad replica format: fp32 | fp16 | int8
+    rows_resident: int = 0  # cache rows held at the run's byte budget
+    cache_bytes: int = 0  # cache footprint incl. quantization metadata
 
 
 # Every run_design result lands here; benchmarks/run.py drains it into
@@ -180,6 +184,26 @@ def _finalize(
     )
 
 
+def _cache_residency(runner) -> tuple:
+    """(rows_resident, cache_bytes) of a runtime's device-cache storage.
+    Rows are replica rows (so fp16/int8 hold 2x/4x at equal byte budget);
+    bytes include quantization metadata via ``scratchpad.storage_bytes``."""
+    pipes = getattr(runner, "pipes", None)
+    if pipes:
+        return (
+            sum(p.num_slots for p in pipes),
+            sum(sp.storage_bytes(p.storage) for p in pipes),
+        )
+    storage = getattr(runner, "storage", None)
+    if storage is None:
+        return 0, 0
+    n = getattr(runner, "num_slots", None)
+    if n is None:  # static baseline: the pinned hot set is the residency
+        hot = getattr(runner, "hot_ids", None)
+        n = hot.size if hot is not None else 0
+    return int(n), int(sp.storage_bytes(storage))
+
+
 def sync_runtime(runner, trainer=None) -> None:
     """Quiesce a cache runtime before a timer edge: background
     (overlapped-executor) work first, then device buffers. Without this,
@@ -215,6 +239,7 @@ def run_design(
     fused: bool = False,
     planner: str = "host",
     kernel: str = "xla",
+    precision: str = "fp32",
     tracer=None,
     metrics=None,
 ) -> DesignResult:
@@ -258,6 +283,16 @@ def run_design(
     else:
         cfg = bench_cfg(embed_dim, lookups, num_tables=num_tables, hetero=hetero)
         group = TableGroup.from_config(cfg)
+    if precision != "fp32":
+        if design == "nocache":
+            raise ValueError(
+                "nocache holds no cached rows to quantize; precision is a "
+                "cache-replica knob"
+            )
+        # trainer reads cfg.precision; trace-manifest groups are recorded
+        # fp32, so re-target the group too (no-op for the synthetic path)
+        cfg = dataclasses.replace(cfg, precision=precision)
+        group = group.with_precision(precision)
     rows = group.total_rows
     tc = TraceConfig(
         num_tables=cfg.num_tables,
@@ -348,7 +383,7 @@ def run_design(
                 hot = hot_ids_global(tc, cache_frac, steps=20)
             runner = make_runtime(
                 "static", host, trainer.train_fn, hot_ids=hot,
-                tracer=tracer, metrics=metrics,
+                precision=precision, tracer=tracer, metrics=metrics,
             )
             stats = runner.run(batches())
             tr = runner.traffic()
@@ -368,12 +403,20 @@ def run_design(
                 )
                 need = sum(min(floor, r) for r in group.rows)
                 slots = max(slots, need)
-                budgets = group.slot_budgets(slots, min_per_table=floor)
+                # sharded passes per-shard budgets as NOMINAL byte budgets
+                # (each manager applies its own multiplier); the single-array
+                # runtimes take budgets already converted to replica rows
+                budget_fn = (
+                    group.slot_budgets if design == "sharded"
+                    else group.precision_slot_budgets
+                )
+                budgets = budget_fn(slots, min_per_table=floor)
             kw = {"tracer": tracer, "metrics": metrics}
             if design in ("scratchpipe", "strawman", "sharded"):
                 kw["executor"] = executor
                 kw["planner"] = planner
                 kw["kernel"] = kernel  # runtime-side [Insert] fills
+                kw["precision"] = precision
                 if fused and design != "sharded":
                     kw["fused_train_fn"] = trainer.fused_train_fn
             pipe = make_runtime(
@@ -407,9 +450,11 @@ def run_design(
         r.source = source
         r.planner = planner
         r.kernel = kernel
+        r.precision = precision
         RESULTS_LOG.append(r)
         return r
-    sync_runtime(runner if design in ("nocache", "static") else pipe, trainer)
+    runtime_obj = runner if design in ("nocache", "static") else pipe
+    sync_runtime(runtime_obj, trainer)
     wall_ms = (time.time() - t0) / steps * 1e3
     r = _finalize(
         design, locality, cache_frac, steps, hit,
@@ -418,6 +463,8 @@ def run_design(
     r.source = source
     r.planner = planner
     r.kernel = kernel
+    r.precision = precision
+    r.rows_resident, r.cache_bytes = _cache_residency(runtime_obj)
     RESULTS_LOG.append(r)
     return r
 

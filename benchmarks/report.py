@@ -26,6 +26,7 @@ from typing import List, Optional
 HERE = os.path.dirname(__file__)
 WALLCLOCK_PATH = os.path.join(HERE, "..", "BENCH_wallclock.json")
 SERVE_PATH = os.path.join(HERE, "..", "BENCH_serve.json")
+CAPACITY_PATH = os.path.join(HERE, "..", "BENCH_capacity.json")
 SUMMARY_PATH = os.path.join(HERE, "results", "BENCH_summary.json")
 
 # artifact -> (path, required schema tag, required at --check time)
@@ -33,7 +34,18 @@ ARTIFACTS = {
     "wallclock": (WALLCLOCK_PATH, "bench_wallclock/v1", True),
     "summary": (SUMMARY_PATH, "bench_summary/v1", False),
     "serve": (SERVE_PATH, "bench_serve/v1", False),
+    "capacity": (CAPACITY_PATH, "bench_capacity/v1", False),
 }
+
+
+def _fmt_bytes(n) -> str:
+    if not isinstance(n, (int, float)) or n <= 0:
+        return "—"
+    for unit in ("B", "KB", "MB", "GB"):
+        if n < 1024:
+            return f"{n:.0f} {unit}" if unit == "B" else f"{n:.1f} {unit}"
+        n /= 1024
+    return f"{n:.1f} TB"
 
 
 def load(sub):
@@ -157,15 +169,51 @@ def summary_trajectory() -> str:
         f"machine-class: `{_machine_tag(doc)}`  "
         f"(all_claims_ok={doc.get('all_claims_ok')})",
         "",
-        "| design | locality/source | planner | hit rate | model iter ms | wall ms |",
-        "|---|---|---|---|---|---|",
+        "| design | locality/source | planner | prec | hit rate | "
+        "bytes moved/iter | rows resident | model iter ms | wall ms |",
+        "|---|---|---|---|---|---|---|---|---|",
     ]
     for d in doc.get("designs", []):
         src = d.get("source") or d.get("locality")
+        # capacity-tier + interconnect traffic per iteration — the quantity
+        # the two-tier latency model prices, and the one reduced-precision
+        # replicas shrink (rows_resident says what the byte budget held)
+        moved = sum(
+            d.get(k) or 0 for k in ("host_bytes", "pcie_bytes", "dev_bytes")
+        )
+        rows = d.get("rows_resident") or 0
         lines.append(
             f"| {d['design']} | {src} | {d.get('planner', 'host')} | "
-            f"{d['hit_rate']:.3f} | {d['iter_ms_paper']:.2f} | "
-            f"{d.get('wall_ms', 0):.2f} |"
+            f"{d.get('precision', 'fp32')} | {d['hit_rate']:.3f} | "
+            f"{_fmt_bytes(moved)} | {rows if rows else '—'} | "
+            f"{d['iter_ms_paper']:.2f} | {d.get('wall_ms', 0):.2f} |"
+        )
+    return "\n".join(lines)
+
+
+def capacity_trajectory() -> str:
+    """Rows-resident / hit-rate per replica format at one shared byte
+    budget, from BENCH_capacity.json (benchmarks/capacity.py)."""
+    if not os.path.exists(CAPACITY_PATH):
+        return "(no BENCH_capacity.json checked in)"
+    doc = json.load(open(CAPACITY_PATH))
+    parity = {c["precision"]: c.get("bit_identical") for c in doc.get("parity", [])}
+    lines = [
+        f"machine-class: `{_machine_tag(doc)}`  (equal payload byte budget "
+        "per row; drift workload)",
+        "",
+        "| precision | rows resident | payload | cache bytes | "
+        "hit rate (warm) | pcie/step | xla==pallas |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for c in doc.get("runs", []):
+        lines.append(
+            f"| {c['precision']} | {c['rows_resident']} | "
+            f"{_fmt_bytes(c.get('payload_bytes'))} | "
+            f"{_fmt_bytes(c.get('cache_bytes'))} | "
+            f"{c['hit_rate_warm']:.4f} | "
+            f"{_fmt_bytes(c.get('pcie_bytes_per_step'))} | "
+            f"{parity.get(c['precision'], '—')} |"
         )
     return "\n".join(lines)
 
@@ -219,6 +267,16 @@ def check_artifact(name: str, path: str, schema: str) -> List[str]:
     elif name == "summary":
         if not isinstance(doc.get("designs"), list):
             problems.append("summary: missing designs list")
+    elif name == "capacity":
+        runs = doc.get("runs")
+        if not isinstance(runs, list) or not runs:
+            problems.append("capacity: no runs recorded")
+        for c in doc.get("parity", []):
+            if not c.get("bit_identical"):
+                problems.append(
+                    f"capacity: {c.get('precision')} xla vs pallas not "
+                    "bit-identical"
+                )
     elif name == "serve":
         if not isinstance(doc.get("results"), (list, dict)) and not doc.get(
             "designs"
@@ -275,6 +333,8 @@ def main() -> int:
     print(wallclock_trajectory())
     print("\n## Perf trajectory (bench summary)\n")
     print(summary_trajectory())
+    print("\n## Mixed-precision capacity\n")
+    print(capacity_trajectory())
     return 0
 
 

@@ -695,6 +695,52 @@ def regression_gate(
     return problems
 
 
+def smoke_section(result: dict) -> Optional[dict]:
+    """The gate-sized slice of a run: the run itself when it was recorded at
+    gate sizing, else its ``--with-smoke`` section, else None."""
+    cfg = result.get("config", {})
+    if (cfg.get("warmup"), cfg.get("steps")) == (GATE_WARMUP, GATE_STEPS):
+        return {k: result[k] for k in ("config", "runs", "planner")}
+    return result.get("smoke")
+
+
+def rolling_baseline(result: dict) -> Optional[dict]:
+    """A standalone ``--gate-fallback`` baseline from this run: its smoke
+    section plus the machine provenance the gate needs to verify class.
+    CI caches this per runner class, so the gate arms from the second run
+    on a class onward even when the checked-in baseline was recorded on a
+    different machine."""
+    smoke = smoke_section(result)
+    if smoke is None:
+        return None
+    return {
+        "schema": "bench_wallclock_smoke/v1",
+        "machine": result.get("machine") or machine_info(),
+        "smoke": smoke,
+    }
+
+
+def resolve_gate_baseline(
+    primary: dict, fallback: Optional[dict], current: Optional[dict] = None
+) -> tuple:
+    """Pick the first gate baseline recorded on THIS machine class: the
+    checked-in one, else the rolling fallback. Returns
+    ``(baseline_or_None, skip_reason_or_None, notes)`` — notes say which
+    baselines were rejected and why (printed loudly, never silent)."""
+    notes: List[str] = []
+    skip = gate_skip_reason(primary, current=current)
+    if skip is None:
+        return primary, None, notes
+    notes.append(f"checked-in baseline rejected: {skip}")
+    if fallback is not None:
+        fb_skip = gate_skip_reason(fallback, current=current)
+        if fb_skip is None:
+            notes.append("arming gate from the rolling baseline instead")
+            return fallback, None, notes
+        notes.append(f"rolling baseline rejected: {fb_skip}")
+    return None, skip, notes
+
+
 def check(result: dict) -> List[str]:
     """Sanity assertions for the CI perf-smoke job."""
     problems = []
@@ -775,6 +821,22 @@ def main():
         help="minimum fresh/baseline steps_per_s ratio before the gate "
         "fails (loose: CI machines differ from the recording machine)",
     )
+    ap.add_argument(
+        "--gate-fallback",
+        default=None,
+        metavar="SMOKE.json",
+        help="rolling baseline to arm the gate with when the --gate "
+        "baseline's machine class does not match this runner (CI caches a "
+        "--save-smoke file per runner class, so the gate arms from the "
+        "second run on the same class onward)",
+    )
+    ap.add_argument(
+        "--save-smoke",
+        default=None,
+        metavar="SMOKE.json",
+        help="write this run's gate-sized section (+ machine provenance) "
+        "as a standalone rolling-baseline file for --gate-fallback",
+    )
     args = ap.parse_args()
     warmup = args.warmup if args.warmup is not None else (
         GATE_WARMUP if args.tiny else 40
@@ -819,22 +881,48 @@ def main():
     if args.gate:
         with open(args.gate) as f:
             gate_baseline = json.load(f)
-        skip = gate_skip_reason(gate_baseline)
-        if skip:
+        fallback = None
+        if args.gate_fallback and os.path.exists(args.gate_fallback):
+            with open(args.gate_fallback) as f:
+                fallback = json.load(f)
+        baseline, skip, notes = resolve_gate_baseline(gate_baseline, fallback)
+        for n in notes:
+            print(f"  [GATE] {n}")
+        if baseline is None:
             # loudly NOT a pass: a cross-machine ratio would need a
-            # threshold loose enough to mask real regressions
-            print(f"  [SKIP][gate] {skip}")
+            # threshold loose enough to mask real regressions. With
+            # --gate-fallback + --save-smoke wired (CI), the gate arms
+            # itself from the second run on this machine class onward.
             print(
-                "  [SKIP][gate] perf gate not applied — re-record the "
-                "baseline on this machine class (--with-smoke) to arm it"
+                "  [SKIP][gate] perf gate not applied — no baseline from "
+                "this machine class yet (--with-smoke re-record, or let "
+                "the --save-smoke rolling baseline arm it next run)"
             )
         else:
-            problems = regression_gate(result, gate_baseline, args.gate_ratio)
+            problems = regression_gate(result, baseline, args.gate_ratio)
             for p in problems:
                 print(f"  [FAIL][gate] {p}")
             failures += problems
             if not problems:
-                print(f"  [PASS] perf gate vs {args.gate}")
+                which = (
+                    args.gate if baseline is gate_baseline
+                    else args.gate_fallback
+                )
+                print(f"  [PASS] perf gate vs {which}")
+    if args.save_smoke:
+        roll = rolling_baseline(result)
+        if roll is None:
+            print(
+                "  [WARN] --save-smoke ignored: run carries no gate-sized "
+                "section (use --tiny or --with-smoke)"
+            )
+        else:
+            d = os.path.dirname(args.save_smoke)
+            if d:
+                os.makedirs(d, exist_ok=True)
+            with open(args.save_smoke, "w") as f:
+                json.dump(roll, f, indent=1)
+            print(f"smoke,{args.save_smoke}")
     if failures:
         raise SystemExit(1)
 

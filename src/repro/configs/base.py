@@ -207,10 +207,21 @@ class DLRMConfig:
     # embedding-primitive implementation: "xla" (stock ops) or "pallas"
     # (fused cycle kernels; interpret-mode off-TPU, bit-identical to "xla")
     kernel: str = "xla"
+    # scratchpad replica precision (core/quantize.py): the host table keeps
+    # fp32 masters; "fp16"/"int8" rows multiply the resident working set
+    # 2x/4x at the same byte budget. ``rounding`` selects how in-cache
+    # updates re-quantize ("stochastic" keeps repeated small updates
+    # unbiased; only consulted when precision != "fp32").
+    precision: str = "fp32"
+    rounding: str = "stochastic"
 
     def __post_init__(self):
         if self.table_rows is not None:
             object.__setattr__(self, "num_tables", len(self.table_rows))
+        if self.precision not in ("fp32", "fp16", "int8"):
+            raise ValueError(f"bad precision {self.precision!r}")
+        if self.rounding not in ("nearest", "stochastic"):
+            raise ValueError(f"bad rounding {self.rounding!r}")
 
     @property
     def table_row_list(self) -> Tuple[int, ...]:

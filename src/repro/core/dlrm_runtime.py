@@ -26,6 +26,7 @@ from typing import Any, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import quantize as qz
 from repro.core import scratchpad as sp
 from repro.models import dlrm
 
@@ -83,20 +84,109 @@ def dlrm_fill_train_step(
     return storage, mlps, loss
 
 
+@functools.partial(
+    jax.jit, donate_argnums=(0,), static_argnames=("kernel", "lr", "rounding")
+)
+def dlrm_train_step_q(
+    storage, mlps, slots, dense, label, key, lr, kernel="xla",
+    rounding="stochastic",
+):
+    """Reduced-precision twin of :func:`dlrm_train_step`: the gather
+    dequantizes in-kernel (fp32 bags into the SAME loss), and the update
+    re-quantizes only the touched rows (scratchpad.apply_grad_q). ``key``
+    seeds the stochastic-rounding noise and must be per-step (the trainer
+    folds the step index in); it is traced, so one executable serves every
+    step. The MLP math is identical to the fp32 step — only the storage
+    operand and its update epilogue differ."""
+
+    def loss_fn(mlps_, bags):
+        logit = dlrm.forward_from_bags(mlps_, dense, bags)
+        return dlrm.bce_loss(logit, label)
+
+    bags = sp.gather_reduce_q(storage, slots, kernel=kernel)
+    loss, (g_mlps, g_bags) = jax.value_and_grad(loss_fn, argnums=(0, 1))(mlps, bags)
+    mlps = jax.tree.map(lambda p, g: p - lr * g, mlps, g_mlps)
+    storage = sp.apply_grad_q(
+        storage, slots, g_bags, lr, key, kernel=kernel, rounding=rounding
+    )
+    return storage, mlps, loss
+
+
+@functools.partial(
+    jax.jit, donate_argnums=(0,), static_argnames=("kernel", "lr", "rounding")
+)
+def dlrm_fill_train_step_q(
+    storage, mlps, fill_slots, fill_rows, slots, dense, label, key, lr,
+    kernel="xla", rounding="stochastic",
+):
+    """Fused quantized cycle: host-quantized ``fill_rows`` land first (for
+    int8 the scale column is scatter-updated before the payload kernel so
+    intra-cycle gathers of just-filled rows are coherent), then the
+    dequantizing gather + loss + re-quantizing update. Still two launches
+    per cycle under ``kernel="pallas"``."""
+
+    def loss_fn(mlps_, bags):
+        logit = dlrm.forward_from_bags(mlps_, dense, bags)
+        return dlrm.bce_loss(logit, label)
+
+    storage, bags = sp.fill_gather_reduce_q(
+        storage, fill_slots, fill_rows, slots, kernel=kernel
+    )
+    loss, (g_mlps, g_bags) = jax.value_and_grad(loss_fn, argnums=(0, 1))(mlps, bags)
+    mlps = jax.tree.map(lambda p, g: p - lr * g, mlps, g_mlps)
+    storage = sp.apply_grad_q(
+        storage, slots, g_bags, lr, key, kernel=kernel, rounding=rounding
+    )
+    return storage, mlps, loss
+
+
 class DLRMTrainer:
     """Holds the dense (MLP) parameters; exposes train_fn(storage, slots,
-    batch) for the cache runtimes. ``kernel`` defaults to the config's
-    ``kernel`` field (DLRMConfig), else "xla"."""
+    batch) for the cache runtimes. ``kernel``/``precision``/``rounding``
+    default to the config's fields (DLRMConfig), else "xla"/"fp32"/
+    "stochastic". With a reduced precision the trainer routes through the
+    ``*_q`` steps and threads a per-step PRNG key for stochastic rounding
+    (derived by folding a constant then the step index into ``key``, so the
+    MLP init — and therefore the fp32 path — is byte-identical to before)."""
 
-    def __init__(self, cfg, key, lr: float = 0.05, kernel: str = None):
+    def __init__(self, cfg, key, lr: float = 0.05, kernel: str = None,
+                 precision: str = None, rounding: str = None):
         self.cfg = cfg
         self.lr = lr
         self.kernel = sp._check_kernel(
             kernel if kernel is not None else getattr(cfg, "kernel", "xla")
         )
+        self.precision = qz.check_precision(
+            precision if precision is not None
+            else getattr(cfg, "precision", "fp32")
+        )
+        self.rounding = qz.check_rounding(
+            rounding if rounding is not None
+            else getattr(cfg, "rounding", "stochastic")
+        )
         self.mlps = dlrm.init_mlps(cfg, key)
+        self._sr_base = jax.random.fold_in(key, 0x5EED)
+        self._step = 0
+
+    def _next_key(self):
+        k = jax.random.fold_in(self._sr_base, self._step)
+        self._step += 1
+        return k
 
     def train_fn(self, storage, slots, batch) -> Tuple[jax.Array, Dict[str, Any]]:
+        if self.precision != "fp32":
+            storage, self.mlps, loss = dlrm_train_step_q(
+                storage,
+                self.mlps,
+                slots,
+                batch["dense"],
+                batch["label"],
+                self._next_key(),
+                lr=self.lr,
+                kernel=self.kernel,
+                rounding=self.rounding,
+            )
+            return storage, {"loss": loss}
         storage, self.mlps, loss = dlrm_train_step(
             storage,
             self.mlps,
@@ -113,6 +203,21 @@ class DLRMTrainer:
     ) -> Tuple[jax.Array, Dict[str, Any]]:
         """[Insert]-fill + [Train] in one dispatch (pass as
         ``ScratchPipe(..., fused_train_fn=trainer.fused_train_fn)``)."""
+        if self.precision != "fp32":
+            storage, self.mlps, loss = dlrm_fill_train_step_q(
+                storage,
+                self.mlps,
+                fill_slots,
+                fill_rows,
+                slots,
+                batch["dense"],
+                batch["label"],
+                self._next_key(),
+                lr=self.lr,
+                kernel=self.kernel,
+                rounding=self.rounding,
+            )
+            return storage, {"loss": loss}
         storage, self.mlps, loss = dlrm_fill_train_step(
             storage,
             self.mlps,

@@ -62,6 +62,16 @@ The runtime also keeps per-tier byte counters ([Collect]/[Insert] host bytes,
 bandwidth model reproducing the paper's latency figures. Counters always
 track LOGICAL (unpadded) bytes and are updated unconditionally, so both
 executors and both dispatch paths report identical traffic.
+
+Mixed precision (``precision="fp32"|"fp16"|"int8"``, core/quantize.py): the
+host table keeps fp32 masters; the scratchpad holds quantized replicas.
+``num_slots`` is then a BYTE budget in fp32-row units — fp16 holds 2x, int8
+4x resident rows in the same allocation. Master rows quantize inside the
+[Collect] gather (worker thread under overlapped; the h2d already moves
+small rows), evictions dequantize on write-back, and the pcie/hbm counters
+track the replica row size (== the fp32 size at fp32, so the default path's
+counters are bitwise unchanged). Pair with a trainer built with the same
+``precision=`` so [Train] uses the dequantizing gather.
 """
 from __future__ import annotations
 
@@ -76,6 +86,7 @@ from typing import (
 import jax
 import numpy as np
 
+from repro.core import quantize as qz
 from repro.core import scratchpad as sp
 from repro.core.host_table import HostEmbeddingTable, HostTraffic
 from repro.core.plan import Planner, PlanResult, pad_index, pad_len, pad_rows
@@ -131,8 +142,12 @@ _pad_index = pad_index
 _pad_rows = pad_rows
 
 
-def _d2h_slice(arr, n: int) -> np.ndarray:
-    """d2h-worker task: sync the victim-row device read and drop padding."""
+def _d2h_slice(arr, n: int):
+    """d2h-worker task: sync the victim-row device read and drop padding.
+    An int8 scratchpad reads back a (payload, scale) pair — both components
+    cross d2h quantized; the host dequantizes at write-back."""
+    if isinstance(arr, tuple):
+        return tuple(np.asarray(a)[:n] for a in arr)
     return np.asarray(arr)[:n]
 
 
@@ -148,6 +163,7 @@ class ScratchPipe:
         policy: str = "lru",
         pipelined: bool = True,
         storage_dtype=None,
+        precision: Optional[str] = None,
         table_group: Optional[TableGroup] = None,
         slot_budgets=None,
         executor: str = "sync",
@@ -175,6 +191,30 @@ class ScratchPipe:
         self.planner_placement = planner
         self.pad_buckets = tuple(sorted(pad_buckets)) if pad_buckets else None
         self.table_group = table_group
+        # -- replica precision (core/quantize.py) --------------------------- #
+        # ``num_slots`` is the BYTE budget in fp32-row units: a reduced
+        # precision multiplies the resident row count (fp16 2x, int8 4x)
+        # instead of shrinking the allocation. Explicit ``precision=`` must
+        # agree with the table group's (uniform) per-table precision; mixed
+        # per-table precisions need ShardedScratchPipe (one storage array
+        # here = one dtype).
+        group_prec = (
+            table_group.uniform_precision() if table_group is not None else None
+        )
+        if precision is None:
+            precision = group_prec or "fp32"
+        elif group_prec is not None and precision != group_prec:
+            raise ValueError(
+                f"precision={precision!r} conflicts with the table group's "
+                f"uniform precision {group_prec!r}"
+            )
+        self.precision = qz.check_precision(precision)
+        if self.precision != "fp32" and storage_dtype is not None:
+            raise ValueError(
+                "storage_dtype is the fp32-path experiment knob; "
+                "reduced precision is selected with precision= alone"
+            )
+        eff_slots = num_slots * qz.SLOT_MULTIPLIER[self.precision]
         if not pipelined:  # straw-man (§IV-B): depth-1, no hazards possible
             past_window, future_window = 0, 0
         if table_group is not None:
@@ -186,11 +226,11 @@ class ScratchPipe:
             budgets = (
                 list(slot_budgets)
                 if slot_budgets is not None
-                else table_group.slot_budgets(num_slots)
+                else table_group.precision_slot_budgets(num_slots)
             )
-            if sum(budgets) > num_slots:
+            if sum(budgets) > eff_slots:
                 raise ValueError(
-                    f"slot budgets {budgets} exceed num_slots={num_slots}"
+                    f"slot budgets {budgets} exceed num_slots={eff_slots}"
                 )
             row_offsets = table_group.offsets
             slot_ranges = table_group.slot_ranges(budgets)
@@ -203,7 +243,7 @@ class ScratchPipe:
 
             self.planner = DevicePlanner(
                 host_table.rows,
-                num_slots,
+                eff_slots,
                 past_window=past_window,
                 future_window=future_window,
                 policy=policy,
@@ -214,7 +254,7 @@ class ScratchPipe:
         else:
             self.planner = Planner(
                 host_table.rows,
-                num_slots,
+                eff_slots,
                 past_window=past_window,
                 future_window=future_window,
                 policy=policy,
@@ -225,8 +265,16 @@ class ScratchPipe:
         import jax.numpy as jnp
 
         dt = storage_dtype or jnp.dtype(host_table.data.dtype.name)
-        self.storage = sp.make_storage(num_slots, host_table.dim, dt)
-        self.num_slots = num_slots
+        self.storage = sp.make_storage(
+            eff_slots, host_table.dim, dt, precision=self.precision
+        )
+        self.num_slots = eff_slots
+        self.nominal_slots = num_slots  # the fp32-row byte budget
+        # bytes ONE replica row moves over pcie/hbm (== host.row_bytes at
+        # fp32, so the default path's counters are bitwise unchanged)
+        self._row_bytes = qz.row_bytes(
+            host_table.dim, self.precision, host_table.data.dtype.itemsize
+        )
         self.pcie = HostTraffic()  # read = d2h, written = h2d
         self.hbm = HostTraffic()  # device-side traffic ([Train] + fills)
         self._window: Deque[_InFlight] = collections.deque()
@@ -253,6 +301,15 @@ class ScratchPipe:
         # cycle), so spans land on the worker/d2h thread that runs them and
         # the on-path allocates no closures in the loop either.
         self._gather_fn = self.host.gather
+        if self.precision != "fp32":
+            # master -> replica quantization runs INSIDE the gather fn, so
+            # under executor="overlapped" it lands on the host worker thread
+            # (off the critical path) and the h2d transfer below already
+            # moves the small quantized rows.
+            def _gather_quantized(ids, _g=self.host.gather, _p=self.precision):
+                return qz.quantize_rows_np(_g(ids), _p)
+
+            self._gather_fn = _gather_quantized
         self._writeback_fn = self._writeback
         self._d2h_slice_fn = _d2h_slice
         if self._tracer is not None:
@@ -288,6 +345,8 @@ class ScratchPipe:
                  m.counter("cache.misses", table=t.name, **labels))
                 for t in self.table_group.tables
             ]
+        m.gauge("scratchpad.bytes", fn=lambda: sp.storage_bytes(self.storage),
+                dtype=self.precision, **labels)
         m.gauge("traffic.pcie.h2d_bytes", fn=lambda: self.pcie.written, **labels)
         m.gauge("traffic.pcie.d2h_bytes", fn=lambda: self.pcie.read, **labels)
         m.gauge("traffic.hbm.read_bytes", fn=lambda: self.hbm.read, **labels)
@@ -345,10 +404,17 @@ class ScratchPipe:
         while self._pending:
             self._pending.popleft().result()
 
+    def _dequant(self, rows):
+        """replica -> master: dequantize written-back rows (identity at
+        fp32). Runs host-side, on the worker thread under overlapped."""
+        if self.precision == "fp32":
+            return rows
+        return qz.dequantize_rows_np(rows, self.precision)
+
     def _writeback(self, evict_ids: np.ndarray, d2h: Future) -> None:
         """Host-worker task: wait for the victims' d2h, then scatter. Runs
         strictly after every earlier-submitted gather (one ordered worker)."""
-        self.host.scatter(evict_ids, d2h.result())
+        self.host.scatter(evict_ids, self._dequant(d2h.result()))
 
     def close(self) -> None:
         """Quiesce and release the overlapped executor's worker threads.
@@ -393,7 +459,7 @@ class ScratchPipe:
                 entry.evicted_dev = sp.read(
                     self.storage, pad_index(p.evict_slots, 0, self.pad_buckets)
                 )
-            self.hbm.read += p.evict_slots.size * self.host.row_bytes
+            self.hbm.read += p.evict_slots.size * self._row_bytes
         entry.times["collect"] = time.perf_counter() - t0
 
     def _stage_exchange(self, entry: _InFlight):
@@ -406,9 +472,11 @@ class ScratchPipe:
                     if entry.host_rows_f is not None
                     else entry.host_rows
                 )
-                entry.fetched_dev = jax.device_put(
-                    pad_rows(rows, self.pad_buckets)
-                )  # h2d
+                if isinstance(rows, tuple):  # int8: (payload, scale) pair
+                    rows = tuple(pad_rows(r, self.pad_buckets) for r in rows)
+                else:
+                    rows = pad_rows(rows, self.pad_buckets)
+                entry.fetched_dev = jax.device_put(rows)  # h2d
             n_evict = int(p.evict_slots.size)
             if n_evict:
                 if self._d2h_pool is not None:
@@ -419,8 +487,8 @@ class ScratchPipe:
                     entry.evicted_host = self._d2h_slice_fn(
                         entry.evicted_dev, n_evict
                     )  # d2h
-            self.pcie.written += p.miss_ids.size * self.host.row_bytes
-            self.pcie.read += p.evict_slots.size * self.host.row_bytes
+            self.pcie.written += p.miss_ids.size * self._row_bytes
+            self.pcie.read += p.evict_slots.size * self._row_bytes
         entry.times["exchange"] = time.perf_counter() - t0
 
     def _stage_insert_host(self, entry: _InFlight):
@@ -434,7 +502,9 @@ class ScratchPipe:
                         self._writeback_fn, p.evict_ids, entry.evicted_host_f
                     )
                 else:
-                    self.host.scatter(p.evict_ids, entry.evicted_host)
+                    self.host.scatter(
+                        p.evict_ids, self._dequant(entry.evicted_host)
+                    )
         entry.times["insert"] = time.perf_counter() - t0
 
     def _stage_insert_fill(self, entry: _InFlight):
@@ -449,7 +519,7 @@ class ScratchPipe:
                     entry.fetched_dev,
                     kernel=self.kernel,
                 )
-            self.hbm.written += p.fill_slots.size * self.host.row_bytes
+            self.hbm.written += p.fill_slots.size * self._row_bytes
         entry.times["insert"] = entry.times.get("insert", 0.0) + (
             time.perf_counter() - t0
         )
@@ -477,14 +547,14 @@ class ScratchPipe:
                 p.slots,
                 entry.batch,
             )
-            self.hbm.written += fp.fill_slots.size * self.host.row_bytes
+            self.hbm.written += fp.fill_slots.size * self._row_bytes
             fused_entry.times["insert"] = fused_entry.times.get("insert", 0.0)
         else:
             self.storage, aux = self.train_fn(self.storage, p.slots, entry.batch)
         # [Train] HBM traffic: gather reads + coalesced scatter read-mod-write
-        self.hbm.read += p.slots.size * self.host.row_bytes
-        self.hbm.read += p.n_unique * self.host.row_bytes
-        self.hbm.written += p.n_unique * self.host.row_bytes
+        self.hbm.read += p.slots.size * self._row_bytes
+        self.hbm.read += p.n_unique * self._row_bytes
+        self.hbm.written += p.n_unique * self._row_bytes
         by_table = None
         if p.hits_by_table is not None:
             by_table = {"hits": p.hits_by_table, "misses": p.misses_by_table}
@@ -653,8 +723,12 @@ class ScratchPipe:
         slot_to_id = self.planner.slot_to_id
         live = np.flatnonzero(slot_to_id >= 0)
         if live.size:
-            vals = np.asarray(sp.read(self.storage, live))
-            self.host.scatter(slot_to_id[live], vals)
+            vals = sp.read(self.storage, live)
+            if isinstance(vals, tuple):
+                vals = tuple(np.asarray(v) for v in vals)
+            else:
+                vals = np.asarray(vals)
+            self.host.scatter(slot_to_id[live], self._dequant(vals))
 
     # -- checkpoint/restart (paper-system fault tolerance) ----------------- #
     def state_arrays(self) -> dict:
@@ -664,7 +738,12 @@ class ScratchPipe:
         an IDENTICAL schedule (tests/test_perf_flags_and_ft.py)."""
         assert not self._window, "checkpoint only at drain boundaries"
         self._barrier()
-        out = {"host_table": self.host.data, "storage": np.asarray(self.storage)}
+        out = {"host_table": self.host.data}
+        if isinstance(self.storage, sp.QuantStorage):
+            out["storage"] = np.asarray(self.storage.data)
+            out["storage_scale"] = np.asarray(self.storage.scale)
+        else:
+            out["storage"] = np.asarray(self.storage)
         for k, v in self.planner.state_dict().items():
             out[f"planner_{k}"] = v
         return out
@@ -673,7 +752,13 @@ class ScratchPipe:
         assert not self._window
         self._barrier()
         self.host.data = np.asarray(arrays["host_table"])
-        self.storage = jax.device_put(np.asarray(arrays["storage"]))
+        if "storage_scale" in arrays:
+            self.storage = sp.QuantStorage(
+                jax.device_put(np.asarray(arrays["storage"])),
+                jax.device_put(np.asarray(arrays["storage_scale"])),
+            )
+        else:
+            self.storage = jax.device_put(np.asarray(arrays["storage"]))
         self.planner.load_state_dict(
             {k[len("planner_"):]: v for k, v in arrays.items()
              if k.startswith("planner_")}

@@ -1,0 +1,247 @@
+"""Mixed-precision scratchpad rows: quantize/dequantize + byte accounting.
+
+The host table always keeps fp32 *master* rows; the scratchpad may hold a
+reduced-precision *replica* of each resident row (arXiv:2010.11305). At an
+equal byte budget the replica precision multiplies the resident working
+set: fp16 rows are 2x smaller, int8 rows 4x. The coherence rule is
+one-directional and simple:
+
+* master -> replica: quantize on [Collect] (host side, before h2d, so the
+  PCIe transfer already moves the small rows);
+* replica -> master: dequantize on write-back ([Insert]-host for evictions,
+  ``flush_to_host`` at the end) — the fp32 master simply receives the
+  dequantized replica, which holds every in-cache update the row saw while
+  resident;
+* in-cache updates re-quantize through ``requantize_update`` (optionally
+  with stochastic rounding so repeated small updates are unbiased instead
+  of being swallowed by round-to-nearest).
+
+Quantization formats
+--------------------
+``fp16``   plain ``float16`` rows, round-to-nearest-even on quantize.
+``int8``   symmetric per-row scale: ``scale = max|row| / 127`` (1.0 for
+           all-zero rows), ``q = clip(round(row / scale), -127, 127)``,
+           ``dequant = q * scale``. The fp32 scale column is the per-row
+           metadata; ``row_bytes``/``storage_bytes`` count it honestly.
+
+int8 scales are SNAPPED: clamped to the fp32 normal range and truncated to
+16 explicit mantissa bits (17 significant). Payloads are in [-127, 127]
+(7 significant bits), so every dequant product ``payload * scale`` has at
+most 24 significant bits — EXACT in fp32. This is what makes the
+xla/pallas per-precision bit-parity compiler-proof: XLA freely contracts
+``acc += payload * scale`` into an FMA (it does, even across
+``optimization_barrier`` on CPU), but an FMA of an exact product rounds
+identically to mul-then-add, so contraction can no longer split the two
+kernel paths. The snap costs < 2^-16 relative scale error — noise next to
+int8's 2^-8 quantization step.
+
+The *slot* multiplier below intentionally counts row payload only
+({fp32: 1, fp16: 2, int8: 4} rows per fp32-row budget); the scale metadata
+(~``4/dim`` relative) is reported by the byte-accounting helpers but not
+credited against the nominal budget — capacity claims stay conservative.
+
+Everything here is shared verbatim by the ``kernel="xla"`` and
+``kernel="pallas"`` paths (host numpy on the collect side, jnp epilogue on
+the update side), so per-precision bit-parity between the two kernels never
+depends on this module agreeing with itself.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PRECISIONS = ("fp32", "fp16", "int8")
+ROUNDINGS = ("nearest", "stochastic")
+
+#: rows held per fp32-row of byte budget (payload bytes only; see module doc)
+SLOT_MULTIPLIER = {"fp32": 1, "fp16": 2, "int8": 4}
+
+_INT8_MAX = 127.0
+_F16_MAX = 65504.0
+# f32 has 23 mantissa bits, f16 has 10: stochastic rounding to f16 adds
+# U[0, 2^13) to the low bits then truncates them.
+_F16_DROP_BITS = 13
+# int8 scale snap (see module doc): keep 16 explicit mantissa bits so the
+# dequant product payload*scale is exact in fp32; clamp out of the
+# subnormal range so the product's exactness argument holds everywhere.
+_SCALE_DROP_BITS = 23 - 16
+_SCALE_MASK = np.uint32((0xFFFFFFFF >> _SCALE_DROP_BITS) << _SCALE_DROP_BITS)
+_F32_MIN_NORMAL = np.float32(2.0 ** -126)
+
+
+def check_precision(precision: str) -> str:
+    if precision not in PRECISIONS:
+        raise ValueError(
+            f"precision must be one of {PRECISIONS}, got {precision!r}"
+        )
+    return precision
+
+
+def check_rounding(rounding: str) -> str:
+    if rounding not in ROUNDINGS:
+        raise ValueError(
+            f"rounding must be one of {ROUNDINGS}, got {rounding!r}"
+        )
+    return rounding
+
+
+class QuantStorage(NamedTuple):
+    """int8 scratchpad storage: row payload + per-row fp32 scale column.
+
+    A NamedTuple so it is a jax pytree — it flows through jit/donate and
+    ``jax.block_until_ready`` like the plain-array storages do.
+    """
+
+    data: jax.Array   # (num_slots, dim) int8
+    scale: jax.Array  # (num_slots, 1) fp32
+
+
+#: a scratchpad storage operand: plain rows, or int8 rows + scale column
+Storage = Union[jax.Array, QuantStorage]
+
+#: a block of quantized rows in transit (h2d fill / d2h evict)
+QuantRows = Tuple[np.ndarray, np.ndarray]
+
+
+def row_bytes(dim: int, precision: str, itemsize: int = 4) -> int:
+    """Bytes ONE row moves over a link (or occupies at rest), including the
+    int8 per-row scale metadata. ``itemsize`` is the fp32-path element size
+    (4 unless an experiment stores bf16 masters)."""
+    check_precision(precision)
+    if precision == "fp16":
+        return dim * 2
+    if precision == "int8":
+        return dim * 1 + 4  # payload + fp32 scale
+    return dim * itemsize
+
+
+# --------------------------------------------------------------------------- #
+# host-side (numpy) quantize/dequantize — the [Collect]/write-back halves
+# --------------------------------------------------------------------------- #
+def quantize_rows_np(rows: np.ndarray, precision: str):
+    """Quantize a (n, dim) block of fp32 master rows for the h2d fill.
+
+    Returns the rows unchanged for fp32, a float16 array for fp16, and an
+    ``(int8 data, fp32 scale (n, 1))`` pair for int8. Deterministic
+    round-to-nearest: fill quantization re-encodes the master, so there is
+    no accumulated-update bias for stochastic rounding to fix.
+    """
+    check_precision(precision)
+    if precision == "fp32":
+        return rows
+    rows = np.asarray(rows, dtype=np.float32)
+    if precision == "fp16":
+        return rows.astype(np.float16)
+    absmax = np.max(np.abs(rows), axis=1, keepdims=True)
+    scale = np.where(absmax > 0, absmax / _INT8_MAX, np.float32(1.0))
+    scale = _snap_scale_np(scale.astype(np.float32))
+    q = np.clip(np.round(rows / scale), -_INT8_MAX, _INT8_MAX)
+    return q.astype(np.int8), scale
+
+
+def _snap_scale_np(scale: np.ndarray) -> np.ndarray:
+    """Clamp to the fp32 normal range and truncate to 16 explicit mantissa
+    bits — the exact-product discipline (module doc). Rows whose absmax is
+    subnormal quantize against the clamped (larger) scale, i.e. to a zero
+    payload: the documented sub-1e-36 edge case."""
+    s = np.maximum(scale.astype(np.float32), _F32_MIN_NORMAL)
+    return (s.view(np.uint32) & _SCALE_MASK).view(np.float32)
+
+
+def dequantize_rows_np(rows, precision: str) -> np.ndarray:
+    """Write-back half: replica rows (as produced by ``quantize_rows_np`` or
+    read back from a quantized scratchpad) -> fp32 rows for the master."""
+    check_precision(precision)
+    if precision == "fp32":
+        return np.asarray(rows)
+    if precision == "fp16":
+        return np.asarray(rows, dtype=np.float16).astype(np.float32)
+    data, scale = rows
+    return np.asarray(data, dtype=np.float32) * np.asarray(
+        scale, dtype=np.float32
+    )
+
+
+# --------------------------------------------------------------------------- #
+# device-side (jnp) re-quantization — the in-cache update epilogue
+# --------------------------------------------------------------------------- #
+def _snap_scale_jnp(scale: jax.Array) -> jax.Array:
+    """jnp twin of ``_snap_scale_np`` (identical bit manipulation)."""
+    s = jnp.maximum(scale.astype(jnp.float32), jnp.float32(_F32_MIN_NORMAL))
+    bits = jax.lax.bitcast_convert_type(s, jnp.uint32) & jnp.uint32(_SCALE_MASK)
+    return jax.lax.bitcast_convert_type(bits, jnp.float32)
+
+
+def _int8_scale(x: jax.Array) -> jax.Array:
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    return _snap_scale_jnp(
+        jnp.where(absmax > 0, absmax / _INT8_MAX, jnp.float32(1.0))
+    )
+
+
+def quantize_int8_jnp(
+    x: jax.Array, scale: jax.Array, rounding: str, key
+) -> jax.Array:
+    """fp32 -> int8 against a given per-row scale. ``stochastic`` uses
+    ``floor(y + u)``, u ~ U[0, 1): unbiased for y within the clip range."""
+    check_rounding(rounding)
+    y = x.astype(jnp.float32) / scale
+    if rounding == "stochastic":
+        u = jax.random.uniform(key, x.shape, dtype=jnp.float32)
+        q = jnp.floor(y + u)
+    else:
+        q = jnp.round(y)
+    return jnp.clip(q, -_INT8_MAX, _INT8_MAX).astype(jnp.int8)
+
+
+def quantize_f16_jnp(x: jax.Array, rounding: str, key) -> jax.Array:
+    """fp32 -> fp16. ``stochastic`` adds U[0, 2^13) to the low f32 mantissa
+    bits then truncates them — unbiased for values in the f16 normal range
+    (subnormal results re-round on the final cast; documented bias there is
+    below one f16 subnormal ulp)."""
+    check_rounding(rounding)
+    x = jnp.clip(x.astype(jnp.float32), -_F16_MAX, _F16_MAX)
+    if rounding == "nearest":
+        return x.astype(jnp.float16)
+    bits = jax.lax.bitcast_convert_type(x, jnp.uint32)
+    noise = jax.random.bits(key, x.shape, dtype=jnp.uint32)
+    noise = noise & jnp.uint32((1 << _F16_DROP_BITS) - 1)
+    mask = jnp.uint32(~((1 << _F16_DROP_BITS) - 1) & 0xFFFFFFFF)
+    bits = (bits + noise) & mask
+    out = jax.lax.bitcast_convert_type(bits, jnp.float32).astype(jnp.float16)
+    # rounding up at the very top of the f16 range can overflow to inf
+    return jnp.clip(out, jnp.float16(-_F16_MAX), jnp.float16(_F16_MAX))
+
+
+def requantize_update(
+    storage: Storage,
+    touched: jax.Array,
+    delta: jax.Array,
+    precision: str,
+    rounding: str,
+    key,
+) -> Storage:
+    """Apply a coalesced fp32 ``delta`` buffer to a quantized storage.
+
+    ``touched`` is the (num_slots,) bool mask of rows the step updated;
+    untouched rows are returned BIT-EXACT (the ``where`` keeps the original
+    payload and scale), which is what keeps per-precision xla/pallas parity
+    trivially stable. int8 rows recompute their per-row scale from the
+    updated fp32 value so zero-born rows start learning and saturated rows
+    re-range instead of clipping forever.
+    """
+    check_precision(precision)
+    t = touched[:, None]
+    if precision == "fp16":
+        x = storage.astype(jnp.float32) + delta
+        return jnp.where(t, quantize_f16_jnp(x, rounding, key), storage)
+    data, scale = storage
+    x = data.astype(jnp.float32) * scale + delta
+    new_scale = _int8_scale(x)
+    new_data = quantize_int8_jnp(x, new_scale, rounding, key)
+    return QuantStorage(
+        jnp.where(t, new_data, data), jnp.where(t, new_scale, scale)
+    )

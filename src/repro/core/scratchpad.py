@@ -15,6 +15,16 @@ buffer so XLA updates in place. Every primitive carries the first-class
 ``read`` stays an XLA gather on purpose: it feeds the d2h victim write-back
 ([Collect]/[Exchange]), which is PCIe-bound, not HBM-bound — there is no
 kernel win to wire there.
+
+Mixed precision (core/quantize.py): the storage operand may be a plain
+fp16 array or an int8 :class:`QuantStorage` (payload + per-row fp32 scale
+column) instead of the fp32 array. The ``*_q`` primitives below take those
+reduced-precision storages and keep the SAME kernel axis: dequantization
+happens in-kernel on the gather (fp32 bags out), and the quantized
+backward coalesces fp32 deltas into a zeros buffer with the standard
+scatter kernel, then re-quantizes only the touched rows in a shared XLA
+epilogue — so xla/pallas bit-parity per precision follows from the fp32
+path's parity plus shared epilogue code.
 """
 from __future__ import annotations
 
@@ -25,6 +35,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import quantize as qz
+from repro.core.quantize import QuantStorage  # re-export (storage type)
 from repro.kernels import ref as kref
 
 KERNELS = ("xla", "pallas")
@@ -46,11 +58,23 @@ def fill_inline(storage: jax.Array, slots: jax.Array, rows: jax.Array) -> jax.Ar
 
 
 @functools.partial(jax.jit, donate_argnums=0, static_argnames=("kernel",))
-def fill(
-    storage: jax.Array, slots: jax.Array, rows: jax.Array, *, kernel="xla"
-) -> jax.Array:
+def fill(storage, slots: jax.Array, rows, *, kernel="xla"):
     """[Insert]: write fetched rows into their allocated slots (standalone
-    donated dispatch; see :func:`fill_inline` for the padding contract)."""
+    donated dispatch; see :func:`fill_inline` for the padding contract).
+
+    For an int8 :class:`QuantStorage`, ``rows`` is the host-quantized
+    ``(payload int8, scale fp32 (F, 1))`` pair; the scale column updates
+    with a plain drop-mode scatter (metadata, not a hot loop) and the
+    payload goes through the selected fill kernel. The pytree structure of
+    ``storage`` is static under jit, so the isinstance dispatch is free."""
+    if isinstance(storage, QuantStorage):
+        rows_data, rows_scale = rows
+        scale = storage.scale.at[slots].set(rows_scale, mode="drop")
+        if _check_kernel(kernel) == "pallas":
+            from repro.kernels import ops
+
+            return QuantStorage(ops.fill(storage.data, slots, rows_data), scale)
+        return QuantStorage(kref.fill_ref(storage.data, slots, rows_data), scale)
     if _check_kernel(kernel) == "pallas":
         from repro.kernels import ops
 
@@ -59,9 +83,17 @@ def fill(
 
 
 @jax.jit
-def read(storage: jax.Array, slots: jax.Array) -> jax.Array:
+def read(storage, slots: jax.Array):
     """[Collect]: read victim rows for write-back (XLA by design — the
-    consumer is the PCIe d2h path, not an HBM hot loop)."""
+    consumer is the PCIe d2h path, not an HBM hot loop). A quantized
+    storage reads back its QUANTIZED rows — ``(payload, scale)`` for int8 —
+    so the d2h transfer moves the small replica bytes; the host dequantizes
+    into the fp32 master (quantize.dequantize_rows_np)."""
+    if isinstance(storage, QuantStorage):
+        return (
+            jnp.take(storage.data, slots, axis=0),
+            jnp.take(storage.scale, slots, axis=0),
+        )
     return jnp.take(storage, slots, axis=0)
 
 
@@ -111,9 +143,135 @@ def fill_gather_reduce(
     return kref.fill_gather_reduce_ref(storage, fill_slots, fill_rows, slot_ids)
 
 
-def make_storage(num_slots: int, dim: int, dtype=jnp.float32) -> jax.Array:
+# --------------------------------------------------------------------- #
+# mixed-precision primitives (fp16 array / int8 QuantStorage -> fp32 bags)
+# --------------------------------------------------------------------- #
+def gather_reduce_q(storage, slot_ids: jax.Array, *, kernel="xla"):
+    """Embedding-bag forward over a reduced-precision storage: dequantize
+    in-kernel, return fp32 bags (the MLP always consumes fp32)."""
+    if isinstance(storage, QuantStorage):
+        data, scale = storage
+    else:
+        data, scale = storage, None
+    if _check_kernel(kernel) == "pallas":
+        from repro.kernels import ops
+
+        return ops.gather_reduce_q(data, scale, slot_ids)
+    return kref.gather_reduce_q_ref(data, scale, slot_ids)
+
+
+def apply_grad_q(
+    storage,
+    slot_ids: jax.Array,
+    bag_grads: jax.Array,
+    lr: float,
+    key,
+    *,
+    kernel="xla",
+    rounding="stochastic",
+):
+    """Quantized backward: duplicate/coalesce the pre-scaled fp32 deltas
+    into a zeros buffer (the SAME scatter kernel as the fp32 path, so
+    xla/pallas parity carries over), then dequantize + apply + re-quantize
+    ONLY the touched rows in a shared XLA epilogue
+    (quantize.requantize_update). ``rounding="stochastic"`` keeps repeated
+    small in-cache updates unbiased; ``key`` must be per-step (the trainer
+    folds the step index in)."""
+    _check_kernel(kernel)
+    data = storage.data if isinstance(storage, QuantStorage) else storage
+    N, D = data.shape
+    deltas = (-lr * bag_grads).astype(jnp.float32)
+    buf = jnp.zeros((N, D), jnp.float32)
+    if kernel == "pallas":
+        from repro.kernels import ops
+
+        buf = ops.coalesce_deltas(buf, slot_ids, deltas)
+    else:
+        buf = kref.coalesce_deltas_ref(buf, slot_ids, deltas)
+    touched = (
+        jnp.zeros((N,), bool).at[slot_ids.reshape(-1)].set(True, mode="drop")
+    )
+    precision = "int8" if isinstance(storage, QuantStorage) else "fp16"
+    return qz.requantize_update(storage, touched, buf, precision, rounding, key)
+
+
+def fill_gather_reduce_q(
+    storage,
+    fill_slots: jax.Array,
+    fill_rows,
+    slot_ids: jax.Array,
+    *,
+    kernel="xla",
+):
+    """Fused [Insert]-fill + dequantizing gather for one cycle. For int8,
+    ``fill_rows`` is the host-quantized ``(payload, scale)`` pair and the
+    scale column is scatter-updated BEFORE either kernel runs, so
+    intra-cycle gathers of just-filled rows see payload (in-kernel RAW) and
+    scale consistently. Returns (storage, fp32 bags) — still one
+    pallas_call per cycle forward under ``kernel="pallas"``."""
+    if isinstance(storage, QuantStorage):
+        rows_data, rows_scale = fill_rows
+        scale = storage.scale.at[fill_slots].set(rows_scale, mode="drop")
+        if _check_kernel(kernel) == "pallas":
+            from repro.kernels import ops
+
+            data, bags = ops.fill_gather_reduce_q(
+                storage.data, scale, fill_slots, rows_data, slot_ids
+            )
+        else:
+            data, bags = kref.fill_gather_reduce_q_ref(
+                storage.data, scale, fill_slots, rows_data, slot_ids
+            )
+        return QuantStorage(data, scale), bags
+    if _check_kernel(kernel) == "pallas":
+        from repro.kernels import ops
+
+        return ops.fill_gather_reduce_q(
+            storage, None, fill_slots, fill_rows, slot_ids
+        )
+    return kref.fill_gather_reduce_q_ref(
+        storage, None, fill_slots, fill_rows, slot_ids
+    )
+
+
+# --------------------------------------------------------------------- #
+# storage constructors + byte accounting
+# --------------------------------------------------------------------- #
+def make_storage(num_slots: int, dim: int, dtype=jnp.float32,
+                 precision: str = "fp32"):
+    """Allocate scratchpad storage for ``num_slots`` resident rows.
+
+    ``precision="int8"`` returns a :class:`QuantStorage` (int8 payload +
+    per-row fp32 scale column initialized to 1.0 — dequantized zeros are
+    zeros and no scale is ever 0); ``"fp16"`` a float16 array; ``"fp32"``
+    honors ``dtype`` (the legacy bf16-experiment knob)."""
+    qz.check_precision(precision)
+    if precision == "int8":
+        return QuantStorage(
+            jnp.zeros((num_slots, dim), jnp.int8),
+            jnp.ones((num_slots, 1), jnp.float32),
+        )
+    if precision == "fp16":
+        return jnp.zeros((num_slots, dim), jnp.float16)
     return jnp.zeros((num_slots, dim), dtype)
 
 
-def storage_bytes(storage: jax.Array) -> int:
+def storage_bytes(storage) -> int:
+    """TRUE resident bytes of a storage, INCLUDING quantization metadata
+    (the int8 per-row scale column) — the honest number for capacity
+    claims. The nominal byte-budget slot math intentionally counts payload
+    only (quantize.SLOT_MULTIPLIER); this reports what is actually held."""
+    if isinstance(storage, QuantStorage):
+        return sum(a.size * a.dtype.itemsize for a in storage)
     return storage.size * storage.dtype.itemsize
+
+
+def storage_precision(storage) -> str:
+    """The replica precision a storage operand encodes (bf16 experiment
+    storages report "fp32": they ride the legacy dtype knob, not the
+    quantized path)."""
+    if isinstance(storage, QuantStorage):
+        return "int8"
+    if storage.dtype == jnp.float16:
+        return "fp16"
+    return "fp32"

@@ -54,6 +54,7 @@ from typing import Any, Deque, List, Optional, Sequence, Tuple
 import jax
 import numpy as np
 
+from repro.core import quantize as qz
 from repro.core import scratchpad as sp
 from repro.core.host_table import HostEmbeddingTable, HostTraffic
 from repro.core.pipeline import StepStats
@@ -68,6 +69,12 @@ def _lookup_bags(storage, slots, *, kernel="xla"):
     """[Lookup]: the training forward's gather+bag-reduce, backward elided.
     One executable per (R, T, L) request shape and kernel."""
     return sp.gather_reduce(storage, slots, kernel=kernel)
+
+
+@functools.partial(jax.jit, static_argnames=("kernel",))
+def _lookup_bags_q(storage, slots, *, kernel="xla"):
+    """Quantized-storage [Lookup]: dequantize in-kernel, fp32 bags out."""
+    return sp.gather_reduce_q(storage, slots, kernel=kernel)
 
 
 @dataclasses.dataclass
@@ -341,6 +348,7 @@ class ReadOnlyCacheServer(_ServingRuntimeBase):
         pad_buckets: Optional[Sequence[int]] = None,
         kernel: str = "xla",
         storage_dtype=None,
+        precision: Optional[str] = None,
         tracer=None,
         metrics=None,
     ):
@@ -352,7 +360,31 @@ class ReadOnlyCacheServer(_ServingRuntimeBase):
         )
         self.kernel = sp._check_kernel(kernel)
         self.window = int(window)
-        self.num_slots = int(num_slots)
+        # replica precision (core/quantize.py): read-only serving is the
+        # easy half of coherence — rows quantize once on fill and are never
+        # written back. ``num_slots`` is a byte budget in fp32-row units.
+        group_prec = (
+            table_group.uniform_precision() if table_group is not None else None
+        )
+        if precision is None:
+            precision = group_prec or "fp32"
+        elif group_prec is not None and precision != group_prec:
+            raise ValueError(
+                f"precision={precision!r} conflicts with the table group's "
+                f"uniform precision {group_prec!r}"
+            )
+        self.precision = qz.check_precision(precision)
+        if self.precision != "fp32" and storage_dtype is not None:
+            raise ValueError(
+                "storage_dtype is the fp32-path experiment knob; "
+                "reduced precision is selected with precision= alone"
+            )
+        eff_slots = int(num_slots) * qz.SLOT_MULTIPLIER[self.precision]
+        self.num_slots = eff_slots
+        self.nominal_slots = int(num_slots)
+        self._row_bytes = qz.row_bytes(
+            host_table.dim, self.precision, host_table.data.dtype.itemsize
+        )
         self.pad_buckets = tuple(sorted(pad_buckets)) if pad_buckets else None
         self.table_group = table_group
         if table_group is not None:
@@ -364,11 +396,11 @@ class ReadOnlyCacheServer(_ServingRuntimeBase):
             budgets = (
                 list(slot_budgets)
                 if slot_budgets is not None
-                else table_group.slot_budgets(num_slots)
+                else table_group.precision_slot_budgets(num_slots)
             )
-            if sum(budgets) > num_slots:
+            if sum(budgets) > eff_slots:
                 raise ValueError(
-                    f"slot budgets {budgets} exceed num_slots={num_slots}"
+                    f"slot budgets {budgets} exceed num_slots={eff_slots}"
                 )
             row_offsets = table_group.offsets
             slot_ranges = table_group.slot_ranges(budgets)
@@ -378,7 +410,7 @@ class ReadOnlyCacheServer(_ServingRuntimeBase):
         # covers the visible queue — the look-ahead protection itself.
         self.planner = Planner(
             host_table.rows,
-            num_slots,
+            eff_slots,
             past_window=0,
             future_window=self.window,
             policy=policy,
@@ -388,10 +420,12 @@ class ReadOnlyCacheServer(_ServingRuntimeBase):
         import jax.numpy as jnp
 
         dt = storage_dtype or jnp.dtype(host_table.data.dtype.name)
-        self.storage = sp.make_storage(num_slots, host_table.dim, dt)
+        self.storage = sp.make_storage(
+            eff_slots, host_table.dim, dt, precision=self.precision
+        )
         # slot content validity: True iff the slot holds the row the HitMap
         # currently maps to it (fills land here; plans invalidate here)
-        self._landed = np.zeros(num_slots, dtype=bool)
+        self._landed = np.zeros(eff_slots, dtype=bool)
         # the visible window: planned entries, head first (<= window + 1)
         self._visible: Deque[_ServeEntry] = collections.deque()
 
@@ -446,15 +480,20 @@ class ReadOnlyCacheServer(_ServingRuntimeBase):
         entry.stage = 3
 
     def _fill_rows(self, slots: np.ndarray, rows: np.ndarray) -> None:
+        q = qz.quantize_rows_np(rows, self.precision)
+        if isinstance(q, tuple):  # int8: (payload, scale) components
+            q = tuple(pad_rows(c, self.pad_buckets) for c in q)
+        else:
+            q = pad_rows(q, self.pad_buckets)
         self.storage = sp.fill(
             self.storage,
             pad_index(slots, self.num_slots, self.pad_buckets),
-            jax.device_put(pad_rows(rows, self.pad_buckets)),
+            jax.device_put(q),
             kernel=self.kernel,
         )
         self._landed[slots] = True
-        self.pcie.written += rows.nbytes
-        self.hbm.written += rows.nbytes
+        self.pcie.written += slots.size * self._row_bytes
+        self.hbm.written += slots.size * self._row_bytes
 
     def _advance(self) -> None:
         """Advance every visible non-head entry one stage (the background
@@ -498,12 +537,11 @@ class ReadOnlyCacheServer(_ServingRuntimeBase):
         assert (slots >= 0).all() and self._landed[slots].all(), (
             "serving invariant broken: unresident row at [Lookup]"
         )
+        lookup = _lookup_bags if self.precision == "fp32" else _lookup_bags_q
         bags = np.asarray(
-            _lookup_bags(
-                self.storage, slots.reshape(ids.shape), kernel=self.kernel
-            )
+            lookup(self.storage, slots.reshape(ids.shape), kernel=self.kernel)
         )
-        self.hbm.read += flat.size * self.host.row_bytes
+        self.hbm.read += flat.size * self._row_bytes
 
         st = StepStats(
             step=self._step,

@@ -47,6 +47,7 @@ class ShardedScratchPipe:
         planner: str = "host",
         pad_buckets: Optional[Sequence[int]] = None,
         kernel: str = "xla",
+        precision: Union[str, Sequence[str], None] = None,
         tracer=None,
         metrics=None,
     ):
@@ -54,7 +55,12 @@ class ShardedScratchPipe:
         (new_storages, aux). ``num_slots`` is the per-shard scratchpad size
         (int: same for every shard; sequence: one per shard).
         ``boundaries`` (len num_shards+1) range-partitions the global row
-        space; default: equal split (the table must then shard evenly)."""
+        space; default: equal split (the table must then shard evenly).
+        ``precision`` is the per-shard replica precision (str: uniform;
+        sequence: one per shard — each manager owns its storage array, so
+        MIXED per-table precisions are realized here, where the single-array
+        ScratchPipe cannot). Per-shard ``num_slots`` stay NOMINAL (fp32-row
+        byte budgets); each manager applies its own capacity multiplier."""
         rows = host_table.rows
         if boundaries is None:
             assert rows % num_shards == 0, (rows, num_shards)
@@ -71,6 +77,11 @@ class ShardedScratchPipe:
         if isinstance(num_slots, int):
             num_slots = [num_slots] * num_shards
         assert len(num_slots) == num_shards, (num_slots, num_shards)
+        if precision is None or isinstance(precision, str):
+            precision = [precision or "fp32"] * num_shards
+        precision = list(precision)
+        assert len(precision) == num_shards, (precision, num_shards)
+        self.precisions = tuple(precision)
         self.train_fn = train_fn
         self._pending: dict = {}
 
@@ -115,6 +126,7 @@ class ShardedScratchPipe:
                     # per-shard [Insert] fills run the same kernel axis; the
                     # [Train] kernels ride inside the caller's train_fn
                     kernel=kernel,
+                    precision=precision[i],
                     tracer=tracer,
                     metrics=metrics,
                     # per-shard metric cells: same names, one label apart
@@ -132,11 +144,15 @@ class ShardedScratchPipe:
         **kw,
     ) -> "ShardedScratchPipe":
         """One cache manager per embedding table; ``num_slots`` total slots
-        split into per-table budgets by the group's hot-set weights."""
+        split into per-table budgets by the group's hot-set weights. Each
+        table's ``precision`` (TableSpec) selects its manager's replica
+        format — the supported route to MIXED per-table precisions — unless
+        an explicit ``precision=`` kw overrides it."""
         assert host_table.rows == group.total_rows, (
             host_table.rows,
             group.total_rows,
         )
+        kw.setdefault("precision", [t.precision for t in group.tables])
         return cls(
             host_table,
             group.slot_budgets(num_slots),
@@ -266,6 +282,7 @@ def _make_sharded(
     ``slot_budgets`` override the proportional split); otherwise a uniform
     ``num_shards`` range partition."""
     if table_group is not None:
+        kw.setdefault("precision", [t.precision for t in table_group.tables])
         if slot_budgets is not None:
             return ShardedScratchPipe(
                 host_table,

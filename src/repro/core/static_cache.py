@@ -24,8 +24,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import quantize as qz
 from repro.core.host_table import HostEmbeddingTable, HostTraffic
 from repro.core.pipeline import StepStats, _pad_rows
+from repro.core.quantize import QuantStorage
 from repro.core.runtime import register_runtime
 from repro.obs import NULL_SPAN, resolve as obs_resolve
 
@@ -148,7 +150,13 @@ class StaticCacheBaseline(_BaselineObs):
 
     ``hot_ids`` are GLOBAL row ids; for a TableGroup they come from per-table
     top-N profiling (each table keeps its own pinned budget — see
-    ``repro.data.synthetic.hot_ids_for_group``)."""
+    ``repro.data.synthetic.hot_ids_for_group``).
+
+    ``precision`` quantizes the pinned region AND the per-step transient
+    miss tail (core/quantize.py), so both consume the same reduced-precision
+    bytes a ScratchPipe scratchpad would; pair with a trainer built with the
+    same ``precision=``. Missed rows' trained values dequantize on the
+    scatter back to the fp32 host master."""
 
     def __init__(
         self,
@@ -156,17 +164,27 @@ class StaticCacheBaseline(_BaselineObs):
         hot_ids: np.ndarray,
         train_fn,
         *,
+        precision: str = "fp32",
         tracer=None,
         metrics=None,
     ):
         self.host = host_table
         self.train_fn = train_fn
+        self.precision = qz.check_precision(precision)
+        self._row_bytes = qz.row_bytes(
+            host_table.dim, self.precision, host_table.data.dtype.itemsize
+        )
         self.pcie = HostTraffic()
         self.hbm = HostTraffic()  # pinned-region traffic ([Train] on hits)
         self.hot_ids = np.asarray(np.sort(hot_ids), dtype=np.int64)
         self.id_to_slot = np.full(host_table.rows, -1, dtype=np.int64)
         self.id_to_slot[self.hot_ids] = np.arange(self.hot_ids.size)
-        self.storage = jax.device_put(host_table.gather(self.hot_ids))
+        pinned = qz.quantize_rows_np(
+            host_table.gather(self.hot_ids), self.precision
+        )
+        if isinstance(pinned, tuple):
+            pinned = QuantStorage(*pinned)
+        self.storage = jax.device_put(pinned)
         host_table.traffic.reset()  # preload is not steady-state traffic
         self._stats: List[StepStats] = []
         self._init_obs(tracer, metrics, "static")
@@ -188,12 +206,30 @@ class StaticCacheBaseline(_BaselineObs):
         # behind the pinned area (fresh every step — no insertion). The
         # pinned region never leaves the device; the transient tail is
         # pow-2 padded so the set of [Train] executables stays bounded.
-        miss_rows = self.host.gather(miss_ids)
-        self.pcie.written += miss_rows.nbytes
+        # Under a reduced precision the tail rows cross h2d quantized, like
+        # the pinned region.
+        miss_rows = qz.quantize_rows_np(
+            self.host.gather(miss_ids), self.precision
+        )
+        self.pcie.written += miss_ids.size * self._row_bytes
         if miss_ids.size:
-            ext = jnp.concatenate(
-                [self.storage, jax.device_put(_pad_rows(miss_rows))], axis=0
-            )
+            if isinstance(self.storage, QuantStorage):
+                qd, qs = miss_rows
+                ext = QuantStorage(
+                    jnp.concatenate(
+                        [self.storage.data, jax.device_put(_pad_rows(qd))],
+                        axis=0,
+                    ),
+                    jnp.concatenate(
+                        [self.storage.scale, jax.device_put(_pad_rows(qs))],
+                        axis=0,
+                    ),
+                )
+            else:
+                ext = jnp.concatenate(
+                    [self.storage, jax.device_put(_pad_rows(miss_rows))],
+                    axis=0,
+                )
         else:
             ext = self.storage
         # temporarily map misses into the transient tail (reverted in the
@@ -209,17 +245,31 @@ class StaticCacheBaseline(_BaselineObs):
 
         ext, aux = self.train_fn(ext, slots, batch)
         # hit rows stay on device; missed rows' trained values scatter
-        # back to the host tier (the slow bwd path, Fig. 4(b) right).
-        self.storage = ext[: self.hot_ids.size]
-        if miss_ids.size:
-            upd = np.asarray(
-                ext[self.hot_ids.size : self.hot_ids.size + miss_ids.size]
-            )
-            self.pcie.read += upd.nbytes
-            self.host.scatter(miss_ids, upd)
+        # back to the host tier (the slow bwd path, Fig. 4(b) right),
+        # dequantized into the fp32 master under a reduced precision.
+        n_pin = self.hot_ids.size
+        if isinstance(ext, QuantStorage):
+            self.storage = QuantStorage(ext.data[:n_pin], ext.scale[:n_pin])
+            if miss_ids.size:
+                upd = (
+                    np.asarray(ext.data[n_pin : n_pin + miss_ids.size]),
+                    np.asarray(ext.scale[n_pin : n_pin + miss_ids.size]),
+                )
+                self.pcie.read += miss_ids.size * self._row_bytes
+                self.host.scatter(
+                    miss_ids, qz.dequantize_rows_np(upd, self.precision)
+                )
+        else:
+            self.storage = ext[:n_pin]
+            if miss_ids.size:
+                upd = np.asarray(ext[n_pin : n_pin + miss_ids.size])
+                self.pcie.read += miss_ids.size * self._row_bytes
+                self.host.scatter(
+                    miss_ids, qz.dequantize_rows_np(upd, self.precision)
+                )
         # device-tier bytes: bag gathers over all lookups + read-mod-write
         # of the pinned hit rows
-        row_b = self.host.row_bytes
+        row_b = self._row_bytes
         self.hbm.read += (2 * n_hits + int(flat.size)) * row_b
         self.hbm.written += n_hits * row_b
 
@@ -247,7 +297,14 @@ class StaticCacheBaseline(_BaselineObs):
         return self._step(len(self._stats) + 1, ids, batch)
 
     def flush_to_host(self):
-        self.host.scatter(self.hot_ids, np.asarray(self.storage))
+        vals = self.storage
+        if isinstance(vals, QuantStorage):
+            vals = (np.asarray(vals.data), np.asarray(vals.scale))
+        else:
+            vals = np.asarray(vals)
+        self.host.scatter(
+            self.hot_ids, qz.dequantize_rows_np(vals, self.precision)
+        )
 
     def traffic(self) -> dict:
         return {"host": self.host.traffic, "pcie": self.pcie, "hbm": self.hbm}
@@ -276,5 +333,8 @@ def _make_nocache(host_table, train_fn, **kw) -> NoCacheBaseline:
 @register_runtime("static")
 def _make_static(host_table, train_fn, *, hot_ids, **kw) -> StaticCacheBaseline:
     obs_kw = {k: kw.pop(k, None) for k in ("tracer", "metrics")}
+    precision = kw.pop("precision", None) or "fp32"
     _reject_unsupported("static", kw)
-    return StaticCacheBaseline(host_table, hot_ids, train_fn, **obs_kw)
+    return StaticCacheBaseline(
+        host_table, hot_ids, train_fn, precision=precision, **obs_kw
+    )

@@ -25,22 +25,28 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.quantize import SLOT_MULTIPLIER, check_precision
+
 
 @dataclasses.dataclass(frozen=True)
 class TableSpec:
     """One embedding table: row count, embedding dim, expected hot fraction
-    (used only for slot budgeting; 0.05 matches the paper's cache sizing)."""
+    (used only for slot budgeting; 0.05 matches the paper's cache sizing),
+    and the scratchpad replica ``precision`` (``fp32|fp16|int8`` — the HOST
+    master rows are always fp32; see core/quantize.py)."""
 
     name: str
     rows: int
     dim: int
     hot_fraction: float = 0.05
+    precision: str = "fp32"
 
     def __post_init__(self):
         if self.rows <= 0:
             raise ValueError(f"table {self.name!r}: rows must be > 0")
         if not (0.0 < self.hot_fraction <= 1.0):
             raise ValueError(f"table {self.name!r}: hot_fraction in (0, 1]")
+        check_precision(self.precision)
 
 
 class TableGroup:
@@ -66,10 +72,14 @@ class TableGroup:
     def uniform(
         cls, num_tables: int, rows_per_table: int, dim: int, *,
         hot_fraction: float = 0.05, prefix: str = "table",
+        precision: str = "fp32",
     ) -> "TableGroup":
         return cls(
             [
-                TableSpec(f"{prefix}{t}", rows_per_table, dim, hot_fraction)
+                TableSpec(
+                    f"{prefix}{t}", rows_per_table, dim, hot_fraction,
+                    precision,
+                )
                 for t in range(num_tables)
             ]
         )
@@ -82,9 +92,10 @@ class TableGroup:
             (cfg.rows_per_table,) * cfg.num_tables
         )
         frac = getattr(cfg, "cache_fraction", 0.05)
+        precision = getattr(cfg, "precision", "fp32")
         return cls(
             [
-                TableSpec(f"table{t}", r, cfg.embed_dim, frac)
+                TableSpec(f"table{t}", r, cfg.embed_dim, frac, precision)
                 for t, r in enumerate(rows)
             ]
         )
@@ -105,6 +116,34 @@ class TableGroup:
     @property
     def rows(self) -> Tuple[int, ...]:
         return tuple(t.rows for t in self.tables)
+
+    @property
+    def precisions(self) -> Tuple[str, ...]:
+        return tuple(t.precision for t in self.tables)
+
+    def with_precision(self, precision: str) -> "TableGroup":
+        """A copy of this group with every table's replica precision
+        replaced — how a trace-manifest group (always recorded fp32) is
+        re-targeted at a reduced-precision run."""
+        check_precision(precision)
+        return TableGroup(
+            [dataclasses.replace(t, precision=precision) for t in self.tables]
+        )
+
+    def uniform_precision(self) -> str:
+        """The single replica precision shared by every table. One fused
+        scratchpad array holds one dtype, so the single-storage runtimes
+        require this to be uniform; mixed per-table precisions are only
+        realizable by the sharded runtime (one scratchpad per shard)."""
+        ps = set(self.precisions)
+        if len(ps) != 1:
+            raise ValueError(
+                "mixed per-table precisions "
+                f"{list(self.precisions)} need one scratchpad per table — "
+                "use ShardedScratchPipe.from_group (a single fused "
+                "scratchpad array holds one precision)"
+            )
+        return next(iter(ps))
 
     def __len__(self) -> int:
         return len(self.tables)
@@ -186,6 +225,22 @@ class TableGroup:
                 rem -= 1
             i += 1
         return [int(b) for b in budgets]
+
+    def precision_slot_budgets(
+        self, num_slots: int, min_per_table: int = 1
+    ) -> List[int]:
+        """Byte-budget slot accounting: ``num_slots`` is denominated in
+        fp32-row payload bytes; each table's proportional share is then
+        converted to ROWS through its own replica precision
+        (fp16 packs 2x, int8 4x rows into the same bytes). Sum of the
+        returned budgets times per-row payload bytes equals the fp32
+        budget's payload bytes; the int8 scale column rides on top and is
+        reported by ``scratchpad.storage_bytes`` (not credited here)."""
+        budgets = self.slot_budgets(num_slots, min_per_table)
+        return [
+            int(b) * SLOT_MULTIPLIER[t.precision]
+            for b, t in zip(budgets, self.tables)
+        ]
 
     def window_floor(self, batch_lookups: int, window: int = 6) -> int:
         """Paper §VI-D worst-case window working set per table: ``window``

@@ -81,6 +81,58 @@ def gather_reduce(
     return out
 
 
+def _gather_q_kernel(ids_ref, storage_ref, scale_ref, out_ref):
+    # Dequantize IN-KERNEL: each addend is ``row_tile.astype(f32) * scale``
+    # (the per-row scale rides a (1, 1) block keyed by the same prefetched
+    # slot stream), then the same sequential-in-l accumulation as the fp32
+    # gather. The compiler may contract the mul+accumulate into an FMA —
+    # harmless, because the product is EXACT in fp32 by the scale-snap
+    # discipline (core/quantize.py): int8 payload has 7 significant bits,
+    # the snapped scale <= 17, so the FMA rounds identically to
+    # mul-then-add and parity with kernels/ref.py holds on any backend.
+    l = pl.program_id(1)
+
+    @pl.when(l == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += storage_ref[...].astype(out_ref.dtype) * scale_ref[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("d_tile", "interpret"))
+def gather_reduce_q(
+    storage: jax.Array,
+    scale: jax.Array,
+    slot_ids: jax.Array,
+    *,
+    d_tile: int = DEFAULT_D_TILE,
+    interpret: bool = False,
+) -> jax.Array:
+    """int8 storage (N, D) + per-row fp32 scale (N, 1); slot_ids (nb, L)
+    int32 -> (nb, D) fp32 bags, dequantized in-kernel."""
+    nb, L = slot_ids.shape
+    N, D = storage.shape
+    d_tile = min(d_tile, D)
+    assert D % d_tile == 0, (D, d_tile)
+    flat_ids = slot_ids.reshape(-1).astype(jnp.int32)
+    return pl.pallas_call(
+        _gather_q_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(nb, L, D // d_tile),
+            in_specs=[
+                pl.BlockSpec(
+                    (1, d_tile), lambda b, l, d, ids: (ids[b * L + l], d)
+                ),
+                pl.BlockSpec((1, 1), lambda b, l, d, ids: (ids[b * L + l], 0)),
+            ],
+            out_specs=pl.BlockSpec((1, d_tile), lambda b, l, d, ids: (b, d)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((nb, D), jnp.float32),
+        interpret=interpret,
+    )(flat_ids, storage, scale)
+
+
 def _fill_kernel(slot_ref, valid_ref, rows_ref, st_in_ref, st_out_ref):
     del slot_ref, st_in_ref
     i = pl.program_id(0)
@@ -212,4 +264,94 @@ def fill_gather_reduce(
         input_output_aliases={3: 0},  # (op_slot=0, op_valid=1, rows=2, st=3)
         interpret=interpret,
     )(op_slot, op_valid, fill_rows, storage)
+    return storage_out, bags
+
+
+def _make_fused_q_kernel(F: int, L: int):
+    def _kernel(op_slot_ref, op_valid_ref, rows_ref, st_in_ref, scale_ref,
+                st_out_ref, bags_ref):
+        # Same op stream as _make_fused_kernel; gather steps dequantize
+        # in-kernel against the (1, 1) scale block of the op's target row.
+        # The scale array must ALREADY hold this cycle's fill scales (the
+        # shared wrapper scatters them before launch), so intra-kernel
+        # gathers of just-filled rows see payload (aliased RAW) and scale
+        # (pre-scattered) consistently.
+        del op_slot_ref, st_in_ref
+        i = pl.program_id(1)
+
+        @pl.when((i < F) & (op_valid_ref[i] == 1))
+        def _fill():
+            st_out_ref[...] = rows_ref[...].astype(st_out_ref.dtype)
+
+        @pl.when(i >= F)
+        def _gather():
+            l = (i - F) % L
+
+            @pl.when(l == 0)
+            def _init():
+                bags_ref[...] = jnp.zeros_like(bags_ref)
+
+            # FMA contraction is harmless here by the same exact-product
+            # argument as _gather_q_kernel (snapped scales)
+            bags_ref[...] += (
+                st_out_ref[...].astype(bags_ref.dtype) * scale_ref[0, 0]
+            )
+
+    return _kernel
+
+
+@functools.partial(jax.jit, static_argnames=("d_tile", "interpret"))
+def fill_gather_reduce_q(
+    storage: jax.Array,
+    scale: jax.Array,
+    fill_slots: jax.Array,
+    fill_rows: jax.Array,
+    slot_ids: jax.Array,
+    *,
+    d_tile: int = DEFAULT_D_TILE,
+    interpret: bool = False,
+):
+    """Fused fill + dequantizing gather for int8 storage: payload (N, D)
+    int8, scale (N, 1) fp32 (already updated with the fill rows' scales),
+    fill_rows (F, D) int8. Returns (filled payload, fp32 bags) — still ONE
+    pallas_call per cycle forward."""
+    nb, L = slot_ids.shape
+    (F,) = fill_slots.shape
+    N, D = storage.shape
+    d_tile = min(d_tile, D)
+    assert D % d_tile == 0, (D, d_tile)
+    assert F > 0 and nb * L > 0, (F, nb, L)  # empty guards live in ops.py
+    fslots = fill_slots.astype(jnp.int32)
+    valid = (fslots < N).astype(jnp.int32)
+    fslots = jnp.clip(fslots, 0, N - 1)
+    op_slot = jnp.concatenate([fslots, slot_ids.reshape(-1).astype(jnp.int32)])
+    op_valid = jnp.concatenate([valid, jnp.ones((nb * L,), jnp.int32)])
+    storage_out, bags = pl.pallas_call(
+        _make_fused_q_kernel(F, L),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(D // d_tile, F + nb * L),
+            in_specs=[
+                pl.BlockSpec(
+                    (1, d_tile), lambda d, i, s, v: (jnp.minimum(i, F - 1), d)
+                ),
+                pl.BlockSpec((1, d_tile), lambda d, i, s, v: (s[i], d)),
+                pl.BlockSpec((1, 1), lambda d, i, s, v: (s[i], 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, d_tile), lambda d, i, s, v: (s[i], d)),
+                pl.BlockSpec(
+                    (1, d_tile),
+                    lambda d, i, s, v: (jnp.maximum(i - F, 0) // L, d),
+                ),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((N, D), storage.dtype),
+            jax.ShapeDtypeStruct((nb, D), jnp.float32),
+        ],
+        # (op_slot=0, op_valid=1, rows=2, st=3, scale=4)
+        input_output_aliases={3: 0},
+        interpret=interpret,
+    )(op_slot, op_valid, fill_rows, storage, scale)
     return storage_out, bags

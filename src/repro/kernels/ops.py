@@ -112,9 +112,56 @@ def gather_reduce(storage, slot_ids, *, interpret=None):
     return out.reshape(*lead, D).astype(storage.dtype)
 
 
+def _gather_q_call(interpret, storage, scale, flat_slots):
+    pad = _lane_pad(storage.shape[1])
+    if pad:
+        out = _gr.gather_reduce_q(
+            _pad_lanes(storage, pad), scale, flat_slots, interpret=interpret
+        )
+        return out[:, : storage.shape[1]]
+    return _gr.gather_reduce_q(storage, scale, flat_slots, interpret=interpret)
+
+
+def gather_reduce_q(storage, scale, slot_ids, *, interpret=None):
+    """Quantized-storage gather -> fp32 bags (no cast back to the storage
+    dtype: the MLP consumes fp32). ``scale=None`` means dequantization is
+    the exact widening cast (fp16 storage) and the plain gather kernel —
+    whose accumulator is already fp32 — is the quantized kernel; an (N, 1)
+    ``scale`` selects the int8 dequantize-in-kernel variant."""
+    interpret = _interpret_default() if interpret is None else interpret
+    lead = slot_ids.shape[:-1]
+    L = slot_ids.shape[-1]
+    D = storage.shape[1]
+    if L == 0 or slot_ids.size == 0:  # empty cycle: no dispatch
+        return jnp.zeros(lead + (D,), jnp.float32)
+    flat = slot_ids.reshape(-1, L)
+    if scale is None:
+        out = _gather_call(interpret, storage, flat)
+    else:
+        out = _gather_q_call(interpret, storage, scale, flat)
+    return out.reshape(*lead, D)
+
+
 # --------------------------------------------------------------------- #
 # backward: duplicate + coalesce + scatter SGD update
 # --------------------------------------------------------------------- #
+def coalesce_deltas(buf, slot_ids, deltas, *, interpret=None):
+    """Duplicate + coalesce PRE-COMPUTED per-bag deltas into ``buf`` (the
+    quantized backward's fp32 accumulation buffer; ref:
+    ``coalesce_deltas_ref``). Same kernel as ``coalesce_apply`` — only the
+    delta pre-scaling differs, which the quantized update epilogue owns."""
+    interpret = _interpret_default() if interpret is None else interpret
+    L = slot_ids.shape[-1]
+    if L == 0 or slot_ids.size == 0:  # empty cycle: no dispatch
+        return buf
+    D = deltas.shape[-1]
+    return _scatter_call(
+        interpret, buf, slot_ids.reshape(-1, L),
+        deltas.reshape(-1, D).astype(buf.dtype),
+    )
+
+
+
 def coalesce_apply(storage, slot_ids, bag_grads, lr, *, interpret=None):
     """storage (N, D); slot_ids (..., L); bag_grads (..., D). The SGD delta
     is pre-rounded per bag (ref.scatter_deltas) so the kernel's sequential
@@ -219,6 +266,53 @@ def fill_gather_reduce(storage, fill_slots, fill_rows, slot_ids, *,
         storage, fill_slots, fill_rows, slot_ids.reshape(-1, L),
     )
     return st, bags.reshape(*lead, D).astype(storage.dtype)
+
+
+def _fused_q_call(interpret, storage, scale, fill_slots, fill_rows,
+                  flat_slots):
+    pad = _lane_pad(storage.shape[1])
+    if pad:
+        st, bags = _gr.fill_gather_reduce_q(
+            _pad_lanes(storage, pad), scale, fill_slots,
+            _pad_lanes(fill_rows, pad), flat_slots, interpret=interpret,
+        )
+        D = storage.shape[1]
+        return st[:, :D], bags[:, :D]
+    return _gr.fill_gather_reduce_q(
+        storage, scale, fill_slots, fill_rows, flat_slots, interpret=interpret
+    )
+
+
+def fill_gather_reduce_q(storage, scale, fill_slots, fill_rows, slot_ids, *,
+                         interpret=None):
+    """Fused quantized fill + gather -> (payload storage, fp32 bags).
+    ``scale=None`` is the fp16 path (plain fused kernel, fp32 accumulator);
+    an (N, 1) ``scale`` — already scatter-updated with this cycle's fill
+    scales — selects the int8 dequantize-in-kernel fused variant. No
+    custom_vjp: the production step takes bag cotangents explicitly and the
+    quantized backward runs through ``coalesce_deltas`` + the requantize
+    epilogue (core/quantize.py)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    lead = slot_ids.shape[:-1]
+    L = slot_ids.shape[-1]
+    D = storage.shape[1]
+    if L == 0 or slot_ids.size == 0:
+        return (
+            fill(storage, fill_slots, fill_rows, interpret=interpret),
+            jnp.zeros(lead + (D,), jnp.float32),
+        )
+    if fill_slots.size == 0:
+        return storage, gather_reduce_q(
+            storage, scale, slot_ids, interpret=interpret
+        )
+    flat = slot_ids.reshape(-1, L)
+    if scale is None:
+        st, bags = _fused_call(interpret, storage, fill_slots, fill_rows, flat)
+    else:
+        st, bags = _fused_q_call(
+            interpret, storage, scale, fill_slots, fill_rows, flat
+        )
+    return st, bags.reshape(*lead, D)
 
 
 # --------------------------------------------------------------------- #

@@ -88,6 +88,70 @@ def fill_gather_reduce_ref(
     return storage, gather_reduce_ref(storage, slot_ids)
 
 
+def gather_reduce_q_ref(
+    storage: jax.Array, scale, slot_ids: jax.Array
+) -> jax.Array:
+    """Quantized-storage gather: per-element dequantize BEFORE the
+    sequential bag sum, returning fp32 bags (the MLP always consumes fp32).
+
+    ``scale`` is the (N, 1) per-row fp32 scale column for int8 storage, or
+    ``None`` for fp16 storage (dequantization is the exact widening cast).
+    Op order matches the quantized Pallas gather exactly: each addend is
+    ``row.astype(f32) [* scale_row]`` — one multiply rounding per element —
+    then the same sequential-in-l fp32 accumulation as the fp32 path."""
+    if slot_ids.shape[-1] == 0 or slot_ids.size == 0:
+        return jnp.zeros(
+            slot_ids.shape[:-1] + (storage.shape[-1],), jnp.float32
+        )
+    emb = jnp.take(storage, slot_ids, axis=0).astype(jnp.float32)
+    if scale is not None:
+        # the dequant product is EXACT in fp32 (int8 payload: 7 significant
+        # bits; snapped scale: <= 17 — see core/quantize.py), so XLA's FMA
+        # contraction of mul+add cannot split this path from the Pallas
+        # kernel: an FMA of an exact product rounds identically to
+        # mul-then-add. Without the snap the two paths diverge in the last
+        # ulp (optimization_barrier does NOT stop contraction on CPU).
+        emb = emb * jnp.take(scale, slot_ids, axis=0)
+    out = emb[..., 0, :]
+    for l in range(1, emb.shape[-2]):
+        out = out + emb[..., l, :]
+    return out
+
+
+def fill_gather_reduce_q_ref(
+    storage: jax.Array,
+    scale,
+    fill_slots: jax.Array,
+    fill_rows: jax.Array,
+    slot_ids: jax.Array,
+):
+    """Fused quantized fill + gather: the (already-quantized) rows land in
+    the payload array first, then the dequantizing gather runs — so bags
+    see this cycle's fills, exactly like the fused Pallas kernel's
+    intra-grid fill->gather order. ``scale`` must ALREADY hold the fill
+    rows' scales (the shared wrapper scatters it before either kernel).
+    Returns (payload storage, fp32 bags)."""
+    storage = fill_ref(storage, fill_slots, fill_rows)
+    return storage, gather_reduce_q_ref(storage, scale, slot_ids)
+
+
+def coalesce_deltas_ref(
+    buf: jax.Array, slot_ids: jax.Array, deltas: jax.Array
+) -> jax.Array:
+    """Duplicate + coalesce pre-rounded per-bag deltas into ``buf`` (the
+    fp32 zeros buffer of the quantized backward) in flat bag-major order —
+    ``coalesce_apply_ref`` minus the SGD pre-scaling, so the quantized
+    update epilogue can dequantize/apply/requantize outside the kernel."""
+    L = slot_ids.shape[-1]
+    D = deltas.shape[-1]
+    if L == 0 or slot_ids.size == 0:
+        return buf
+    flat = deltas.reshape(-1, D)
+    nb = flat.shape[0]
+    dup = jnp.broadcast_to(flat[:, None, :], (nb, L, D))
+    return buf.at[slot_ids.reshape(-1)].add(dup.reshape(-1, D))
+
+
 def flash_attention_ref(
     q: jax.Array,
     k: jax.Array,

@@ -175,6 +175,17 @@ def train_dlrm(args):
             )
         group = TableGroup.from_config(cfg)
         batch = args.batch or cfg.batch_size
+    if args.precision != "fp32":
+        # scratchpad replica precision: fp32 masters stay on host; the
+        # trainer reads it from the config (so do the TableGroup specs)
+        cfg = dataclasses.replace(
+            cfg, precision=args.precision, rounding=args.rounding
+        )
+        group = (
+            group.with_precision(args.precision)
+            if reader is not None
+            else TableGroup.from_config(cfg)
+        )
     rows = group.total_rows
     slots = max(2048, int(rows * cfg.cache_fraction))
     host = HostEmbeddingTable(rows, cfg.embed_dim, seed=args.seed)
@@ -222,7 +233,9 @@ def train_dlrm(args):
         # floor (worst-case 6-batch window working set per table)
         floor = group.window_floor(batch * cfg.lookups_per_table)
         slots = max(slots, sum(min(floor, r) for r in group.rows))
-        budgets = group.slot_budgets(slots, min_per_table=floor)
+        # byte-budget slot math: per-table budgets in ROWS of each table's
+        # replica precision (== the plain budgets at fp32)
+        budgets = group.precision_slot_budgets(slots, min_per_table=floor)
         kw = {"num_slots": slots, "table_group": group, "slot_budgets": budgets}
     else:
         # uniform paper config: keep the seed-equivalent global slot pool
@@ -233,6 +246,7 @@ def train_dlrm(args):
         kw["executor"] = args.executor
         kw["planner"] = args.planner
         kw["kernel"] = args.kernel  # runtime-side [Insert] fills
+        kw["precision"] = args.precision
         if args.adaptive_pad:
             # trace-derived fill/evict pad buckets (vs the pow-2/256 default)
             pw, fw = (
@@ -265,8 +279,13 @@ def train_dlrm(args):
             hot = hot_ids_for_group(
                 group, cfg.cache_fraction, locality=args.locality
             )
-        kw = {"hot_ids": hot}
+        kw = {"hot_ids": hot, "precision": args.precision}
     elif args.runtime == "nocache":
+        if args.precision != "fp32":
+            raise SystemExit(
+                "--precision applies to the device-resident caches; "
+                "the nocache baseline holds no rows to quantize"
+            )
         kw = {}
     pipe = make_runtime(args.runtime, host, trainer.train_fn, **kw)
     src = batches(args.steps)
@@ -293,6 +312,7 @@ def train_dlrm(args):
     )
     print(
         f"runtime={args.runtime} source={source} kernel={args.kernel} "
+        f"precision={args.precision} "
         f"tables={group.num_tables} rows={list(group.rows)}"
     )
     if args.record_trace:
@@ -345,6 +365,21 @@ def main():
         help="embedding-primitive implementation: 'pallas' runs the fused "
         "fill+gather+reduce forward and coalesce+scatter backward cycle "
         "kernels (interpret-mode off-TPU; bit-identical to 'xla')",
+    )
+    ap.add_argument(
+        "--precision",
+        choices=("fp32", "fp16", "int8"),
+        default="fp32",
+        help="scratchpad replica precision: fp32 host masters stay exact; "
+        "fp16/int8 rows hold 2x/4x resident rows at the same byte budget "
+        "(int8: per-row scale, in-kernel dequant; see core/quantize.py)",
+    )
+    ap.add_argument(
+        "--rounding",
+        choices=("nearest", "stochastic"),
+        default="stochastic",
+        help="re-quantization rounding for in-cache updates (reduced "
+        "precision only); 'stochastic' keeps repeated small updates unbiased",
     )
     ap.add_argument(
         "--adaptive-pad",
@@ -432,6 +467,7 @@ def main():
                 "executor": args.executor,
                 "planner": args.planner,
                 "kernel": args.kernel,
+                "precision": args.precision,
                 "steps": args.steps,
                 "smoke": bool(args.smoke),
             },

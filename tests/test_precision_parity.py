@@ -1,0 +1,356 @@
+"""Mixed-precision scratchpad, end to end (PR: fp16/int8 replica rows):
+
+  P1  per-precision kernel-axis parity: kernel="pallas" is bit-identical to
+      kernel="xla" at fp16 AND int8 — host table, storage payload, scale
+      column, losses — on a recorded drift trace, for the plain sync engine
+      and the all-in fast path (overlapped + fused + both roundings).
+  P2  the default fp32 path is byte-identical with and without the
+      precision plumbing engaged (precision=None == precision="fp32").
+  P3  e2e DLRM loss at reduced precision tracks the fp32 run within a
+      documented tolerance (fp16 ~1e-3, int8 + stochastic rounding ~1e-1
+      relative over a short run).
+  P4  byte-budget capacity: at the SAME nominal budget the runtimes hold
+      2x/4x replica rows (ScratchPipe, serving cache), per-table budgets
+      convert through each table's own multiplier, and mixed per-table
+      precisions are realized by the sharded runtime (and loudly rejected
+      by the single-storage ones).
+  P5  launch-count claim survives quantization: one fused reduced-precision
+      [Insert]+[Train] cycle still dispatches <= 2 pallas_call launches.
+  P6  config/group validation: precision fields validate loudly.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DLRMConfig
+from repro.core import quantize as qz
+from repro.core import scratchpad as sp
+from repro.core.dlrm_runtime import DLRMTrainer, dlrm_fill_train_step_q
+from repro.core.host_table import HostEmbeddingTable
+from repro.core.runtime import make_runtime
+from repro.core.table_group import TableGroup, TableSpec
+from repro.traces import TraceReplayStream, record_trace, scenario_batches
+
+DIM = 8
+
+
+def small_group(precision="fp32"):
+    return TableGroup(
+        [
+            TableSpec("a", 400, DIM, precision=precision),
+            TableSpec("b", 200, DIM, precision=precision),
+        ]
+    )
+
+
+@pytest.fixture(scope="module")
+def recorded_trace(tmp_path_factory):
+    group = small_group()
+    path = str(tmp_path_factory.mktemp("precparity") / "drift")
+    n = record_trace(
+        path,
+        group,
+        scenario_batches(
+            "drift", group, 24, batch_size=4, lookups_per_table=3, seed=11
+        ),
+    )
+    assert n == 24
+    return path
+
+
+def _trainer(kernel, precision, rounding="stochastic"):
+    cfg = DLRMConfig(
+        name="dlrm-precparity",
+        table_rows=(400, 200),
+        embed_dim=DIM,
+        lookups_per_table=3,
+        batch_size=4,
+        bottom_mlp=(16, DIM),
+        top_mlp=(16, 1),
+        kernel=kernel,
+        precision=precision,
+        rounding=rounding,
+    )
+    return DLRMTrainer(cfg, jax.random.key(0), lr=0.05)
+
+
+def _run(trace_path, *, kernel="xla", precision="fp32",
+         rounding="stochastic", executor="sync", fused=False,
+         num_slots=240):
+    host = HostEmbeddingTable(600, DIM, seed=1)
+    trainer = _trainer(kernel, precision, rounding)
+    kw = dict(num_slots=num_slots, executor=executor, kernel=kernel,
+              precision=precision)
+    if fused:
+        kw["fused_train_fn"] = trainer.fused_train_fn
+    pipe = make_runtime("scratchpipe", host, trainer.train_fn, **kw)
+    with TraceReplayStream(trace_path, prefetch=0) as stream:
+        stats = pipe.run(stream, lookahead_fn=stream.peek_ids)
+    pipe.flush_to_host()
+    st = pipe.storage
+    storages = [np.asarray(a) for a in (st if isinstance(st, tuple) else (st,))]
+    losses = [float(s.aux["loss"]) for s in stats if s.aux]
+    return host.data.copy(), storages, losses, pipe
+
+
+# --------------------------------------------------------------------------- #
+# P1: per-precision xla vs pallas bit parity
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("precision", ["fp16", "int8"])
+@pytest.mark.parametrize(
+    "mode",
+    [
+        dict(executor="sync", fused=False, rounding="nearest"),
+        dict(executor="overlapped", fused=True, rounding="stochastic"),
+    ],
+    ids=["sync-nearest", "fast-stochastic"],
+)
+def test_kernel_parity_per_precision(recorded_trace, precision, mode):
+    a = _run(recorded_trace, kernel="xla", precision=precision, **mode)
+    b = _run(recorded_trace, kernel="pallas", precision=precision, **mode)
+    np.testing.assert_array_equal(a[0], b[0], err_msg="host table")
+    assert len(a[1]) == len(b[1])
+    for sa, sb in zip(a[1], b[1]):
+        np.testing.assert_array_equal(sa, sb, err_msg="storage component")
+    assert a[2] == b[2], "loss trajectories diverge"
+
+
+# --------------------------------------------------------------------------- #
+# P2: default fp32 path is byte-identical to explicit fp32
+# --------------------------------------------------------------------------- #
+def test_default_equals_explicit_fp32(recorded_trace):
+    host_a = HostEmbeddingTable(600, DIM, seed=1)
+    trainer_a = _trainer("xla", "fp32")
+    pipe_a = make_runtime(
+        "scratchpipe", host_a, trainer_a.train_fn, num_slots=240
+    )  # precision unspecified: the pre-PR constructor call
+    with TraceReplayStream(recorded_trace, prefetch=0) as stream:
+        stats_a = pipe_a.run(stream, lookahead_fn=stream.peek_ids)
+    pipe_a.flush_to_host()
+    b = _run(recorded_trace, kernel="xla", precision="fp32")
+    np.testing.assert_array_equal(host_a.data, b[0])
+    np.testing.assert_array_equal(np.asarray(pipe_a.storage), b[1][0])
+    assert [float(s.aux["loss"]) for s in stats_a if s.aux] == b[2]
+
+
+def test_config_defaults_are_fp32_stochastic():
+    cfg = DLRMConfig(name="x", num_tables=1, rows_per_table=8, embed_dim=4)
+    assert cfg.precision == "fp32" and cfg.rounding == "stochastic"
+    trainer = DLRMTrainer(cfg, jax.random.key(0))
+    assert trainer.precision == "fp32"
+
+
+# --------------------------------------------------------------------------- #
+# P3: e2e loss tolerance vs fp32
+# --------------------------------------------------------------------------- #
+def test_loss_tracks_fp32_within_tolerance(recorded_trace):
+    ref = _run(recorded_trace, precision="fp32")[2]
+    assert ref, "no losses recorded"
+    for precision, tol in (("fp16", 1e-2), ("int8", 1e-1)):
+        got = _run(recorded_trace, precision=precision)[2]
+        assert len(got) == len(ref)
+        drift = max(
+            abs(g - r) / max(abs(r), 1e-6) for g, r in zip(got, ref)
+        )
+        assert drift <= tol, (precision, drift)
+
+
+# --------------------------------------------------------------------------- #
+# P4: byte-budget capacity
+# --------------------------------------------------------------------------- #
+def test_scratchpipe_multiplies_slots_at_equal_byte_budget(recorded_trace):
+    for precision, mult in (("fp32", 1), ("fp16", 2), ("int8", 4)):
+        _, storages, _, pipe = _run(recorded_trace, precision=precision)
+        assert pipe.nominal_slots == 240
+        assert pipe.num_slots == 240 * mult
+        assert storages[0].shape[0] == 240 * mult
+    # equal payload bytes by construction
+    assert 240 * 1 * DIM * 4 == 240 * 2 * DIM * 2 == 240 * 4 * DIM * 1
+
+
+def test_serving_cache_multiplies_slots():
+    from repro.core.serving_cache import ReadOnlyCacheServer
+
+    group = small_group("int8")
+    host = HostEmbeddingTable(group.total_rows, DIM, seed=2)
+    srv = ReadOnlyCacheServer(host, 128, window=2, table_group=group)
+    assert srv.num_slots == 128 * 4 and srv.nominal_slots == 128
+    batches = [
+        np.asarray(ids)
+        for ids, _ in scenario_batches(
+            "drift", group, 6, batch_size=4, lookups_per_table=3, seed=3
+        )
+    ]
+    # served bags must equal the fp32 host-oracle within one int8 step/row
+    for ids in batches:
+        srv.enqueue(ids)
+        bags, st, _ = srv.serve_next()
+        assert np.all(np.isfinite(bags)) and bags.shape[-1] == DIM
+
+
+def test_static_cache_precision_smoke():
+    group = small_group()
+    host = HostEmbeddingTable(group.total_rows, DIM, seed=2)
+    master = host.data.copy()
+    hot = np.arange(64, dtype=np.int64)
+
+    def train_fn(storage, slots, batch):
+        return storage, {"loss": 0.0}
+
+    runner = make_runtime(
+        "static", host, train_fn, hot_ids=hot, precision="int8"
+    )
+    items = list(
+        scenario_batches(
+            "drift", group, 5, batch_size=4, lookups_per_table=3, seed=4
+        )
+    )
+    runner.run(iter(items))
+    runner.flush_to_host()
+    # an identity train_fn only moves rows through quantize->dequantize:
+    # the master may move by at most one int8 step per element
+    touched = np.abs(host.data - master)
+    scale_bound = np.max(np.abs(master), axis=1, keepdims=True) / 127.0
+    assert np.all(touched <= scale_bound + 1e-6)
+
+
+def test_precision_slot_budgets_per_table():
+    group = TableGroup(
+        [
+            TableSpec("a", 4000, DIM, precision="int8"),
+            TableSpec("b", 2000, DIM, precision="fp16"),
+            TableSpec("c", 2000, DIM, precision="fp32"),
+        ]
+    )
+    base = group.slot_budgets(300, min_per_table=10)
+    prec = group.precision_slot_budgets(300, min_per_table=10)
+    assert prec == [base[0] * 4, base[1] * 2, base[2] * 1]
+
+
+def test_sharded_realizes_mixed_precisions():
+    from repro.core.sharded_pipeline import ShardedScratchPipe
+
+    group = TableGroup(
+        [
+            TableSpec("a", 400, DIM, precision="int8"),
+            TableSpec("b", 200, DIM, precision="fp16"),
+        ]
+    )
+    host = HostEmbeddingTable(group.total_rows, DIM, seed=1)
+
+    def train_fn(storages, slots_all, batch):
+        return storages, None
+
+    pipe = ShardedScratchPipe.from_group(host, 120, group, train_fn)
+    assert pipe.precisions == ("int8", "fp16")
+    assert isinstance(pipe.pipes[0].storage, qz.QuantStorage)
+    assert np.asarray(pipe.pipes[1].storage).dtype == np.float16
+    budgets = group.slot_budgets(120)
+    assert pipe.pipes[0].num_slots == budgets[0] * 4
+    assert pipe.pipes[1].num_slots == budgets[1] * 2
+    pipe.close()
+
+
+def test_single_storage_runtimes_reject_mixed_precisions():
+    group = TableGroup(
+        [
+            TableSpec("a", 400, DIM, precision="int8"),
+            TableSpec("b", 200, DIM, precision="fp16"),
+        ]
+    )
+    with pytest.raises(ValueError, match="mixed per-table precisions"):
+        group.uniform_precision()
+    host = HostEmbeddingTable(group.total_rows, DIM, seed=1)
+
+    def train_fn(storage, slots, batch):
+        return storage, {"loss": 0.0}
+
+    with pytest.raises(ValueError, match="mixed per-table precisions"):
+        make_runtime(
+            "scratchpipe", host, train_fn, num_slots=240, table_group=group
+        )
+
+
+def test_group_conflict_and_with_precision():
+    group = small_group("int8")
+    host = HostEmbeddingTable(group.total_rows, DIM, seed=1)
+
+    def train_fn(storage, slots, batch):
+        return storage, {"loss": 0.0}
+
+    with pytest.raises(ValueError, match="conflicts"):
+        make_runtime(
+            "scratchpipe", host, train_fn, num_slots=240,
+            table_group=group, precision="fp16",
+        )
+    regrouped = group.with_precision("fp16")
+    assert regrouped.uniform_precision() == "fp16"
+    assert group.uniform_precision() == "int8"  # original untouched
+
+
+# --------------------------------------------------------------------------- #
+# P5: launch counts at reduced precision
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("precision", ["fp16", "int8"])
+def test_fused_quantized_cycle_stays_two_pallas_launches(precision):
+    from repro.launch.hlo_stats import jaxpr_primitive_counts
+
+    n_slots, F, B, T, L = 256, 32, 4, 2, 3
+    storage = sp.make_storage(n_slots, DIM, precision=precision)
+    if precision == "int8":
+        fill_rows = (
+            jnp.zeros((F, DIM), jnp.int8), jnp.ones((F, 1), jnp.float32)
+        )
+    else:
+        fill_rows = jnp.zeros((F, DIM), jnp.float16)
+    slots = jnp.zeros((B, T, L), jnp.int32)
+    fill_slots = jnp.zeros((F,), jnp.int32)
+    dense = jnp.zeros((B, 13), jnp.float32)
+    label = jnp.zeros((B,), jnp.float32)
+    trainer = _trainer("pallas", precision)
+    counts = jaxpr_primitive_counts(
+        lambda st, m: dlrm_fill_train_step_q(
+            st, m, fill_slots, fill_rows, slots, dense, label,
+            jax.random.key(0), 0.05, kernel="pallas",
+        ),
+        storage, trainer.mlps,
+    )
+    assert counts.get("pallas_call", 0) <= 2, counts
+
+
+# --------------------------------------------------------------------------- #
+# P6: validation
+# --------------------------------------------------------------------------- #
+def test_config_validates_precision_and_rounding():
+    with pytest.raises(ValueError):
+        DLRMConfig(name="x", num_tables=1, rows_per_table=8, embed_dim=4,
+                   precision="int4")
+    with pytest.raises(ValueError):
+        DLRMConfig(name="x", num_tables=1, rows_per_table=8, embed_dim=4,
+                   rounding="up")
+    with pytest.raises(ValueError):
+        TableSpec("t", 8, 4, precision="fp8")
+
+
+def test_storage_dtype_conflicts_with_reduced_precision():
+    host = HostEmbeddingTable(600, DIM, seed=1)
+
+    def train_fn(storage, slots, batch):
+        return storage, {"loss": 0.0}
+
+    with pytest.raises(ValueError, match="storage_dtype"):
+        make_runtime(
+            "scratchpipe", host, train_fn, num_slots=240,
+            precision="fp16", storage_dtype=jnp.bfloat16,
+        )
+
+
+def test_replaced_config_reaches_trainer():
+    cfg = DLRMConfig(name="x", num_tables=1, rows_per_table=64, embed_dim=4)
+    cfg = dataclasses.replace(cfg, precision="int8", rounding="nearest")
+    trainer = DLRMTrainer(cfg, jax.random.key(0))
+    assert trainer.precision == "int8" and trainer.rounding == "nearest"

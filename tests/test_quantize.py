@@ -1,0 +1,318 @@
+"""Mixed-precision quantize/dequantize invariants (core/quantize.py).
+
+Q1  round trip: dequant(quant(rows)) is within half a quantization step of
+    the master — across magnitudes, all-zero rows, subnormal maxima, and
+    bf16-representable inputs (property sweep).
+Q2  scale snap: every emitted int8 scale is a normal fp32 with <= 16
+    explicit mantissa bits, so each dequant product payload*scale is EXACT
+    in fp32 — the compiler-proof parity discipline.
+Q3  stochastic rounding is unbiased: the key-averaged dequantized value
+    converges to the pre-quantization value, for int8 and fp16, while
+    round-to-nearest of a sub-step update is swallowed entirely.
+Q4  numpy (host/[Collect]) and jnp (device/update-epilogue) quantizers
+    agree bitwise at nearest rounding.
+Q5  byte accounting: row_bytes/SLOT_MULTIPLIER arithmetic, and
+    storage_bytes counts the int8 scale column (metadata rides on top of
+    the payload-denominated slot budget).
+Q6  requantize_update: untouched rows bit-exact; touched rows absorb the
+    delta to within one int8 step at the new scale.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_compat import given, settings, st
+
+from repro.core import quantize as qz
+from repro.core import scratchpad as sp
+
+
+# --------------------------------------------------------------------------- #
+# Q1: round trip (property sweep over row regimes)
+# --------------------------------------------------------------------------- #
+def _rows_for(regime: str, rng: np.random.Generator, n: int, d: int):
+    if regime == "normal":
+        return rng.standard_normal((n, d)).astype(np.float32)
+    if regime == "large":
+        return (rng.standard_normal((n, d)) * 1e4).astype(np.float32)
+    if regime == "small":
+        return (rng.standard_normal((n, d)) * 1e-6).astype(np.float32)
+    if regime == "zero":
+        return np.zeros((n, d), np.float32)
+    if regime == "subnormal":
+        # absmax below the fp32 normal range: the snap clamps the scale up
+        return (rng.standard_normal((n, d)) * 1e-40).astype(np.float32)
+    if regime == "bf16":
+        # inputs representable in bf16 (truncated mantissa), as fp32
+        x = rng.standard_normal((n, d)).astype(np.float32)
+        return (
+            (x.view(np.uint32) & np.uint32(0xFFFF0000)).view(np.float32)
+        )
+    raise AssertionError(regime)
+
+
+REGIMES = ("normal", "large", "small", "zero", "subnormal", "bf16")
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.data())
+def test_int8_round_trip(data):
+    regime = data.draw(st.sampled_from(REGIMES))
+    seed = data.draw(st.integers(0, 2**16))
+    n = data.draw(st.integers(1, 16))
+    d = data.draw(st.integers(1, 32))
+    rows = _rows_for(regime, np.random.default_rng(seed), n, d)
+    data, scale = qz.quantize_rows_np(rows, "int8")
+    assert data.dtype == np.int8 and scale.shape == (n, 1)
+    back = qz.dequantize_rows_np((data, scale), "int8")
+    # half a quantization step per element, at that row's scale
+    assert np.all(np.abs(back - rows) <= 0.5 * scale + 1e-45), regime
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.data())
+def test_fp16_round_trip(data):
+    regime = data.draw(st.sampled_from(REGIMES))
+    seed = data.draw(st.integers(0, 2**16))
+    n = data.draw(st.integers(1, 16))
+    d = data.draw(st.integers(1, 32))
+    rows = _rows_for(regime, np.random.default_rng(seed), n, d)
+    q = qz.quantize_rows_np(rows, "fp16")
+    assert q.dtype == np.float16
+    back = qz.dequantize_rows_np(q, "fp16")
+    # round-to-nearest fp16: within half an ulp of the magnitude (plus the
+    # smallest subnormal for values that flush)
+    tol = np.abs(rows) * 2.0**-11 + 2.0**-24
+    assert np.all(np.abs(back - rows) <= tol), regime
+
+
+def test_fp32_round_trip_is_identity():
+    rows = np.random.default_rng(0).standard_normal((4, 8)).astype(np.float32)
+    assert qz.quantize_rows_np(rows, "fp32") is rows
+    np.testing.assert_array_equal(qz.dequantize_rows_np(rows, "fp32"), rows)
+
+
+def test_zero_rows_quantize_to_unit_scale_zero_payload():
+    data, scale = qz.quantize_rows_np(np.zeros((3, 8), np.float32), "int8")
+    np.testing.assert_array_equal(data, 0)
+    np.testing.assert_array_equal(scale, 1.0)
+    np.testing.assert_array_equal(
+        qz.dequantize_rows_np((data, scale), "int8"), 0.0
+    )
+
+
+def test_subnormal_maxima_clamp_scale_into_normal_range():
+    rows = np.full((2, 4), 1e-40, np.float32)
+    data, scale = qz.quantize_rows_np(rows, "int8")
+    assert np.all(scale >= qz._F32_MIN_NORMAL)
+    assert np.all(np.isfinite(scale))
+    # the clamped scale exceeds the values: payload rounds to zero
+    np.testing.assert_array_equal(data, 0)
+
+
+# --------------------------------------------------------------------------- #
+# Q2: scale snap + exact products
+# --------------------------------------------------------------------------- #
+@settings(max_examples=30, deadline=None)
+@given(st.data())
+def test_snapped_scales_make_exact_products(data):
+    seed = data.draw(st.integers(0, 2**16))
+    scale_exp = data.draw(st.integers(-40, 30))
+    rng = np.random.default_rng(seed)
+    raw = (rng.random((16, 1)).astype(np.float32) + 1e-7) * np.float32(
+        2.0**scale_exp
+    )
+    snapped = qz._snap_scale_np(raw)
+    # normal range, <= 16 explicit mantissa bits
+    assert np.all(snapped >= qz._F32_MIN_NORMAL)
+    bits = snapped.view(np.uint32)
+    assert np.all(bits & np.uint32(~qz._SCALE_MASK & 0xFFFFFFFF) == 0)
+    # snap truncates: never above the (clamped) input
+    assert np.all(snapped <= np.maximum(raw, qz._F32_MIN_NORMAL))
+    # every payload * scale product is exact in fp32 (vs float64 oracle)
+    payload = rng.integers(-127, 128, size=(16, 8)).astype(np.float32)
+    prod32 = payload * snapped
+    prod64 = payload.astype(np.float64) * snapped.astype(np.float64)
+    assert np.array_equal(prod32.astype(np.float64), prod64)
+
+
+def test_snap_np_and_jnp_agree_bitwise():
+    rng = np.random.default_rng(3)
+    raw = (rng.random((64, 1)).astype(np.float32) + 1e-7) * np.float32(
+        2.0
+    ) ** rng.integers(-45, 30, size=(64, 1)).astype(np.float32)
+    a = qz._snap_scale_np(raw)
+    b = np.asarray(qz._snap_scale_jnp(jnp.asarray(raw)))
+    np.testing.assert_array_equal(a, b)
+
+
+# --------------------------------------------------------------------------- #
+# Q3: stochastic rounding unbiasedness
+# --------------------------------------------------------------------------- #
+def test_int8_stochastic_rounding_is_unbiased():
+    # a value 0.3 quantization steps above an integer: nearest always snaps
+    # down; stochastic must land 0.3 of the mass up
+    scale = jnp.full((1, 1), 0.5, jnp.float32)
+    x = jnp.full((1, 64), 0.5 * 10.3, jnp.float32)  # y = 10.3 steps
+    acc = np.zeros((1, 64), np.float64)
+    n = 200
+    for i in range(n):
+        q = qz.quantize_int8_jnp(x, scale, "stochastic", jax.random.key(i))
+        acc += np.asarray(q, np.float64) * 0.5
+    mean = acc / n
+    # standard error of floor(y+u): sqrt(p(1-p)/n) steps ~ 0.016 steps
+    assert np.all(np.abs(mean - 0.5 * 10.3) < 0.5 * 0.12), mean.mean()
+    # nearest swallows the .3 every time
+    q = qz.quantize_int8_jnp(x, scale, "nearest", jax.random.key(0))
+    np.testing.assert_array_equal(np.asarray(q), 10)
+
+
+def test_fp16_stochastic_rounding_is_unbiased():
+    # pick an fp32 value strictly between two fp16 neighbors
+    lo = np.float16(1.0)
+    hi = np.nextafter(lo, np.float16(2.0), dtype=np.float16)
+    x32 = np.float32(lo) + (np.float32(hi) - np.float32(lo)) * np.float32(0.25)
+    x = jnp.full((256,), x32, jnp.float32)
+    acc = np.zeros((256,), np.float64)
+    n = 200
+    for i in range(n):
+        q = qz.quantize_f16_jnp(x, "stochastic", jax.random.key(i))
+        acc += np.asarray(q, np.float64)
+    mean = acc / n
+    step = float(hi) - float(lo)
+    assert abs(mean.mean() - float(x32)) < 0.05 * step
+    # nearest collapses to one neighbor deterministically
+    qn = np.asarray(qz.quantize_f16_jnp(x, "nearest", jax.random.key(0)))
+    assert np.all(qn == qn[0]) and qn[0] in (lo, hi)
+
+
+def test_stochastic_rounding_is_deterministic_per_key():
+    x = jnp.asarray(
+        np.random.default_rng(0).standard_normal((4, 16)), jnp.float32
+    )
+    scale = qz._int8_scale(x)
+    a = qz.quantize_int8_jnp(x, scale, "stochastic", jax.random.key(7))
+    b = qz.quantize_int8_jnp(x, scale, "stochastic", jax.random.key(7))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# --------------------------------------------------------------------------- #
+# Q4: host (numpy) and device (jnp) quantizers agree
+# --------------------------------------------------------------------------- #
+@settings(max_examples=20, deadline=None)
+@given(st.data())
+def test_np_and_jnp_int8_quantizers_agree_at_nearest(data):
+    regime = data.draw(
+        st.sampled_from(("normal", "large", "small", "zero", "bf16"))
+    )
+    seed = data.draw(st.integers(0, 2**16))
+    rows = _rows_for(regime, np.random.default_rng(seed), 8, 16)
+    data_np, scale_np = qz.quantize_rows_np(rows, "int8")
+    x = jnp.asarray(rows)
+    scale_j = qz._int8_scale(x)
+    data_j = qz.quantize_int8_jnp(x, scale_j, "nearest", None)
+    np.testing.assert_array_equal(scale_np, np.asarray(scale_j))
+    np.testing.assert_array_equal(data_np, np.asarray(data_j))
+
+
+# --------------------------------------------------------------------------- #
+# Q5: byte accounting
+# --------------------------------------------------------------------------- #
+def test_row_bytes_and_slot_multiplier():
+    d = 32
+    assert qz.row_bytes(d, "fp32") == d * 4
+    assert qz.row_bytes(d, "fp16") == d * 2
+    assert qz.row_bytes(d, "int8") == d + 4  # payload + fp32 scale
+    assert qz.SLOT_MULTIPLIER == {"fp32": 1, "fp16": 2, "int8": 4}
+    # payload-only bytes per budget row are constant across precisions
+    for p, m in qz.SLOT_MULTIPLIER.items():
+        payload = qz.row_bytes(d, p) - (4 if p == "int8" else 0)
+        assert payload * m == d * 4, p
+
+
+def test_storage_bytes_counts_scale_metadata():
+    n, d = 64, 16
+    st8 = sp.make_storage(n, d, precision="int8")
+    assert isinstance(st8, qz.QuantStorage)
+    assert sp.storage_bytes(st8) == n * d * 1 + n * 4
+    st16 = sp.make_storage(n, d, precision="fp16")
+    assert sp.storage_bytes(st16) == n * d * 2
+    st32 = sp.make_storage(n, d, precision="fp32")
+    assert sp.storage_bytes(st32) == n * d * 4
+
+
+def test_precision_and_rounding_validation():
+    with pytest.raises(ValueError, match="precision"):
+        qz.check_precision("int4")
+    with pytest.raises(ValueError, match="rounding"):
+        qz.check_rounding("truncate")
+    with pytest.raises(ValueError):
+        qz.quantize_rows_np(np.zeros((1, 4), np.float32), "bf16")
+
+
+# --------------------------------------------------------------------------- #
+# Q6: requantize_update
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("rounding", ["nearest", "stochastic"])
+def test_requantize_update_untouched_rows_bit_exact(rounding):
+    rng = np.random.default_rng(5)
+    rows = rng.standard_normal((12, 8)).astype(np.float32)
+    data, scale = qz.quantize_rows_np(rows, "int8")
+    storage = qz.QuantStorage(jnp.asarray(data), jnp.asarray(scale))
+    touched = jnp.asarray(np.arange(12) % 3 == 0)
+    delta = jnp.asarray(rng.standard_normal((12, 8)).astype(np.float32))
+    out = qz.requantize_update(
+        storage, touched, delta, "int8", rounding, jax.random.key(1)
+    )
+    un = ~np.asarray(touched)
+    np.testing.assert_array_equal(np.asarray(out.data)[un], data[un])
+    np.testing.assert_array_equal(np.asarray(out.scale)[un], scale[un])
+    # touched rows: dequant lands within one step of the fp32 target
+    tm = np.asarray(touched)
+    target = (data.astype(np.float32) * scale + np.asarray(delta))[tm]
+    got = (
+        np.asarray(out.data, np.float32) * np.asarray(out.scale)
+    )[tm]
+    assert np.all(np.abs(got - target) <= np.asarray(out.scale)[tm] + 1e-45)
+
+
+@pytest.mark.parametrize("rounding", ["nearest", "stochastic"])
+def test_requantize_update_fp16(rounding):
+    rng = np.random.default_rng(6)
+    storage = jnp.asarray(
+        rng.standard_normal((10, 8)).astype(np.float16)
+    )
+    touched = jnp.asarray(np.arange(10) < 4)
+    delta = jnp.asarray(rng.standard_normal((10, 8)).astype(np.float32))
+    out = qz.requantize_update(
+        storage, touched, delta, "fp16", rounding, jax.random.key(2)
+    )
+    un = ~np.asarray(touched)
+    np.testing.assert_array_equal(
+        np.asarray(out)[un], np.asarray(storage)[un]
+    )
+    target = np.asarray(storage, np.float32)[:4] + np.asarray(delta)[:4]
+    got = np.asarray(out, np.float32)[:4]
+    # within one fp16 ulp of the fp32 sum
+    assert np.all(np.abs(got - target) <= np.abs(target) * 2.0**-10 + 2.0**-23)
+
+
+def test_requantize_update_rescales_saturated_rows():
+    # a row whose update pushes past the old absmax must re-range, not clip
+    rows = np.ones((1, 4), np.float32)
+    data, scale = qz.quantize_rows_np(rows, "int8")
+    storage = qz.QuantStorage(jnp.asarray(data), jnp.asarray(scale))
+    delta = jnp.full((1, 4), 9.0, jnp.float32)  # 10x the old range
+    out = qz.requantize_update(
+        storage, jnp.asarray([True]), delta, "int8", "nearest",
+        jax.random.key(0),
+    )
+    got = np.asarray(out.data, np.float32) * np.asarray(out.scale)
+    assert np.all(np.abs(got - 10.0) <= np.asarray(out.scale))
+    assert float(out.scale[0, 0]) > float(scale[0, 0])
