@@ -27,6 +27,7 @@ HERE = os.path.dirname(__file__)
 WALLCLOCK_PATH = os.path.join(HERE, "..", "BENCH_wallclock.json")
 SERVE_PATH = os.path.join(HERE, "..", "BENCH_serve.json")
 CAPACITY_PATH = os.path.join(HERE, "..", "BENCH_capacity.json")
+RECOVERY_PATH = os.path.join(HERE, "..", "BENCH_recovery.json")
 SUMMARY_PATH = os.path.join(HERE, "results", "BENCH_summary.json")
 
 # artifact -> (path, required schema tag, required at --check time)
@@ -35,6 +36,7 @@ ARTIFACTS = {
     "summary": (SUMMARY_PATH, "bench_summary/v1", False),
     "serve": (SERVE_PATH, "bench_serve/v1", False),
     "capacity": (CAPACITY_PATH, "bench_capacity/v1", False),
+    "recovery": (RECOVERY_PATH, "bench_recovery/v1", False),
 }
 
 

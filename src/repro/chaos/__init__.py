@@ -1,0 +1,7 @@
+from repro.chaos.injector import (  # noqa: F401
+    ChaosError,
+    ChaosEvent,
+    ChaosInjector,
+    ChaosPlan,
+    InjectedWorkerDeath,
+)

@@ -1,1 +1,2 @@
 from repro.checkpoint.manager import CheckpointManager  # noqa: F401
+from repro.checkpoint.pack import pack_blob, tree_to_host, unpack_blob  # noqa: F401

@@ -13,8 +13,16 @@ code path):
     and restore re-shards onto the *current* mesh (elastic restart), so a job
     can come back on a different pod count.
   * writes go to ``<dir>/.tmp_step_<N>`` and are os.replace()'d into place —
-    a preempted save never corrupts the latest checkpoint.
+    a preempted save never corrupts the latest checkpoint. The tmp tree
+    (every file AND directory) is fsynced before the rename, and the parent
+    directory after it, so the atomic rename is durable against power loss,
+    not just process death (``durable=False`` skips the fsyncs for tests).
   * saves run on a background thread (training continues; ``wait()`` joins).
+    A background failure is surfaced as a RuntimeError on the NEXT
+    ``save()``/``wait()``/``restore()`` — it is never silently dropped.
+  * host arrays are deep-copied at ``save()`` call time: the caller's live
+    tables keep training while the background thread serializes the
+    snapshot, so the bytes on disk are the state AT the checkpoint step.
 """
 from __future__ import annotations
 
@@ -39,10 +47,29 @@ def _flatten(tree) -> Dict[str, Any]:
     return flat
 
 
+def _fsync_path(path: str):
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _fsync_tree(root: str):
+    """fsync every file and directory under ``root`` (and root itself) so a
+    subsequent atomic rename is durable: data blocks, then the directory
+    entries that reference them."""
+    for dirpath, _dirnames, filenames in os.walk(root, topdown=False):
+        for name in filenames:
+            _fsync_path(os.path.join(dirpath, name))
+        _fsync_path(dirpath)
+
+
 class CheckpointManager:
-    def __init__(self, directory: str, *, keep: int = 3):
+    def __init__(self, directory: str, *, keep: int = 3, durable: bool = True):
         self.dir = directory
         self.keep = keep
+        self.durable = durable
         os.makedirs(directory, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
@@ -57,10 +84,15 @@ class CheckpointManager:
         extra: Optional[dict] = None,
         blocking: bool = False,
     ):
-        """Snapshot device state (fetched now) + host state, write async."""
+        """Snapshot device state (fetched now) + host state, write async.
+
+        Raises RuntimeError here if a PREVIOUS async save failed — the
+        training loop finds out at the next checkpoint, not at exit."""
         self.wait()
-        flat = {k: np.asarray(v) for k, v in _flatten(state).items()}
-        host_arrays = dict(host_arrays or {})
+        flat = {k: np.array(np.asarray(v)) for k, v in _flatten(state).items()}
+        # deep-copy now: the caller keeps mutating these arrays while the
+        # background thread writes
+        host_arrays = {k: np.array(v) for k, v in dict(host_arrays or {}).items()}
         extra = dict(extra or {})
 
         def _write():
@@ -83,8 +115,14 @@ class CheckpointManager:
                 }
                 with open(os.path.join(tmp, "manifest.json"), "w") as f:
                     json.dump(manifest, f, indent=1)
+                if self.durable:
+                    _fsync_tree(tmp)
                 shutil.rmtree(final, ignore_errors=True)
                 os.replace(tmp, final)
+                if self.durable:
+                    # make the rename itself durable: the parent directory
+                    # entry is what points a restart at step_<N>
+                    _fsync_path(self.dir)
                 self._gc()
             except BaseException as e:  # surfaced on next wait()
                 self._error = e

@@ -1,0 +1,61 @@
+"""Blob packing for mid-stream checkpoint state.
+
+The hold window of a pipelined cache runtime is a small, heterogeneous
+structure (per-entry ids, dense batch payloads, a captured plan, staged
+rows at various pipeline stages). `CheckpointManager` persists flat
+`{name: ndarray}` maps, so the window is serialized into ONE opaque uint8
+array via pickle: `pack_blob` / `unpack_blob` round-trip any picklable
+object through a 1-D uint8 ndarray that rides the normal `host_arrays`
+path (np.save/np.load, atomic-rename durability, manifest listing).
+
+Everything placed in a blob is first normalized to host memory with
+`tree_to_host` — device arrays don't pickle portably and a checkpoint
+must never hold references into live accelerator buffers.
+"""
+from __future__ import annotations
+
+import pickle
+from typing import Any
+
+import numpy as np
+
+# bump when the window capture layout changes incompatibly
+BLOB_VERSION = 1
+
+
+def tree_to_host(x: Any) -> Any:
+    """Recursively convert array leaves (incl. jax.Array) to host ndarrays.
+
+    Dicts/lists/tuples are rebuilt; scalars and strings pass through. The
+    result is safe to pickle and independent of device buffers.
+    """
+    if isinstance(x, dict):
+        return {k: tree_to_host(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return type(x)(tree_to_host(v) for v in x)
+    if hasattr(x, "__array__") and not isinstance(x, np.ndarray):
+        return np.asarray(x)
+    if isinstance(x, np.ndarray):
+        return np.array(x)  # snapshot: detach from any shared buffer
+    return x
+
+
+def pack_blob(obj: Any) -> np.ndarray:
+    """Pickle ``obj`` (host-normalized) into a 1-D uint8 ndarray."""
+    payload = pickle.dumps(
+        {"v": BLOB_VERSION, "obj": tree_to_host(obj)},
+        protocol=pickle.HIGHEST_PROTOCOL,
+    )
+    return np.frombuffer(payload, dtype=np.uint8).copy()
+
+
+def unpack_blob(arr: np.ndarray) -> Any:
+    """Inverse of :func:`pack_blob`."""
+    wrapper = pickle.loads(np.ascontiguousarray(arr, dtype=np.uint8).tobytes())
+    if not isinstance(wrapper, dict) or "v" not in wrapper:
+        raise ValueError("not a repro checkpoint blob")
+    if wrapper["v"] != BLOB_VERSION:
+        raise ValueError(
+            f"checkpoint blob version {wrapper['v']} != {BLOB_VERSION}"
+        )
+    return wrapper["obj"]

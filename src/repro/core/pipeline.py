@@ -86,6 +86,7 @@ from typing import (
 import jax
 import numpy as np
 
+from repro.checkpoint.pack import pack_blob, unpack_blob
 from repro.core import quantize as qz
 from repro.core import scratchpad as sp
 from repro.core.host_table import HostEmbeddingTable, HostTraffic
@@ -93,6 +94,12 @@ from repro.core.plan import Planner, PlanResult, pad_index, pad_len, pad_rows
 from repro.core.runtime import register_runtime
 from repro.core.table_group import TableGroup
 from repro.obs import NULL_SPAN, resolve as obs_resolve
+from repro.runtime.supervision import (
+    OpSupervisor,
+    SupervisedOp,
+    SupervisePolicy,
+    TransientOpError,
+)
 
 
 @dataclasses.dataclass
@@ -125,13 +132,22 @@ class _InFlight:
     batch: Any
     plan: Optional[PlanResult] = None
     host_rows: Optional[np.ndarray] = None  # [Collect] host->staging
-    host_rows_f: Optional[Future] = None  # overlapped: pending host gather
+    host_rows_f: Optional[SupervisedOp] = None  # overlapped: pending gather
     evicted_dev: Optional[jax.Array] = None  # [Collect] device victim read
     fetched_dev: Optional[jax.Array] = None  # [Exchange] h2d
     evicted_host: Optional[np.ndarray] = None  # [Exchange] d2h
-    evicted_host_f: Optional[Future] = None  # overlapped: pending d2h
+    evicted_host_f: Optional[SupervisedOp] = None  # overlapped: pending d2h
     stage: int = 0  # stages completed: 1=planned .. 4=inserted
     times: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+
+#: PlanResult fields serialized per in-flight entry by the mid-stream
+#: checkpoint (accessing them on a lazy DevicePlanResult triggers its one
+#: d2h materialize, so a captured plan is always a plain host structure).
+_PLAN_FIELDS = (
+    "step", "slots", "miss_ids", "fill_slots", "evict_slots", "evict_ids",
+    "n_unique", "n_hits", "hits_by_table", "misses_by_table",
+)
 
 
 # Operand padding now lives in repro.core.plan (shared by the pipeline, the
@@ -176,6 +192,7 @@ class ScratchPipe:
         tracer=None,
         metrics=None,
         obs_labels: Optional[Dict[str, str]] = None,
+        supervise: Optional[SupervisePolicy] = None,
     ):
         if executor not in ("sync", "overlapped"):
             raise ValueError(f"unknown executor {executor!r}")
@@ -285,7 +302,7 @@ class ScratchPipe:
         # plus a d2h thread that absorbs the blocking device sync.
         self._host_pool: Optional[ThreadPoolExecutor] = None
         self._d2h_pool: Optional[ThreadPoolExecutor] = None
-        self._pending: Deque[Future] = collections.deque()
+        self._pending: Deque[SupervisedOp] = collections.deque()
         if executor == "overlapped":
             self._host_pool = ThreadPoolExecutor(
                 max_workers=1, thread_name_prefix="scratchpipe-host"
@@ -325,6 +342,16 @@ class ScratchPipe:
         self._mc = None
         if self._metrics is not None:
             self._setup_metrics(dict(obs_labels or {}))
+        # -- supervised execution (repro.runtime.supervision) --------------- #
+        # Only meaningful for the overlapped executor: the sync engine has
+        # no worker threads to watch. With supervise=None the op plumbing
+        # below reduces to the plain future semantics (result / raise).
+        self.supervise = supervise
+        self._sv: Optional[OpSupervisor] = None
+        if supervise is not None and executor == "overlapped":
+            self._sv = OpSupervisor(
+                supervise, metrics=self._metrics, tracer=self._tracer
+            )
 
     def _setup_metrics(self, labels: Dict[str, str]) -> None:
         """Eagerly create counter cells and register lazy gauges. Byte
@@ -387,22 +414,130 @@ class ScratchPipe:
     # ------------------------------------------------------------------ #
     # overlapped-executor plumbing
     # ------------------------------------------------------------------ #
-    def _submit_host(self, fn, *args) -> Future:
-        f = self._host_pool.submit(fn, *args)
-        self._pending.append(f)
+    def _submit_host(self, fn, *args) -> SupervisedOp:
+        if self._host_pool is None:
+            # degraded mid-run: execute inline (sync semantics)
+            return SupervisedOp.completed(fn, args, fn(*args))
+        op = SupervisedOp(fn, args)
+        op.future = self._host_pool.submit(fn, *args)
+        self._pending.append(op)
         # reap retired work each cycle: surfaces worker exceptions promptly
         # and keeps the pending deque from growing with the run length
-        while self._pending and self._pending[0].done():
-            self._pending.popleft().result()
-        return f
+        while self._pending and self._pending[0].probe_done():
+            head = self._pending[0]
+            if self._sv is None:
+                self._pending.popleft().result_now()
+                continue
+            try:
+                head.wait(self._sv.policy.op_timeout)
+            except TransientOpError as e:
+                self._sv.note_failure(e)
+                self._recover_pending()
+                break
+            self._pending.popleft()
+        return op
 
     def _barrier(self) -> None:
         """Wait for every outstanding background operation (host gathers,
         write-backs, d2h copies). Called at run/drain boundaries and before
         anything reads host-table or traffic state from outside the
-        pipeline's own ordered schedule."""
+        pipeline's own ordered schedule. Under supervision a failed or
+        stalled op triggers ordered inline recovery instead of raising."""
+        if self._sv is None:
+            while self._pending:
+                self._pending.popleft().result_now()
+            return
         while self._pending:
-            self._pending.popleft().result()
+            head = self._pending[0]
+            try:
+                head.wait(self._sv.policy.op_timeout)
+            except TransientOpError as e:
+                self._sv.note_failure(e)
+                self._recover_pending()
+                return
+            self._pending.popleft()
+
+    def _op_result(self, op: SupervisedOp):
+        """Resolve a host-queue op on the MAIN thread. Under supervision this
+        settles every EARLIER op first (submission order), so a failure
+        upstream of ``op`` is recovered before a value computed against
+        tainted host state could be consumed."""
+        if self._sv is None:
+            return op.result_now()
+        while not op.settled and self._pending:
+            head = self._pending[0]
+            try:
+                head.wait(self._sv.policy.op_timeout)
+            except TransientOpError as e:
+                self._sv.note_failure(e)
+                self._recover_pending()
+                break
+            self._pending.popleft()
+        return op.value if op.settled else op.result_now()
+
+    def _recover_pending(self) -> None:
+        """Ordered recovery of the host-op queue after a failure/timeout:
+        every op from the first failed one onward is recomputed INLINE in
+        original submission order. Host ops are pure reads (gather) or
+        idempotent writes keyed by evict ids (scatter), so the replay
+        reproduces the sync engine's host-table interleaving exactly —
+        bit-parity survives the fault. Retries are bounded by the policy;
+        repeated incidents degrade the pipe to the sync executor."""
+        sv = self._sv
+        with self._span("ft.recover", cat="host"):
+            poisoned = False
+            while self._pending:
+                op = self._pending.popleft()
+                if not poisoned:
+                    try:
+                        op.wait(sv.policy.op_timeout)
+                        continue
+                    except TransientOpError as e:
+                        sv.note_failure(e)
+                        poisoned = True
+                # quiesce before replaying: never run the op inline while a
+                # (stalled) worker might still be executing it
+                f = op.future
+                if f is not None and not f.done() and not f.cancel():
+                    try:
+                        op.wait(sv.policy.op_timeout * 5)
+                    except TransientOpError:
+                        pass
+                if not op.settled:
+                    sv.run_inline(op)
+        if sv.note_incident():
+            self._degrade_to_sync()
+
+    def _degrade_to_sync(self) -> None:
+        """Graceful degradation after repeated worker faults: settle every
+        in-flight op, abandon the pools, and run all subsequent stages
+        inline (``executor="sync"``). Output is unchanged — sync order IS
+        the reference order — only overlap is lost."""
+        if self._host_pool is None and self._d2h_pool is None:
+            return
+        self._sv.note_degraded()
+        for e in self._window:
+            if e.host_rows_f is not None:
+                e.host_rows = (
+                    e.host_rows_f.value
+                    if e.host_rows_f.settled
+                    else self._sv.value_or_inline(e.host_rows_f)
+                )
+                e.host_rows_f = None
+            if e.evicted_host_f is not None:
+                e.evicted_host = (
+                    e.evicted_host_f.value
+                    if e.evicted_host_f.settled
+                    else self._sv.value_or_inline(e.evicted_host_f)
+                )
+                e.evicted_host_f = None
+        pools = [p for p in (self._host_pool, self._d2h_pool) if p is not None]
+        self._host_pool = self._d2h_pool = None
+        self.executor = "sync"
+        for p in pools:
+            # queued work (e.g. device-plan materializes) still completes;
+            # the threads then exit — nothing new is ever submitted
+            p.shutdown(wait=False)
 
     def _dequant(self, rows):
         """replica -> master: dequantize written-back rows (identity at
@@ -411,10 +546,23 @@ class ScratchPipe:
             return rows
         return qz.dequantize_rows_np(rows, self.precision)
 
-    def _writeback(self, evict_ids: np.ndarray, d2h: Future) -> None:
+    def _d2h_value(self, d2h):
+        """Resolve a d2h staging value: a SupervisedOp (overlapped — with
+        inline recompute under supervision; the victim device read is pure,
+        so a recompute is byte-identical), a plain Future, or an already
+        materialized host array."""
+        if isinstance(d2h, SupervisedOp):
+            if self._sv is None or d2h.settled:
+                return d2h.result_now()
+            return self._sv.value_or_inline(d2h)
+        if isinstance(d2h, Future):
+            return d2h.result()
+        return d2h
+
+    def _writeback(self, evict_ids: np.ndarray, d2h) -> None:
         """Host-worker task: wait for the victims' d2h, then scatter. Runs
         strictly after every earlier-submitted gather (one ordered worker)."""
-        self.host.scatter(evict_ids, self._dequant(d2h.result()))
+        self.host.scatter(evict_ids, self._dequant(self._d2h_value(d2h)))
 
     def close(self) -> None:
         """Quiesce and release the overlapped executor's worker threads.
@@ -468,7 +616,7 @@ class ScratchPipe:
             p = entry.plan
             if p.miss_ids.size:
                 rows = (
-                    entry.host_rows_f.result()
+                    self._op_result(entry.host_rows_f)
                     if entry.host_rows_f is not None
                     else entry.host_rows
                 )
@@ -480,9 +628,13 @@ class ScratchPipe:
             n_evict = int(p.evict_slots.size)
             if n_evict:
                 if self._d2h_pool is not None:
-                    entry.evicted_host_f = self._d2h_pool.submit(
+                    op = SupervisedOp(
+                        self._d2h_slice_fn, (entry.evicted_dev, n_evict)
+                    )
+                    op.future = self._d2h_pool.submit(
                         self._d2h_slice_fn, entry.evicted_dev, n_evict
                     )
+                    entry.evicted_host_f = op
                 else:
                     entry.evicted_host = self._d2h_slice_fn(
                         entry.evicted_dev, n_evict
@@ -730,13 +882,95 @@ class ScratchPipe:
                 vals = np.asarray(vals)
             self.host.scatter(slot_to_id[live], self._dequant(vals))
 
-    # -- checkpoint/restart (paper-system fault tolerance) ----------------- #
+    # -- checkpoint/restart (crash-consistent, ANY cycle) ------------------ #
+    def _capture_plan(self, p) -> dict:
+        """Materialize a plan (host PlanResult or lazy DevicePlanResult)
+        into a plain host dict of `_PLAN_FIELDS`."""
+        out: Dict[str, Any] = {}
+        for f in _PLAN_FIELDS:
+            v = getattr(p, f)
+            if f in ("step", "n_unique", "n_hits"):
+                out[f] = int(v)
+            elif v is None:
+                out[f] = None
+            else:
+                out[f] = np.asarray(v)
+        return out
+
+    @staticmethod
+    def _np_maybe_tuple(x):
+        if x is None:
+            return None
+        if isinstance(x, tuple):  # int8 staging: (payload, scale)
+            return tuple(np.asarray(a) for a in x)
+        return np.asarray(x)
+
+    @staticmethod
+    def _put_maybe_tuple(x):
+        if x is None:
+            return None
+        if isinstance(x, tuple):
+            return tuple(jax.device_put(np.asarray(a)) for a in x)
+        return jax.device_put(np.asarray(x))
+
+    def _capture_window(self) -> list:
+        """Snapshot every in-flight entry to host structures. Pending ops
+        are RESOLVED (not cancelled): after `_barrier()` the host queue is
+        drained, and the d2h staging reads settle here. Non-destructive —
+        the entries keep their (now settled) ops and the run continues."""
+        entries = []
+        for e in self._window:
+            host_rows = e.host_rows
+            if e.host_rows_f is not None:
+                host_rows = self._op_result(e.host_rows_f)
+            evicted_host = e.evicted_host
+            if e.evicted_host_f is not None:
+                evicted_host = self._d2h_value(e.evicted_host_f)
+            entries.append({
+                "ids": np.asarray(e.ids),
+                "stage": int(e.stage),
+                "batch": e.batch,  # tree_to_host'd inside pack_blob
+                "plan": None if e.plan is None else self._capture_plan(e.plan),
+                "host_rows": self._np_maybe_tuple(host_rows),
+                "evicted_dev": self._np_maybe_tuple(e.evicted_dev),
+                "fetched_dev": self._np_maybe_tuple(e.fetched_dev),
+                "evicted_host": self._np_maybe_tuple(evicted_host),
+            })
+        return entries
+
+    def _restore_entry(self, d: dict) -> _InFlight:
+        e = _InFlight(np.asarray(d["ids"]), d["batch"])
+        e.stage = int(d["stage"])
+        if d["plan"] is not None:
+            # always restored as a host PlanResult: the captured fields are
+            # exactly what later stages consume, value-identical to what the
+            # original (host or device) planner produced
+            e.plan = PlanResult(**d["plan"])
+        e.host_rows = d["host_rows"]
+        e.evicted_dev = self._put_maybe_tuple(d["evicted_dev"])
+        e.fetched_dev = self._put_maybe_tuple(d["fetched_dev"])
+        ev = d["evicted_host"]
+        if ev is not None:
+            if self._host_pool is not None:
+                # [Insert]-host under overlapped hands the op straight to the
+                # write-back task: restore it pre-settled
+                e.evicted_host_f = SupervisedOp.completed(
+                    lambda *_a, _v=ev: _v, (), ev
+                )
+            else:
+                e.evicted_host = ev
+        return e
+
     def state_arrays(self) -> dict:
-        """Host-side snapshot at a pipeline-drain boundary (no in-flight
-        batches): planner state + scratchpad contents + host table. Together
-        with the deterministic look-ahead stream position this resumes with
-        an IDENTICAL schedule (tests/test_perf_flags_and_ft.py)."""
-        assert not self._window, "checkpoint only at drain boundaries"
+        """Crash-consistent host snapshot at ANY cycle: planner state +
+        scratchpad contents + host table + traffic counters + the in-flight
+        hold window (queued batches, staged rows, resolved d2h futures).
+        `_barrier()` first drains the ordered host queue, so the host table
+        and every captured staging value are exactly the state the sync
+        engine would have at this cycle. Together with the deterministic
+        look-ahead stream position (admitted-batch count) a kill-and-resume
+        run is elementwise bit-identical to the uninterrupted one
+        (tests/test_recovery.py)."""
         self._barrier()
         out = {"host_table": self.host.data}
         if isinstance(self.storage, sp.QuantStorage):
@@ -746,12 +980,28 @@ class ScratchPipe:
             out["storage"] = np.asarray(self.storage)
         for k, v in self.planner.state_dict().items():
             out[f"planner_{k}"] = v
+        out["traffic"] = np.array(
+            [self.pcie.read, self.pcie.written,
+             self.hbm.read, self.hbm.written,
+             self.host.traffic.read, self.host.traffic.written],
+            dtype=np.int64,
+        )
+        if self._window:
+            out["window"] = pack_blob(self._capture_window())
         return out
 
     def load_state_arrays(self, arrays: dict) -> None:
-        assert not self._window
         self._barrier()
-        self.host.data = np.asarray(arrays["host_table"])
+        self._window.clear()
+        ht = np.asarray(arrays["host_table"])
+        if ht.shape != self.host.data.shape:
+            raise ValueError(
+                f"checkpoint host table {ht.shape} != {self.host.data.shape}"
+            )
+        # IN-PLACE: sharded runtimes alias zero-copy slices of one global
+        # table — replacing the array would silently detach the shard
+        self.host.data[...] = ht
+        self.host.reguard()
         if "storage_scale" in arrays:
             self.storage = sp.QuantStorage(
                 jax.device_put(np.asarray(arrays["storage"])),
@@ -763,6 +1013,14 @@ class ScratchPipe:
             {k[len("planner_"):]: v for k, v in arrays.items()
              if k.startswith("planner_")}
         )
+        if "traffic" in arrays:
+            t = [int(x) for x in np.asarray(arrays["traffic"])]
+            self.pcie.read, self.pcie.written = t[0], t[1]
+            self.hbm.read, self.hbm.written = t[2], t[3]
+            self.host.traffic.read, self.host.traffic.written = t[4], t[5]
+        if "window" in arrays:
+            for d in unpack_blob(arrays["window"]):
+                self._window.append(self._restore_entry(d))
 
     @property
     def stats(self) -> List[StepStats]:

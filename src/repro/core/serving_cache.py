@@ -54,14 +54,16 @@ from typing import Any, Deque, List, Optional, Sequence, Tuple
 import jax
 import numpy as np
 
+from repro.checkpoint.pack import pack_blob, unpack_blob
 from repro.core import quantize as qz
 from repro.core import scratchpad as sp
 from repro.core.host_table import HostEmbeddingTable, HostTraffic
-from repro.core.pipeline import StepStats
+from repro.core.pipeline import StepStats, _PLAN_FIELDS
 from repro.core.plan import Planner, PlanResult, pad_index, pad_rows
 from repro.core.runtime import register_runtime
 from repro.core.table_group import TableGroup
 from repro.obs import NULL_SPAN, resolve as obs_resolve
+from repro.runtime.supervision import TransientOpError
 
 
 @functools.partial(jax.jit, static_argnames=("kernel",))
@@ -120,7 +122,8 @@ class _ServingRuntimeBase:
             self._mc = {
                 k: m.counter(f"serve.{k}", **lbl)
                 for k in ("requests", "lookups", "hits", "misses",
-                          "emergency_serves", "emergency_rows")
+                          "emergency_serves", "emergency_rows",
+                          "fetch_failures", "failsafe")
             }
             self._latency = m.histogram("serve.latency_us", **lbl)
             m.gauge("serve.queue_depth", fn=lambda: len(self._queue), **lbl)
@@ -349,6 +352,7 @@ class ReadOnlyCacheServer(_ServingRuntimeBase):
         kernel: str = "xla",
         storage_dtype=None,
         precision: Optional[str] = None,
+        fetch_retries: int = 1,
         tracer=None,
         metrics=None,
     ):
@@ -360,6 +364,14 @@ class ReadOnlyCacheServer(_ServingRuntimeBase):
         )
         self.kernel = sp._check_kernel(kernel)
         self.window = int(window)
+        # failsafe fetch path: the prefetch gather is routed through this
+        # hook (the chaos harness wraps it) and retried ``fetch_retries``
+        # times on TransientOpError; on exhaustion the entry simply misses
+        # and the serve-time emergency path — which reads the host table
+        # directly — completes it. Results stay bit-identical: both paths
+        # read the same read-only host rows.
+        self.fetch_retries = int(fetch_retries)
+        self._fetch_gather = self.host.gather
         # replica precision (core/quantize.py): read-only serving is the
         # easy half of coherence — rows quantize once on fill and are never
         # written back. ``num_slots`` is a byte budget in fp32-row units.
@@ -459,11 +471,27 @@ class ReadOnlyCacheServer(_ServingRuntimeBase):
 
     def _fetch(self, entry: _ServeEntry) -> None:
         """[Exchange]: host-gather the planned misses (still-valid ones are
-        filled at [Insert]; stale pairs are dropped there)."""
+        filled at [Insert]; stale pairs are dropped there). A fetch that
+        keeps failing (worker death, injected fault) is abandoned after
+        ``fetch_retries`` retries — the entry falls through to the
+        emergency path at serve time, preserving bit-parity at the cost of
+        latency (counted as ``serve.failsafe``)."""
         p = entry.plan
-        entry.fetched = (
-            self.host.gather(p.miss_ids) if p.miss_ids.size else None
-        )
+        if not p.miss_ids.size:
+            entry.fetched = None
+            entry.stage = 2
+            return
+        rows = None
+        for _attempt in range(self.fetch_retries + 1):
+            try:
+                rows = self._fetch_gather(p.miss_ids)
+                break
+            except TransientOpError:
+                if self._mc is not None:
+                    self._mc["fetch_failures"].inc()
+        if rows is None and self._mc is not None:
+            self._mc["failsafe"].inc()
+        entry.fetched = rows
         entry.stage = 2
 
     def _insert(self, entry: _ServeEntry) -> None:
@@ -471,7 +499,7 @@ class ReadOnlyCacheServer(_ServingRuntimeBase):
         current and still unlanded (an emergency fill or a later plan may
         have superseded the pair)."""
         p = entry.plan
-        if p.miss_ids.size:
+        if p.miss_ids.size and entry.fetched is not None:
             valid = (self.planner.hitmap[p.miss_ids] == p.fill_slots) & (
                 ~self._landed[p.fill_slots]
             )
@@ -596,6 +624,253 @@ class ReadOnlyCacheServer(_ServingRuntimeBase):
 
     def flush_to_host(self) -> None:
         pass  # read-only by construction: host rows were never modified
+
+    # -- checkpoint/restart (crash-consistent, ANY cycle) ------------------ #
+    @staticmethod
+    def _capture_plan(p: PlanResult) -> dict:
+        out = {}
+        for f in _PLAN_FIELDS:
+            v = getattr(p, f)
+            if f in ("step", "n_unique", "n_hits"):
+                out[f] = int(v)
+            elif v is None:
+                out[f] = None
+            else:
+                out[f] = np.asarray(v)
+        return out
+
+    def state_arrays(self) -> dict:
+        """Crash-consistent host snapshot at ANY cycle — including mid-queue:
+        planner state + scratchpad + landed mask + every queued micro-batch
+        with its pipeline progress (plan, fetched rows, stage). Restoring
+        into a same-shape server and replaying the same enqueue/serve
+        sequence yields bit-identical bags (tests/test_recovery.py). Entry
+        tags ride the snapshot and must be picklable."""
+        out = {"host_table": self.host.data}
+        if isinstance(self.storage, sp.QuantStorage):
+            out["storage"] = np.asarray(self.storage.data)
+            out["storage_scale"] = np.asarray(self.storage.scale)
+        else:
+            out["storage"] = np.asarray(self.storage)
+        for k, v in self.planner.state_dict().items():
+            out[f"planner_{k}"] = v
+        out["landed"] = self._landed.copy()
+        out["serve_state"] = np.array([self._step], dtype=np.int64)
+        if self._queue:
+            out["queue"] = pack_blob([
+                {
+                    "ids": np.asarray(e.ids),
+                    "tag": e.tag,
+                    "plan": (
+                        None if e.plan is None else self._capture_plan(e.plan)
+                    ),
+                    "fetched": (
+                        None if e.fetched is None else np.asarray(e.fetched)
+                    ),
+                    "stage": int(e.stage),
+                }
+                for e in self._queue
+            ])
+        return out
+
+    def load_state_arrays(self, arrays: dict) -> None:
+        ht = np.asarray(arrays["host_table"])
+        if ht.shape != self.host.data.shape:
+            raise ValueError(
+                f"checkpoint host table {ht.shape} != {self.host.data.shape}"
+            )
+        self.host.data[...] = ht
+        self.host.reguard()
+        if "storage_scale" in arrays:
+            self.storage = sp.QuantStorage(
+                jax.device_put(np.asarray(arrays["storage"])),
+                jax.device_put(np.asarray(arrays["storage_scale"])),
+            )
+        else:
+            self.storage = jax.device_put(np.asarray(arrays["storage"]))
+        self.planner.load_state_dict(
+            {k[len("planner_"):]: v for k, v in arrays.items()
+             if k.startswith("planner_")}
+        )
+        self._landed = np.asarray(arrays["landed"]).astype(bool).copy()
+        self._step = int(np.asarray(arrays["serve_state"])[0])
+        self._queue.clear()
+        self._visible.clear()
+        if "queue" in arrays:
+            for d in unpack_blob(arrays["queue"]):
+                e = _ServeEntry(np.asarray(d["ids"]), d["tag"])
+                e.stage = int(d["stage"])
+                if d["plan"] is not None:
+                    e.plan = PlanResult(**d["plan"])
+                e.fetched = d["fetched"]
+                self._queue.append(e)
+                # visible window = planned entries in queue order; the same
+                # objects live in both deques so `_visible.remove(entry)`
+                # at serve keeps working by identity
+                if e.stage >= 1:
+                    self._visible.append(e)
+
+    # -- warm start from a TRAINING checkpoint ----------------------------- #
+    def _warm_cap(self, ids: np.ndarray) -> np.ndarray:
+        """Keep-mask limiting a preload candidate list (already ordered
+        hottest-first) to this server's per-table slot budgets."""
+        keep = np.zeros(ids.size, dtype=bool)
+        if self.table_group is None:
+            keep[: self.num_slots] = True
+            return keep
+        offsets = np.asarray(self.table_group.offsets, dtype=np.int64)
+        t_of = np.searchsorted(offsets[1:-1], ids, side="right")
+        for t, (lo, hi) in enumerate(self.planner.slot_ranges):
+            idx = np.flatnonzero(t_of == t)[: int(hi - lo)]
+            keep[idx] = True
+        return keep
+
+    def warm_start_from_arrays(
+        self, arrays: dict, *, load_host: bool = True
+    ) -> int:
+        """Preload the scratchpad from a TRAINING checkpoint's resident set
+        (``ScratchPipe``/``ShardedScratchPipe.state_arrays()``), so a fresh
+        serving replica starts at the trained runtime's hit rate instead of
+        cold. Rows are ordered by the trainer's recency (``last_use``) and
+        capped to this server's per-table budgets. With ``load_host`` the
+        trained host table is also loaded in place (shapes must match).
+        Warm start is a hit-rate optimization, not a parity contract — the
+        planner state is NOT the trainer's. Returns rows preloaded."""
+        if self._queue or self._visible or np.any(self._landed):
+            raise RuntimeError("warm_start_from_arrays on a non-empty server")
+        if load_host:
+            ht = _host_table_from_state(arrays)
+            if ht.shape != self.host.data.shape:
+                raise ValueError(
+                    f"checkpoint host table {ht.shape} != "
+                    f"{self.host.data.shape}"
+                )
+            self.host.data[...] = ht
+            self.host.reguard()
+        ids, rows, last_use = resident_set_from_state(arrays)
+        if ids.size == 0:
+            return 0
+        order = np.argsort(-last_use, kind="stable")  # most recent first
+        ids, rows = ids[order], rows[order]
+        keep = self._warm_cap(ids)
+        ids, rows = ids[keep], rows[keep]
+        if ids.size == 0:
+            return 0
+        # one plan over the empty cache assigns a free slot per id; the
+        # head doubles as its own look-ahead so nothing is evictable
+        plan = self.planner.plan(ids, [ids])
+        srt = np.argsort(ids, kind="stable")
+        assert np.array_equal(np.asarray(plan.miss_ids), ids[srt]), (
+            "warm start: planner miss order diverged from sorted preload ids"
+        )
+        if plan.fill_slots.size:
+            self._landed[plan.fill_slots] = False
+            self._fill_rows(np.asarray(plan.fill_slots), rows[srt])
+        return int(ids.size)
+
+
+def _host_table_from_state(arrays: dict) -> np.ndarray:
+    """The (possibly sharded) fp32 host table stored in a training
+    checkpoint's ``state_arrays()`` dict."""
+    if "host_table" in arrays:
+        return np.asarray(arrays["host_table"])
+    parts = []
+    i = 0
+    while f"shard{i}_host_table" in arrays:
+        parts.append(np.asarray(arrays[f"shard{i}_host_table"]))
+        i += 1
+    if not parts:
+        raise ValueError("no host table in checkpoint arrays")
+    return np.concatenate(parts, axis=0)
+
+
+def resident_set_from_state(arrays: dict):
+    """Extract the resident set — ``(global_ids, fp32 rows, last_use)`` —
+    from a training runtime's ``state_arrays()`` dict.
+
+    Handles all three checkpoint layouts:
+
+    * host planner: ``planner_slot_to_id`` already holds global row ids;
+    * device planner: per-table ``planner_t{t}_slot_to_id`` holds LOCAL
+      (table-relative) ids — per-table row counts come from the hitmap
+      lengths and slot offsets from the slot_to_id lengths (budgets);
+    * sharded: ``shard{i}_...`` sub-dicts recurse, with row offsets from
+      the per-shard host-table slices.
+
+    Rows are dequantized to fp32 from whatever replica precision the
+    scratchpad stored (fp32 / fp16 / int8+scale).
+    """
+    if "shard0_host_table" in arrays:
+        ids_all, rows_all, use_all = [], [], []
+        i = 0
+        row_off = 0
+        while f"shard{i}_host_table" in arrays:
+            prefix = f"shard{i}_"
+            sub = {
+                k[len(prefix):]: v
+                for k, v in arrays.items()
+                if k.startswith(prefix)
+            }
+            ids, rows, use = resident_set_from_state(sub)
+            ids_all.append(ids + row_off)
+            rows_all.append(rows)
+            use_all.append(use)
+            row_off += int(np.asarray(sub["host_table"]).shape[0])
+            i += 1
+        return (
+            np.concatenate(ids_all),
+            np.concatenate(rows_all, axis=0),
+            np.concatenate(use_all),
+        )
+
+    storage = np.asarray(arrays["storage"])
+    scale = (
+        np.asarray(arrays["storage_scale"])
+        if "storage_scale" in arrays
+        else None
+    )
+
+    def _rows_of(slots: np.ndarray) -> np.ndarray:
+        if scale is not None:
+            return qz.dequantize_rows_np(
+                (storage[slots], scale[slots]), "int8"
+            )
+        if storage.dtype == np.float16:
+            return qz.dequantize_rows_np(storage[slots], "fp16")
+        return np.asarray(storage[slots], dtype=np.float32)
+
+    if "planner_slot_to_id" in arrays:  # host-planner layout
+        s2i = np.asarray(arrays["planner_slot_to_id"]).ravel()
+        use = np.asarray(arrays["planner_last_use"]).ravel()
+        slots = np.flatnonzero(s2i >= 0)
+        return (
+            s2i[slots].astype(np.int64),
+            _rows_of(slots),
+            use[slots].astype(np.int64),
+        )
+
+    # device-planner layout: t{t}_* per table, local ids + consecutive slots
+    ids_all, rows_all, use_all = [], [], []
+    t = 0
+    slot_off = 0
+    row_off = 0
+    while f"planner_t{t}_slot_to_id" in arrays:
+        s2i = np.asarray(arrays[f"planner_t{t}_slot_to_id"]).ravel()
+        use = np.asarray(arrays[f"planner_t{t}_last_use"]).ravel()
+        local = np.flatnonzero(s2i >= 0)
+        ids_all.append(s2i[local].astype(np.int64) + row_off)
+        rows_all.append(_rows_of(local + slot_off))
+        use_all.append(use[local].astype(np.int64))
+        row_off += int(np.asarray(arrays[f"planner_t{t}_hitmap"]).shape[0])
+        slot_off += int(s2i.shape[0])
+        t += 1
+    if not ids_all:
+        raise ValueError("no planner state found in checkpoint arrays")
+    return (
+        np.concatenate(ids_all),
+        np.concatenate(rows_all, axis=0),
+        np.concatenate(use_all),
+    )
 
 
 def _require_no_train_fn(name: str, train_fn) -> None:

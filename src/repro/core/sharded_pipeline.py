@@ -50,6 +50,7 @@ class ShardedScratchPipe:
         precision: Union[str, Sequence[str], None] = None,
         tracer=None,
         metrics=None,
+        supervise=None,
     ):
         """``train_fn(storages, slots_per_shard, batch)`` ->
         (new_storages, aux). ``num_slots`` is the per-shard scratchpad size
@@ -131,6 +132,9 @@ class ShardedScratchPipe:
                     metrics=metrics,
                     # per-shard metric cells: same names, one label apart
                     obs_labels={"shard": str(i)},
+                    # each shard manager gets its own watchdog over its own
+                    # worker/d2h pools (repro.runtime.supervision)
+                    supervise=supervise,
                 )
             )
 
@@ -248,9 +252,50 @@ class ShardedScratchPipe:
                 st_last = st
         return st_last
 
+    def drain_one_cycle(self) -> Optional[StepStats]:
+        """Advance every shard one cycle without a new batch (lockstep
+        drain). Returns the last shard's completed StepStats, if any."""
+        st_last: Optional[StepStats] = None
+        for i, pipe in enumerate(self.pipes):
+            if pipe._window:
+                st = pipe.drain_one_cycle()
+                if i == self.num_shards - 1:
+                    st_last = st
+        return st_last
+
     def flush_to_host(self):
         for pipe in self.pipes:
             pipe.flush_to_host()
+
+    # -- checkpoint/restart (crash-consistent, ANY lockstep boundary) ------ #
+    def state_arrays(self) -> dict:
+        """Per-shard delegation with shard-indexed keys (``shard<i>_<key>``).
+        Must be called between lockstep cycles (every shard has fired or
+        none has) — the aggregated [Train] input dict is then empty, which
+        is asserted. Each shard's snapshot contains its own host-table
+        SLICE, planner state, scratchpad, and hold window, so a restored
+        N-shard run is bit-identical to the uninterrupted one."""
+        assert not self._pending, "checkpoint only between lockstep cycles"
+        out: dict = {}
+        for i, pipe in enumerate(self.pipes):
+            for k, v in pipe.state_arrays().items():
+                out[f"shard{i}_{k}"] = v
+        return out
+
+    def load_state_arrays(self, arrays: dict) -> None:
+        """Split shard-indexed keys and delegate. Shard host tables load
+        IN PLACE, so the shared global backing array stays consistent."""
+        self._pending = {}
+        for i, pipe in enumerate(self.pipes):
+            prefix = f"shard{i}_"
+            sub = {
+                k[len(prefix):]: v
+                for k, v in arrays.items()
+                if k.startswith(prefix)
+            }
+            if not sub:
+                raise KeyError(f"checkpoint has no arrays for shard {i}")
+            pipe.load_state_arrays(sub)
 
     @property
     def stats(self) -> List[StepStats]:

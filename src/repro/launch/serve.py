@@ -128,6 +128,28 @@ def _serve_embedding(args) -> None:
         )
     backend = make_runtime(args.design, host, None, **kwargs)
 
+    if args.warm_start:
+        if args.design != "scratchpipe-serve":
+            raise SystemExit(
+                "--warm-start preloads the plan-ahead scratchpad; it "
+                "requires --design scratchpipe-serve"
+            )
+        from repro.checkpoint import CheckpointManager
+
+        ckpt = CheckpointManager(args.warm_start)
+        if ckpt.latest_step() is None:
+            raise SystemExit(
+                f"--warm-start: no checkpoints under {args.warm_start} "
+                "(train with --supervise/--ckpt-every to produce them)"
+            )
+        man = ckpt.manifest()
+        arrays = {name: ckpt.restore_host(name) for name in man["host"]}
+        n = backend.warm_start_from_arrays(arrays)
+        print(
+            f"warm start: {n} rows preloaded from {args.warm_start} "
+            f"(training step {man['step']})"
+        )
+
     print(f"serving {src} through {args.design} at queue depth {args.depth}")
     res = replay_serving(backend, batches, depth=args.depth)
     lat = res["latency"]
@@ -169,6 +191,13 @@ def main():
     emb.add_argument("--lookups", type=int, default=8)
     emb.add_argument("--cache-frac", type=float, default=0.25)
     emb.add_argument("--kernel", default="xla", choices=("xla", "pallas"))
+    emb.add_argument(
+        "--warm-start",
+        default=None,
+        help="training checkpoint dir (CheckpointManager layout): preload "
+        "the serving scratchpad with the trained runtime's resident set "
+        "and host table, so the replica starts warm instead of cold",
+    )
     ap.add_argument(
         "--metrics-out",
         default=None,

@@ -100,6 +100,87 @@ def train_lm(args):
         )
 
 
+def _state_digest(pipe, trainer, stats) -> str:
+    """SHA-256 over the final host tables, dense params, and the loss
+    trajectory — one line two runs can diff to prove bit-parity (the CI
+    chaos-smoke job compares an injected run against a clean twin)."""
+    import hashlib
+
+    h = hashlib.sha256()
+    pipes = getattr(pipe, "pipes", None)
+    hosts = [p.host for p in pipes] if pipes else [pipe.host]
+    for host in hosts:
+        h.update(np.ascontiguousarray(host.data).tobytes())
+    if trainer is not None:
+        for leaf in jax.tree_util.tree_leaves(trainer.mlps):
+            h.update(np.asarray(leaf).tobytes())
+    for s in stats:
+        loss = s.aux.get("loss") if isinstance(s.aux, dict) else s.aux
+        if loss is not None:
+            h.update(np.float64(loss).tobytes())
+    return h.hexdigest()
+
+
+def _train_dlrm_supervised(args, build, batches, reader):
+    """Run DLRM training under EmbeddingTrainSupervisor: periodic
+    crash-consistent checkpoints, restore+fast-forward on faults, and
+    (with --chaos) deterministic fault injection on the FIRST runtime
+    incarnation only — the rebuilt runtime after a restart is clean, like
+    a replaced node."""
+    from repro.checkpoint import CheckpointManager
+    from repro.data.lookahead import LookaheadStream
+    from repro.runtime import EmbeddingTrainSupervisor
+
+    plan = None
+    injectors = []
+    if args.chaos:
+        from repro.chaos import ChaosInjector, ChaosPlan
+
+        plan = ChaosPlan.parse(args.chaos)
+        print(f"chaos plan: {plan.spec} (seed {args.chaos_seed})")
+    first = [True]
+
+    def runtime_factory():
+        _host, trainer, pipe = build(supervised=True)
+        if plan is not None and first[0]:
+            first[0] = False
+            injectors.append(
+                ChaosInjector(plan, seed=args.chaos_seed).attach(pipe)
+            )
+        return pipe, trainer
+
+    def stream_factory(skip):
+        if reader is not None:
+            from repro.traces import TraceReplayStream
+
+            return TraceReplayStream(reader, start=skip, stop=args.steps)
+        it = iter(batches(args.steps))
+        for _ in range(skip):
+            next(it)
+        return LookaheadStream(it)
+
+    ckpt = CheckpointManager(args.ckpt_dir, keep=2)
+    sup = EmbeddingTrainSupervisor(
+        ckpt,
+        runtime_factory,
+        stream_factory,
+        ckpt_every=args.ckpt_every,
+        verify_every=args.verify_every,
+    )
+    t0 = time.time()
+    stats, report = sup.run(args.steps)
+    dt = time.time() - t0
+    fired = [e.spec for inj in injectors for e in inj.fired]
+    print(
+        f"supervised: restarts={report.restarts} "
+        f"checkpoints={report.checkpoints} "
+        f"nan_skipped={report.nan_steps_skipped} "
+        f"restore_ms={[round(m, 1) for m in report.restore_ms]} "
+        f"chaos_fired={fired}"
+    )
+    return sup.runtime, sup.trainer, stats, report, dt
+
+
 def train_dlrm(args):
     import dataclasses
     import itertools
@@ -188,10 +269,6 @@ def train_dlrm(args):
         )
     rows = group.total_rows
     slots = max(2048, int(rows * cfg.cache_fraction))
-    host = HostEmbeddingTable(rows, cfg.embed_dim, seed=args.seed)
-    trainer = DLRMTrainer(
-        cfg, jax.random.key(args.seed), lr=args.lr, kernel=args.kernel
-    )
 
     def batches(steps):
         if reader is not None:
@@ -259,8 +336,6 @@ def train_dlrm(args):
                 profile_batches=min(args.steps, 512),
             )
             print(f"adaptive pad buckets: {kw['pad_buckets']}")
-    if args.runtime in ("scratchpipe", "strawman") and args.fused:
-        kw["fused_train_fn"] = trainer.fused_train_fn
     if args.runtime == "static":
         if reader is not None:
             hot = hot_ids_from_trace(
@@ -287,20 +362,48 @@ def train_dlrm(args):
                 "the nocache baseline holds no rows to quantize"
             )
         kw = {}
-    pipe = make_runtime(args.runtime, host, trainer.train_fn, **kw)
-    src = batches(args.steps)
-    if args.record_trace:
-        prov = {
-            "generator": args.scenario or "synthetic",
-            "locality": args.locality,
-            "seed": args.seed,
-        }
-        src = TraceRecorder(args.record_trace, group, provenance=prov).tee(src)
-    # a replay stream already is a look-ahead source
-    stream = src if hasattr(src, "peek_ids") else LookaheadStream(src)
-    t0 = time.time()
-    stats = pipe.run(stream, lookahead_fn=stream.peek_ids)
-    dt = time.time() - t0
+    def build(supervised: bool = False):
+        """One full runtime stack — host table, trainer, cache runtime —
+        rebuilt from scratch per (re)start: restart-from-checkpoint models
+        a clean process image, so nothing survives a restart but the
+        checkpoint and the deterministic stream position."""
+        host = HostEmbeddingTable(rows, cfg.embed_dim, seed=args.seed)
+        trainer = DLRMTrainer(
+            cfg, jax.random.key(args.seed), lr=args.lr, kernel=args.kernel
+        )
+        kw2 = dict(kw)
+        if args.runtime in ("scratchpipe", "strawman") and args.fused:
+            kw2["fused_train_fn"] = trainer.fused_train_fn
+        if supervised and args.runtime in ("scratchpipe", "strawman"):
+            from repro.runtime import SupervisePolicy
+
+            kw2["supervise"] = SupervisePolicy()
+        pipe = make_runtime(args.runtime, host, trainer.train_fn, **kw2)
+        return host, trainer, pipe
+
+    if args.chaos:
+        args.supervise = True
+    if args.supervise:
+        pipe, trainer, stats, report, dt = _train_dlrm_supervised(
+            args, build, batches, reader
+        )
+    else:
+        host, trainer, pipe = build()
+        src = batches(args.steps)
+        if args.record_trace:
+            prov = {
+                "generator": args.scenario or "synthetic",
+                "locality": args.locality,
+                "seed": args.seed,
+            }
+            src = TraceRecorder(
+                args.record_trace, group, provenance=prov
+            ).tee(src)
+        # a replay stream already is a look-ahead source
+        stream = src if hasattr(src, "peek_ids") else LookaheadStream(src)
+        t0 = time.time()
+        stats = pipe.run(stream, lookahead_fn=stream.peek_ids)
+        dt = time.time() - t0
     losses = [float(s.aux["loss"]) for s in stats if s.aux]
     hit = float(np.mean([s.hit_rate for s in stats[6:]])) if len(stats) > 6 else 0
     source = (
@@ -321,6 +424,10 @@ def train_dlrm(args):
         f"done: steps={len(stats)} loss {losses[0]:.4f}->{losses[-1]:.4f} "
         f"plan_hit={hit:.3f} {dt / max(len(stats), 1) * 1e3:.1f}ms/step"
     )
+    if args.supervise:
+        # settle every cached row so the digest covers the full model state
+        pipe.flush_to_host()
+        print(f"state_digest={_state_digest(pipe, trainer, stats)}")
     tr = pipe.traffic()
     print(
         f"traffic: host {tr['host'].total / 1e6:.1f}MB "
@@ -421,6 +528,35 @@ def main():
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument(
+        "--supervise",
+        action="store_true",
+        help="run DLRM training under EmbeddingTrainSupervisor: periodic "
+        "crash-consistent checkpoints (any cycle, mid-window), "
+        "restore+fast-forward on faults, watchdogged overlapped executor; "
+        "prints a state_digest= line for bit-parity diffs",
+    )
+    ap.add_argument(
+        "--chaos",
+        default=None,
+        help="fault-injection spec armed on the first runtime incarnation "
+        "(implies --supervise), e.g. "
+        "'kill-gather@3;stall-d2h@12:0.2;corrupt-row@13:5;nan-loss@9' "
+        "(see repro.chaos)",
+    )
+    ap.add_argument(
+        "--chaos-seed",
+        type=int,
+        default=0,
+        help="RNG seed for chaos victim selection (corrupt-row targets)",
+    )
+    ap.add_argument(
+        "--verify-every",
+        type=int,
+        default=0,
+        help="audit host-table row checksums every N cycles (0 = off; "
+        "corruption triggers checkpoint restore)",
+    )
+    ap.add_argument(
         "--metrics-out",
         default=None,
         help="write an obs_metrics/v1 JSONL snapshot here at exit "
@@ -446,6 +582,13 @@ def main():
     if args.adaptive_pad and not args.trace:
         ap.error("--adaptive-pad derives buckets from a recorded trace; "
                  "pass --trace")
+    if (args.supervise or args.chaos) and args.record_trace:
+        ap.error("--record-trace cannot ride a supervised run: a restart "
+                 "would re-record already-captured batches")
+    if (args.supervise or args.chaos) and args.runtime not in (
+        "scratchpipe", "strawman"
+    ):
+        ap.error("--supervise/--chaos cover the scratchpipe-family runtimes")
     tracer, metrics = obs_setup(
         args.trace_out, args.metrics_out, jax_annotations=args.jax_annotations
     )

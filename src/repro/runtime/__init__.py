@@ -1,10 +1,19 @@
 from repro.runtime.fault_tolerance import (  # noqa: F401
+    EmbeddingTrainSupervisor,
     FailureInjector,
     PreemptionHandler,
+    SupervisorReport,
     TrainSupervisor,
 )
 from repro.runtime.straggler import (  # noqa: F401
     StepTimeMonitor,
     StragglerPolicy,
     plan_rebalance,
+)
+from repro.runtime.supervision import (  # noqa: F401
+    OpSupervisor,
+    OpTimeoutError,
+    SupervisePolicy,
+    SupervisedOp,
+    TransientOpError,
 )

@@ -1,0 +1,349 @@
+"""Fault-injection harness (repro.chaos) exercising the recovery stack.
+
+Every drill asserts the same invariant from two sides: the fault actually
+fired (counters / report), AND the run's observable output — losses, cache
+decisions, final host table — is bit-identical to a run that never saw the
+fault. Recovery that changes the model is not recovery.
+
+  * worker kills / transient op failures -> ordered inline recompute
+    (repro.runtime.supervision) under the overlapped executor.
+  * repeated faults -> graceful degradation to the sync executor.
+  * stalls -> per-op timeout -> inline recompute.
+  * host-row byte flips (through the raw buffer, invisible to the write
+    API) -> checksum guard -> RowCorruptionError -> supervisor rebuild +
+    checkpoint restore + fast-forward.
+  * NaN losses -> quarantine via restore (the poisoned step is excised).
+  * serving fetch faults -> bounded retry, then the emergency failsafe
+    path — served bags unchanged either way.
+"""
+import numpy as np
+import pytest
+
+from repro.chaos import (
+    ChaosError,
+    ChaosInjector,
+    ChaosPlan,
+    InjectedWorkerDeath,
+)
+from repro.checkpoint import CheckpointManager
+from repro.core.host_table import HostEmbeddingTable, RowCorruptionError
+from repro.core.pipeline import ScratchPipe
+from repro.core.serving_cache import ReadOnlyCacheServer
+from repro.data.lookahead import LookaheadStream
+from repro.runtime import EmbeddingTrainSupervisor, SupervisePolicy
+
+ROWS, DIM, SLOTS, STEPS = 256, 8, 64, 14
+SEED = 7
+
+
+def _batches(steps=STEPS, seed=SEED):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, ROWS, size=(2, 1, 4)) for _ in range(steps)]
+
+
+def _train_fn(storage, slots, batch):
+    import jax.numpy as jnp
+
+    u = jnp.unique(jnp.asarray(slots).ravel(), size=slots.size, fill_value=-1)
+    ok = u >= 0
+    add = jnp.zeros_like(storage).at[jnp.where(ok, u, 0)].add(
+        jnp.where(ok, 1.0, 0.0)[:, None]
+    )
+    storage = storage + add
+    return storage, {"loss": float(jnp.abs(storage).sum())}
+
+
+def _pipe(executor="overlapped", policy=None):
+    host = HostEmbeddingTable(ROWS, DIM, seed=1)
+    kw = {}
+    if executor == "overlapped":
+        kw["supervise"] = policy or SupervisePolicy(backoff=0.0)
+    return host, ScratchPipe(host, SLOTS, _train_fn, executor=executor, **kw)
+
+
+def _run(pipe, batches):
+    stream = LookaheadStream(iter([(b, {}) for b in batches]))
+    stats = pipe.run(stream, lookahead_fn=stream.peek_ids)
+    pipe.flush_to_host()
+    return stats
+
+
+def _losses(stats):
+    return [float(s.aux["loss"]) for s in stats]
+
+
+@pytest.fixture(scope="module")
+def reference():
+    """Uninjected sync run: the bit-parity oracle for every drill."""
+    host, pipe = _pipe(executor="sync")
+    stats = _run(pipe, _batches())
+    return _losses(stats), host.data.copy()
+
+
+# --------------------------------------------------------------------------- #
+# the plan language
+# --------------------------------------------------------------------------- #
+def test_plan_parse_roundtrip():
+    spec = "kill-gather@3;stall-d2h@12:0.2;corrupt-row@13:5;nan-loss@9"
+    plan = ChaosPlan.parse(spec)
+    assert plan.spec == spec
+    assert [e.action for e in plan.events] == ["kill", "stall", "corrupt", "nan"]
+    assert plan.events[1].arg == 0.2 and plan.events[2].arg == 5.0
+
+
+@pytest.mark.parametrize(
+    "bad",
+    [
+        "explode-gather@3",  # unknown action
+        "kill-nowhere@3",  # unknown point
+        "corrupt-gather@3",  # corrupt must target 'row'
+        "nan-gather@3",  # nan must target 'loss'
+        "kill-gather",  # no @cycle
+    ],
+)
+def test_plan_rejects_bad_specs(bad):
+    with pytest.raises(ValueError):
+        ChaosPlan.parse(bad)
+
+
+def test_plan_random_is_deterministic():
+    a, b = ChaosPlan.random(5), ChaosPlan.random(5)
+    assert a.spec == b.spec and len(a.events) == 3
+    assert ChaosPlan.random(6).spec != a.spec
+    for e in a.events:
+        assert e.action in ("kill", "fail", "stall")
+
+
+# --------------------------------------------------------------------------- #
+# inline recovery under the supervised overlapped executor
+# --------------------------------------------------------------------------- #
+def test_worker_kill_recovered_inline_bit_parity(reference):
+    """Killed gather/writeback/d2h workers are recomputed inline in
+    submission order: losses and the final host table match the sync
+    uninjected oracle exactly."""
+    ref_losses, ref_host = reference
+    host, pipe = _pipe()
+    inj = ChaosInjector(
+        ChaosPlan.parse("kill-gather@3;fail-writeback@5;kill-d2h@4"), seed=0
+    ).attach(pipe)
+    stats = _run(pipe, _batches())
+    pipe.close()
+    assert len(inj.fired) == 3
+    assert pipe._sv.failures >= 3 and pipe._sv.retries >= 3
+    assert not pipe._sv.degraded and pipe.executor == "overlapped"
+    assert _losses(stats) == ref_losses
+    np.testing.assert_array_equal(host.data, ref_host)
+
+
+def test_repeated_faults_degrade_to_sync(reference):
+    """Past degrade_after incidents the pipe abandons its pools and runs
+    sync for the rest of the run — same output, overlap sacrificed."""
+    ref_losses, ref_host = reference
+    host, pipe = _pipe(policy=SupervisePolicy(backoff=0.0, degrade_after=2))
+    # two kills in clearly separate cycles: a burst within one ordered
+    # replay counts as ONE incident, so spacing matters here
+    inj = ChaosInjector(
+        ChaosPlan.parse("kill-gather@2;kill-gather@10"), seed=0
+    ).attach(pipe)
+    stats = _run(pipe, _batches())
+    pipe.close()
+    assert pipe._sv.incidents >= 2
+    assert pipe._sv.degraded
+    assert pipe.executor == "sync"
+    assert pipe._host_pool is None and pipe._d2h_pool is None
+    assert len(inj.fired) == 2
+    assert _losses(stats) == ref_losses
+    np.testing.assert_array_equal(host.data, ref_host)
+
+
+def test_stall_trips_op_timeout_and_recovers(reference):
+    ref_losses, ref_host = reference
+    host, pipe = _pipe(
+        policy=SupervisePolicy(op_timeout=0.05, backoff=0.0)
+    )
+    ChaosInjector(ChaosPlan.parse("stall-gather@3:0.5"), seed=0).attach(pipe)
+    stats = _run(pipe, _batches())
+    pipe.close()
+    assert pipe._sv.timeouts >= 1
+    assert _losses(stats) == ref_losses
+    np.testing.assert_array_equal(host.data, ref_host)
+
+
+# --------------------------------------------------------------------------- #
+# corruption + NaN: supervisor restore drills
+# --------------------------------------------------------------------------- #
+def _supervised_run(tmp_path, spec, *, verify_every=0, nan_policy="restore"):
+    batches = _batches()
+    first = [True]
+    injectors = []
+
+    def runtime_factory():
+        host, pipe = _pipe()
+        if first[0] and spec:
+            first[0] = False
+            injectors.append(
+                ChaosInjector(ChaosPlan.parse(spec), seed=3).attach(pipe)
+            )
+        return pipe, None
+
+    def stream_factory(skip):
+        return LookaheadStream(iter([(b, {}) for b in batches[skip:]]))
+
+    sup = EmbeddingTrainSupervisor(
+        CheckpointManager(str(tmp_path), durable=False),
+        runtime_factory,
+        stream_factory,
+        ckpt_every=4,
+        verify_every=verify_every,
+        nan_policy=nan_policy,
+        blocking_saves=True,
+    )
+    stats, report = sup.run(STEPS)
+    sup.runtime.flush_to_host()
+    host_data = sup.runtime.host.data.copy()
+    sup.runtime.close()
+    return stats, report, host_data, injectors
+
+
+def test_row_corruption_detected_and_recovered(tmp_path, reference):
+    """Bytes flipped through the raw host buffer are caught by the checksum
+    guard; the supervisor rebuilds, restores the last checkpoint, and
+    fast-forwards to a bit-identical final state."""
+    ref_losses, ref_host = reference
+    stats, report, host_data, injectors = _supervised_run(
+        tmp_path, "corrupt-row@6:4", verify_every=1
+    )
+    assert injectors[0].corrupted, "no rows were flipped"
+    assert report.restarts >= 1
+    assert report.checkpoints >= 1 and report.restore_ms
+    assert _losses(stats) == ref_losses
+    np.testing.assert_array_equal(host_data, ref_host)
+
+
+def test_corruption_without_guard_raises_on_verify():
+    host = HostEmbeddingTable(ROWS, DIM, seed=1)
+    host.enable_guard()
+    raw = host.data.view(np.uint8).reshape(-1)
+    raw[DIM * 4 * 1 + 1] ^= 0xFF  # one byte of row 1, behind the API's back
+    with pytest.raises(RowCorruptionError) as ei:
+        host.verify()
+    assert 1 in ei.value.rows
+
+
+def test_nan_loss_quarantined_by_restore(tmp_path, reference):
+    """nan-loss fires AFTER the embedding update lands — only a checkpoint
+    restore can excise it, and does, to bit-parity."""
+    ref_losses, ref_host = reference
+    stats, report, host_data, injectors = _supervised_run(
+        tmp_path, "nan-loss@6"
+    )
+    assert [e.spec for e in injectors[0].fired] == ["nan-loss@6"]
+    assert report.nan_steps_skipped >= 1 and report.restarts >= 1
+    assert _losses(stats) == ref_losses
+    assert all(np.isfinite(_losses(stats)))
+    np.testing.assert_array_equal(host_data, ref_host)
+
+
+def test_supervised_uninjected_matches_plain_run(tmp_path, reference):
+    """The supervisor itself is invisible: a fault-free supervised run (with
+    periodic checkpoints) equals the plain sync run bit-for-bit."""
+    ref_losses, ref_host = reference
+    stats, report, host_data, _ = _supervised_run(tmp_path, "")
+    assert report.restarts == 0 and report.checkpoints >= 2
+    assert _losses(stats) == ref_losses
+    np.testing.assert_array_equal(host_data, ref_host)
+
+
+# --------------------------------------------------------------------------- #
+# serving: fetch faults ride the retry + failsafe path
+# --------------------------------------------------------------------------- #
+def _serve_all(server, reqs):
+    bags = []
+    for r in reqs:
+        server.enqueue(r)
+        if server.pending > server.queue_depth:
+            bags.append(server.serve_next()[0])
+    while server.pending:
+        bags.append(server.serve_next()[0])
+    return bags
+
+
+def _mk_server(**kw):
+    from repro.obs import MetricsRegistry
+
+    return ReadOnlyCacheServer(
+        HostEmbeddingTable(ROWS, DIM, seed=1),
+        SLOTS,
+        window=2,
+        metrics=MetricsRegistry(),
+        **kw,
+    )
+
+
+def _counter(server, name):
+    return server._mc[name].value
+
+
+def test_serving_fetch_kill_retried(reference):
+    """One killed prefetch with fetch_retries=1: the retry lands the rows,
+    no failsafe, bags bit-equal to the uninjected server."""
+    rng = np.random.default_rng(0)
+    reqs = [rng.integers(0, ROWS, size=(2, 1, 4)) for _ in range(10)]
+    ref = _serve_all(_mk_server(), reqs)
+
+    srv = _mk_server(fetch_retries=1)
+    inj = ChaosInjector(ChaosPlan.parse("kill-fetch@2"), seed=0)
+    inj.attach_server(srv)
+    got = _serve_all(srv, reqs)
+    assert len(inj.fired) == 1
+    assert _counter(srv, "fetch_failures") == 1
+    assert _counter(srv, "failsafe") == 0
+    for x, y in zip(ref, got):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_serving_fetch_exhaustion_falls_back_to_failsafe(reference):
+    """Retries exhausted -> the batch is served through the emergency
+    host-gather path instead: slower, never wrong."""
+    rng = np.random.default_rng(0)
+    reqs = [rng.integers(0, ROWS, size=(2, 1, 4)) for _ in range(10)]
+    ref = _serve_all(_mk_server(), reqs)
+
+    srv = _mk_server(fetch_retries=0)
+    inj = ChaosInjector(ChaosPlan.parse("fail-fetch@2;fail-fetch@4"), seed=0)
+    inj.attach_server(srv)
+    got = _serve_all(srv, reqs)
+    assert len(inj.fired) == 2
+    assert _counter(srv, "fetch_failures") == 2
+    assert _counter(srv, "failsafe") == 2
+    for x, y in zip(ref, got):
+        np.testing.assert_array_equal(x, y)
+    # the failsafe bags equal the ground-truth host reduction too
+    host = HostEmbeddingTable(ROWS, DIM, seed=1)
+    flat_reqs = reqs
+    oracle = [
+        host.data[r.ravel()].reshape(r.shape + (DIM,)).sum(axis=2)
+        for r in flat_reqs
+    ]
+    for x, y in zip(got, oracle):
+        np.testing.assert_allclose(x, y, rtol=1e-5, atol=1e-5)
+
+
+def test_injected_faults_raise_without_supervision():
+    """Chaos errors are real errors: an UNsupervised pipe surfaces them
+    instead of silently absorbing faults (no false sense of safety)."""
+    host, pipe = _pipe(executor="sync")
+    ChaosInjector(ChaosPlan.parse("kill-gather@2"), seed=0).attach(pipe)
+    batches = _batches(4)
+    with pytest.raises(InjectedWorkerDeath):
+        for b in batches:
+            pipe.run_one_cycle(b, {})
+        while pipe._window:
+            pipe.drain_one_cycle()
+
+
+def test_chaos_error_is_transient_op_error():
+    from repro.runtime.supervision import TransientOpError
+
+    assert issubclass(ChaosError, TransientOpError)
+    assert issubclass(InjectedWorkerDeath, ChaosError)
